@@ -1,0 +1,117 @@
+"""Paper claim (§2.1, §5, footnote 1): OO/tape AD pays per-call tracing
+overhead — pathological for scalar/small-tensor workloads — while ST
+compiles the adjoint once and matches compiled frameworks.
+
+Workloads:
+  * scalar-heavy: an unrolled 40-step scalar recurrence (the pytorch
+    issue #2518 pathology from the paper's footnote),
+  * small-matrix MLP loss,
+  * medium-matrix MLP loss (tracing amortizes — OO catches up).
+
+Systems: OO tape interpreter (repro.core.oo_tape), Myia ST pipeline
+(parse → closure-based AD → optimize → XLA), and raw jax.grad (the
+"compiled framework" reference — itself the ST/closure lineage)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api as myia
+from repro.core import oo_tape as oo
+
+
+def timeit(fn, *args, reps=30, warmup=3) -> float:
+    for _ in range(warmup):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps * 1e6  # µs/call
+
+
+# -- workloads (written once, consumed by all three systems) ----------------
+
+
+def scalar_chain(x, y):
+    z = x
+    z = z * y + x
+    z = z * z + y
+    z = z * y + x
+    z = z * z + y
+    z = z * y + x
+    z = z * z + y
+    z = z * y + x
+    z = z * z + y
+    z = z * y + x
+    z = z * z + y
+    return z
+
+
+def make_mlp(size):
+    def mlp_loss_oo(w1, w2, x):
+        h = oo.tanh(x @ w1)
+        return oo.reduce_sum(oo.tanh(h @ w2))
+
+    def mlp_loss(w1, w2, x):
+        h = _tanh(x @ w1)
+        return _sum(_tanh(h @ w2), (0, 1), False)
+
+    return mlp_loss_oo, mlp_loss
+
+
+def run() -> list[dict]:
+    global _tanh, _sum
+    import repro.core.primitives as P
+
+    results = []
+
+    # scalar workload
+    _tanh, _sum = P.tanh, P.reduce_sum
+    oo_fn = oo.oo_grad(scalar_chain, wrt=(0, 1))
+    st_fn = myia.grad(scalar_chain, wrt=(0, 1))
+    jx_fn = jax.jit(jax.grad(scalar_chain, argnums=(0, 1)))
+    a, b = 0.3, 0.7
+    st_fn(a, b), jx_fn(a, b)  # compile outside timer
+    results.append(
+        {
+            "workload": "scalar_chain(40 ops)",
+            "oo_us": timeit(oo_fn, a, b),
+            "st_myia_us": timeit(st_fn, a, b),
+            "jax_grad_us": timeit(jx_fn, a, b),
+        }
+    )
+
+    for size in (8, 256):
+        oo_w, st_w = make_mlp(size)
+        k = jax.random.PRNGKey(0)
+        w1 = jax.random.normal(k, (size, size))
+        w2 = jax.random.normal(k, (size, size))
+        x = jax.random.normal(k, (4, size))
+        oo_fn = oo.oo_grad(oo_w, wrt=(0, 1))
+        st_fn = myia.grad(st_w, wrt=(0, 1))
+        jx_fn = jax.jit(
+            jax.grad(lambda a_, b_, c_: jnp.sum(jnp.tanh(jnp.tanh(c_ @ a_) @ b_)), argnums=(0, 1))
+        )
+        st_fn(w1, w2, x), jx_fn(w1, w2, x)
+        results.append(
+            {
+                "workload": f"mlp_{size}x{size}",
+                "oo_us": timeit(oo_fn, w1, w2, x),
+                "st_myia_us": timeit(st_fn, w1, w2, x),
+                "jax_grad_us": timeit(jx_fn, w1, w2, x),
+            }
+        )
+    for r in results:
+        r["oo_over_st"] = r["oo_us"] / r["st_myia_us"]
+        r["st_over_jax"] = r["st_myia_us"] / r["jax_grad_us"]
+    return results
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

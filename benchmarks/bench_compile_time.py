@@ -1,0 +1,59 @@
+"""Paper §4.2 claim: call-site specialization — each new input signature
+triggers type-inference + optimization + compilation once; repeat calls
+hit the specialization cache.
+
+Measures: first-call (specialize+compile) latency per signature, cached-
+call latency, and specialization-cache isolation across signatures."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api as myia
+
+
+def run() -> list[dict]:
+    import repro.core.primitives as P
+
+    global _tanh
+    _tanh = P.tanh
+
+    def model(w, x):
+        h = _tanh(x @ w)
+        return h @ w
+
+    rows = []
+    for shape in [(8, 8), (64, 64), (256, 256)]:
+        fn = myia.myia(model)
+        w = jnp.ones(shape)
+        x = jnp.ones((4, shape[0]))
+        t0 = time.perf_counter()
+        fn(w, x)
+        first = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for _ in range(50):
+            r = fn(w, x)
+        jax.block_until_ready(r)
+        cached = (time.perf_counter() - t0) / 50
+        rows.append(
+            {
+                "signature": f"f32{list(shape)}",
+                "first_call_ms": round(first * 1e3, 2),
+                "cached_call_us": round(cached * 1e6, 1),
+                "specializations": len(fn._specializations),
+            }
+        )
+    # polymorphic reuse: one function, two signatures → two specializations
+    fn = myia.myia(model)
+    fn(jnp.ones((8, 8)), jnp.ones((4, 8)))
+    fn(jnp.ones((16, 16)), jnp.ones((4, 16)))
+    rows.append({"signature": "polymorphic(2 shapes)", "specializations": len(fn._specializations)})
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -1,0 +1,102 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp reference on CPU.
+
+On this container the Pallas interpreter executes the kernel body in
+Python, so wall-times are NOT indicative of TPU performance — the TPU
+story is the roofline analysis.  What this bench DOES verify and report:
+numerical agreement at benchmark shapes and the arithmetic-intensity
+(FLOPs/byte) of each kernel, which determines which roofline regime it
+lands in on a v5e (ridge point ≈ 240 FLOPs/byte)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import flash_attention, ref, rmsnorm, ssd_scan
+
+
+def _time(fn, *args, reps=3):
+    r = fn(*args)
+    jax.block_until_ready(r)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> list[dict]:
+    rows = []
+    k = jax.random.PRNGKey(0)
+
+    # flash attention: B=1 H=4 S=512 D=64
+    B, H, S, D = 1, 4, 512, 64
+    q = jax.random.normal(k, (B, H, S, D), jnp.float32)
+    kk = jax.random.normal(k, (B, H // 2, S, D), jnp.float32)
+    v = jax.random.normal(k, (B, H // 2, S, D), jnp.float32)
+    o_ref = ref.flash_attention_ref(q, kk, v, causal=True)
+    o_pal = flash_attention(q, kk, v, causal=True, impl="pallas_interpret")
+    err = float(jnp.max(jnp.abs(o_ref - o_pal)))
+    flops = 4 * B * H * S * S / 2 * D
+    bytes_ = (q.size + 2 * kk.size + o_ref.size) * 4
+    rows.append(
+        {
+            "kernel": "flash_attention",
+            "shape": f"B{B} H{H} S{S} D{D} GQA2 causal",
+            "max_err_vs_ref": err,
+            "flops_per_byte": round(flops / bytes_, 1),
+            "regime_v5e": "compute-bound" if flops / bytes_ > 240 else "memory-bound",
+            "ref_ms_cpu": round(_time(lambda: ref.flash_attention_ref(q, kk, v, causal=True)) * 1e3, 2),
+        }
+    )
+
+    # rmsnorm: 4096×1024
+    x = jax.random.normal(k, (4096, 1024), jnp.float32)
+    w = jnp.ones((1024,))
+    err = float(jnp.max(jnp.abs(ref.rmsnorm_ref(x, w) - rmsnorm(x, w, impl="pallas_interpret"))))
+    flops = 4 * x.size
+    bytes_ = 2 * x.size * 4
+    rows.append(
+        {
+            "kernel": "rmsnorm",
+            "shape": "4096x1024",
+            "max_err_vs_ref": err,
+            "flops_per_byte": round(flops / bytes_, 2),
+            "regime_v5e": "memory-bound (fusion target)",
+            "ref_ms_cpu": round(_time(lambda: ref.rmsnorm_ref(x, w)) * 1e3, 2),
+        }
+    )
+
+    # ssd scan: B=1 S=256 H=4 P=16 N=32
+    Bt, S2, H2, P2, G2, N2 = 1, 256, 4, 16, 1, 32
+    ks = jax.random.split(k, 5)
+    xs = jax.random.normal(ks[0], (Bt, S2, H2, P2))
+    dt = 0.1 * jax.random.uniform(ks[1], (Bt, S2, H2)) + 0.01
+    A = -jnp.ones((H2,))
+    Bm = jax.random.normal(ks[3], (Bt, S2, G2, N2))
+    Cm = jax.random.normal(ks[4], (Bt, S2, G2, N2))
+    y_ref, _ = ref.ssd_scan_ref(xs, dt, A, Bm, Cm)
+    y_pal = ssd_scan(xs, dt, A, Bm, Cm, impl="pallas_interpret")
+    err = float(jnp.max(jnp.abs(y_ref - y_pal)))
+    L = 64
+    flops = Bt * H2 * (S2 // L) * (2 * L * L * N2 + 2 * L * L * P2 + 2 * L * N2 * P2 * 2)
+    bytes_ = (xs.size + Bm.size + Cm.size + y_ref.size) * 4
+    rows.append(
+        {
+            "kernel": "ssd_scan",
+            "shape": f"B{Bt} S{S2} H{H2} P{P2} N{N2} chunk{L}",
+            "max_err_vs_ref": err,
+            "flops_per_byte": round(flops / bytes_, 1),
+            "regime_v5e": "compute-bound" if flops / bytes_ > 240 else "memory-bound",
+            "ref_ms_cpu": round(_time(lambda: ref.ssd_scan_ref(xs, dt, A, Bm, Cm)) * 1e3, 2),
+        }
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -1,0 +1,67 @@
+"""Paper Figure 1 claim: "After optimization, all functions and
+backpropagators end up being inlined.  All unused computations are cut,
+and what remains is an expression for ∂f/∂x that is essentially identical
+to what one would have written by hand."
+
+Measured as IR node counts of the AD-transformed graph before/after the
+optimization pipeline, against the node count of the hand-written
+derivative parsed directly."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import api as myia
+from repro.core.opt import count_nodes
+
+
+def run() -> list[dict]:
+    import repro.core.primitives as P
+
+    global _tanh
+    _tanh = P.tanh
+
+    cases = []
+
+    def cube(x):
+        return x ** 3
+
+    def cube_hand(x):  # d/dx x³ by hand
+        return 3.0 * x * x
+
+    def poly(x):
+        return 2.0 * x ** 3 + 4.0 * x * x + x + 1.0
+
+    def poly_hand(x):
+        return 6.0 * x * x + 8.0 * x + 1.0
+
+    def chain(x):
+        return _tanh(_tanh(_tanh(x)))
+
+    for name, fn, hand, arg in [
+        ("x**3 (paper Fig.1)", cube, cube_hand, 2.0),
+        ("2x³+4x²+x+1", poly, poly_hand, 2.0),
+        ("tanh∘tanh∘tanh", chain, None, 0.5),
+    ]:
+        g_noopt = myia.grad(fn, opt=False)
+        g_opt = myia.grad(fn, opt=True)
+        before = g_noopt.node_count(arg, optimized=False)
+        after = g_opt.node_count(arg, optimized=True)
+        row = {
+            "case": name,
+            "nodes_after_ad": before,
+            "nodes_after_opt": after,
+            "reduction": f"{before / after:.1f}×",
+        }
+        if hand is not None:
+            h = myia.MyiaFunction(hand)
+            row["nodes_handwritten"] = h.node_count(arg, optimized=True)
+        # correctness unchanged by optimization
+        assert abs(g_noopt(arg) - g_opt(arg)) < 1e-6
+        cases.append(row)
+    return cases
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

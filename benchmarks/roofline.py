@@ -1,0 +1,210 @@
+"""Roofline analysis (deliverable g): three terms per (arch × shape × mesh).
+
+Reads the dry-run artifacts (SPMD memory/collective schedule) and the
+depth-extrapolation cost probes (true global HLO FLOPs/bytes — XLA's
+cost_analysis counts scan bodies once, so the scanned production program
+under-reports; see repro.launch.dryrun.cost_probe), then derives
+
+    compute    = HLO_FLOPs        / (chips × 197 TFLOP/s bf16)
+    memory     = HLO_bytes        / (chips × 819 GB/s HBM)
+    collective = wire_bytes/chip  / (50 GB/s/link ICI)
+
+plus MODEL_FLOPS (6·N_active·tokens + attention term) and the usefulness
+ratio MODEL_FLOPS / HLO_FLOPs that exposes remat/routing waste.
+
+    PYTHONPATH=src python -m benchmarks.roofline            # table to stdout
+    PYTHONPATH=src python -m benchmarks.roofline --md FILE  # + markdown
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12  # bf16 per chip (TPU v5e)
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DRYRUN_DIR = "artifacts/dryrun"
+_PROBE_DIR = "artifacts/probe"
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS: useful work from the architecture formula
+# ---------------------------------------------------------------------------
+
+
+def active_params_per_token(cfg) -> float:
+    """Parameters touched per token: dense layers fully, MoE layers only
+    top-k (+shared) experts; embedding *gather* is free, the logits
+    matmul counts via lm_head/tied-embed."""
+    D = cfg.d_model
+    hd = cfg.hd if cfg.n_heads else 0
+    total = 0.0
+    for spec in cfg.layer_specs():
+        if spec.mixer == "attn":
+            total += D * cfg.n_heads * hd * 2  # wq, wo
+            total += D * cfg.n_kv_heads * hd * 2  # wk, wv
+        else:
+            G = 1
+            conv_dim = cfg.d_inner + 2 * G * cfg.ssm_state
+            total += D * (2 * cfg.d_inner + 2 * G * cfg.ssm_state + cfg.n_ssm_heads)
+            total += cfg.conv_kernel * conv_dim + cfg.d_inner * D
+        if spec.cross_attn:
+            total += D * cfg.n_heads * hd * 2 + D * cfg.n_kv_heads * hd * 2
+        if spec.ffn:
+            F = (cfg.moe_d_ff or cfg.d_ff) if spec.moe else cfg.d_ff
+            if spec.moe:
+                total += 3 * D * F * (cfg.top_k + cfg.shared_experts) + D * cfg.num_experts
+            else:
+                total += 3 * D * F
+    if cfg.enc_dec:  # encoder layers (dense attn + mlp)
+        total += cfg.n_enc_layers * (D * cfg.n_heads * hd * 2 + D * cfg.n_kv_heads * hd * 2 + 3 * D * cfg.d_ff)
+    total += D * cfg.vocab  # logits matmul
+    return total
+
+
+def attention_flops_per_token(cfg, ctx_len: int, causal: bool = True) -> float:
+    """2·(QKᵀ) + 2·(PV) per attention layer at context ``ctx_len``."""
+    if not cfg.n_heads:
+        return 0.0
+    eff = ctx_len / 2 if causal else ctx_len
+    per_layer = 4 * eff * cfg.n_heads * cfg.hd
+    n_attn = sum(s.mixer == "attn" for s in cfg.layer_specs())
+    flops = n_attn * per_layer
+    # local attention layers see at most the window
+    n_local = sum(s.mixer == "attn" and s.attn_kind == "local" for s in cfg.layer_specs())
+    if n_local:
+        local_eff = min(cfg.local_window, ctx_len) / (2 if causal else 1)
+        flops -= n_local * 4 * (eff - local_eff) * cfg.n_heads * cfg.hd
+    return flops
+
+
+def model_flops(cfg, cell) -> float:
+    n_act = active_params_per_token(cfg)
+    tokens = cell.global_batch * cell.seq_len
+    if cell.kind == "train":
+        return (6 * n_act + 3 * attention_flops_per_token(cfg, cell.seq_len)) * tokens
+    if cell.kind == "prefill":
+        return (2 * n_act + attention_flops_per_token(cfg, cell.seq_len)) * tokens
+    # decode: one token per sequence against a ctx_len cache
+    return (2 * n_act + attention_flops_per_token(cfg, cell.seq_len)) * cell.global_batch
+
+
+# ---------------------------------------------------------------------------
+# Assembly
+# ---------------------------------------------------------------------------
+
+
+def load(dryrun_dir=_DRYRUN_DIR, probe_dir=_PROBE_DIR) -> list[dict]:
+    from repro.configs import SHAPES, get_config
+
+    probes = {}
+    for path in glob.glob(os.path.join(probe_dir, "*.json")):
+        rec = json.load(open(path))
+        probes[(rec["arch"], rec["cell"])] = rec
+
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(path))
+        arch, cellname, mesh = rec["arch"], rec["cell"], rec["mesh"]
+        cfg = get_config(arch)
+        cell = SHAPES[cellname]
+        chips = 1
+        for d in rec["mesh_shape"]:
+            chips *= d
+        probe = probes.get((arch, cellname))
+        flops_g = probe["hlo_flops_global"] if probe else None
+        bytes_g = probe["hlo_bytes_global"] if probe else None
+        coll = sum(rec["collective_bytes"].values())
+        row = {
+            "arch": arch,
+            "cell": cellname,
+            "mesh": mesh,
+            "chips": chips,
+            "hlo_flops_global": flops_g,
+            "hlo_bytes_global": bytes_g,
+            "collective_bytes_per_chip": coll,
+            "t_compute": (flops_g / (chips * PEAK_FLOPS)) if flops_g else None,
+            "t_memory": (bytes_g / (chips * HBM_BW)) if bytes_g else None,
+            "t_collective": coll / ICI_BW,
+            "model_flops": model_flops(cfg, cell),
+            "memory": rec["memory"],
+            "collectives": rec["collective_bytes"],
+        }
+        if row["t_compute"] is not None:
+            terms = {
+                "compute": row["t_compute"],
+                "memory": row["t_memory"],
+                "collective": row["t_collective"],
+            }
+            row["bottleneck"] = max(terms, key=terms.get)
+            step_time = max(terms.values())
+            row["roofline_fraction"] = row["t_compute"] / step_time if step_time else 0.0
+            row["useful_ratio"] = row["model_flops"] / flops_g if flops_g else None
+        rows.append(row)
+    return rows
+
+
+def fmt_s(x):
+    if x is None:
+        return "—"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}µs"
+
+
+def to_markdown(rows) -> str:
+    hdr = (
+        "| arch | cell | mesh | compute | memory | collective | bottleneck "
+        "| roofline frac | MODEL/HLO flops |\n|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        frac = r.get("roofline_fraction")
+        useful = r.get("useful_ratio")
+        lines.append(
+            "| {arch} | {cell} | {mesh} | {c} | {m} | {x} | {b} | {f} | {u} |".format(
+                arch=r["arch"],
+                cell=r["cell"],
+                mesh=r["mesh"].replace("_pod", ""),
+                c=fmt_s(r["t_compute"]),
+                m=fmt_s(r["t_memory"]),
+                x=fmt_s(r["t_collective"]),
+                b=r.get("bottleneck", "—"),
+                f=f"{frac:.2f}" if frac is not None else "—",
+                u=f"{useful:.2f}" if useful is not None else "—",
+            )
+        )
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--md", default=None, help="write a markdown table here")
+    ap.add_argument("--json", default="artifacts/roofline.json")
+    args = ap.parse_args(argv)
+    rows = load()
+    for r in rows:
+        print(
+            f"{r['arch']:22s} {r['cell']:12s} {r['mesh']:18s} "
+            f"C={fmt_s(r['t_compute']):>8s} M={fmt_s(r['t_memory']):>8s} "
+            f"X={fmt_s(r['t_collective']):>8s}  {r.get('bottleneck','?'):10s} "
+            f"frac={r.get('roofline_fraction', 0) or 0:.2f} "
+            f"useful={r.get('useful_ratio') or 0:.2f}"
+        )
+    os.makedirs(os.path.dirname(args.json), exist_ok=True)
+    with open(args.json, "w") as f:
+        json.dump(rows, f, indent=1)
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write(to_markdown(rows))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

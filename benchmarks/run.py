@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper claim + the roofline reporter.
+
+    PYTHONPATH=src python -m benchmarks.run            # all benches
+    PYTHONPATH=src python -m benchmarks.run --only ad_overhead
+
+Results land in ``artifacts/bench/<name>.json`` and a summary prints to
+stdout.  The roofline section only reports if the dry-run artifacts exist
+(run ``python -m repro.launch.dryrun`` first)."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    from . import bench_ad_overhead, bench_compile_time, bench_kernels, bench_opt_effectiveness
+
+    benches = {
+        "ad_overhead": bench_ad_overhead.run,
+        "opt_effectiveness": bench_opt_effectiveness.run,
+        "compile_time": bench_compile_time.run,
+        "kernels": bench_kernels.run,
+    }
+    os.makedirs("artifacts/bench", exist_ok=True)
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        print(f"\n=== {name} ===")
+        rows = fn()
+        for row in rows:
+            print("  ", row)
+        with open(f"artifacts/bench/{name}.json", "w") as f:
+            json.dump(rows, f, indent=1, default=str)
+
+    # roofline summary (from dry-run artifacts, if present)
+    if (args.only in (None, "roofline")) and os.path.isdir("artifacts/dryrun"):
+        import glob
+
+        if glob.glob("artifacts/dryrun/*.json"):
+            print("\n=== roofline (see EXPERIMENTS.md §Roofline for the analysis) ===")
+            from . import roofline
+
+            roofline.main(["--md", "artifacts/roofline.md"])
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,90 @@
+"""Quickstart: the paper's toolchain in five minutes.
+
+Demonstrates exactly what the paper promises the IR can do that dataflow
+graphs cannot (§3): recursion, higher-order functions, closures — and
+closure-based ST AD through all of them, including reverse-over-reverse.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api as myia
+import repro.core.primitives as P
+
+tanh = P.tanh  # Myia primitives are plain callables inside @myia code
+
+
+# -- 1. compile a function through the pipeline ------------------------------
+
+
+@myia.myia
+def f(x):
+    return x ** 3 + 2.0 * x
+
+
+print("f(2.0) =", f(2.0), "(expected 12.0)")
+
+
+# -- 2. gradients via closure-based source transformation --------------------
+
+def g(x):
+    return x ** 3 + 2.0 * x
+
+df = myia.grad(g)
+print("g'(2.0) =", df(2.0), "(expected 3·4+2 = 14.0)")
+
+# reverse-over-reverse: the transform applies to its own output (§3.2)
+ddf = myia.grad(myia.grad(g))
+print("g''(2.0) =", ddf(2.0), "(expected 6·2 = 12.0)")
+
+
+# -- 3. recursion — "some models are more naturally expressed using
+#       recursion than loops" (§1) ------------------------------------------
+
+def power_rec(x, n):
+    if n == 0:
+        return 1.0
+    return x * power_rec(x, n - 1)
+
+
+@myia.myia
+def use_recursion(x):
+    return power_rec(x, 5)
+
+
+print("x^5 at 2:", use_recursion(2.0), "(expected 32)")
+print("d/dx x^5 at 2:", myia.grad(use_recursion)(2.0), "(expected 80)")
+
+
+# -- 4. higher-order functions + closures ------------------------------------
+
+def compose_twice(fn, x):
+    return fn(fn(x))
+
+
+@myia.myia
+def hof(x):
+    def scaled_tanh(v):
+        return tanh(v) * x  # closes over x — a real closure
+
+    return compose_twice(scaled_tanh, x)
+
+
+print("hof(0.5) =", hof(0.5))
+print("hof'(0.5) =", myia.grad(hof)(0.5), "(gradient flows through the closure's free variable)")
+
+
+# -- 5. arrays: same pipeline, and the gradient matches jax ------------------
+
+def loss(w, x):
+    h = tanh(x @ w)
+    return P.reduce_sum(h * h, (0, 1), False)
+
+
+w = jax.random.normal(jax.random.PRNGKey(0), (8, 8))
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 8))
+g_myia = myia.grad(loss)(w, x)
+g_jax = jax.grad(lambda w_: jnp.sum(jnp.tanh(x @ w_) ** 2))(w)
+print("myia grad == jax grad:", bool(jnp.allclose(g_myia, g_jax, atol=1e-5)))

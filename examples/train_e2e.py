@@ -1,0 +1,97 @@
+"""End-to-end driver (deliverable b): train a ~100M-parameter LM for a
+few hundred steps through the FULL framework stack — config → model →
+data pipeline → AdamW → fault-tolerant loop with checkpointing — on
+whatever devices exist (CPU here; the same code runs under the
+production mesh via repro.launch.train).
+
+    PYTHONPATH=src python examples/train_e2e.py --steps 300
+
+The config is a scaled gemma3-family model (~100M params).  Expect
+CPU wall-time of a few seconds/step; pass --steps 20 for a quick look.
+"""
+
+import argparse
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import DataConfig, SyntheticLM
+from repro.distributed import make_train_state_fn, make_train_step
+from repro.models import LayerSpec, ModelConfig
+from repro.optim import OptConfig, make_optimizer
+from repro.runtime import TrainLoopConfig, train_loop
+import jax
+
+
+def config_100m() -> ModelConfig:
+    # ~103M params: 8 layers (5 local : 1 global pattern), d=512, vocab 32k
+    return ModelConfig(
+        name="gemma3-100m",
+        n_layers=8,
+        d_model=512,
+        n_heads=8,
+        n_kv_heads=2,
+        d_ff=2048,
+        vocab=32768,
+        layer_period=(LayerSpec(attn_kind="local"),) * 5 + (LayerSpec(attn_kind="global"),),
+        local_window=256,
+        tie_embeddings=True,
+        param_dtype="float32",
+        compute_dtype="float32",
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
+    args = ap.parse_args(argv)
+
+    cfg = config_100m()
+    n_params = None
+    opt = make_optimizer(
+        OptConfig(lr=6e-4, warmup_steps=args.steps // 10, total_steps=args.steps)
+    )
+    ds = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch))
+
+    init_fn = make_train_state_fn(cfg, opt)
+    step_jit = jax.jit(make_train_step(cfg, opt), donate_argnums=(0,))
+
+    t0 = time.monotonic()
+
+    def on_step(step, metrics):
+        if step % 20 == 0:
+            print(
+                f"step {step:4d}  loss {float(metrics['loss']):.4f}  "
+                f"({time.monotonic()-t0:.0f}s)",
+                flush=True,
+            )
+
+    res = train_loop(
+        TrainLoopConfig(
+            total_steps=args.steps,
+            checkpoint_every=max(50, args.steps // 4),
+            checkpoint_dir=args.ckpt_dir,
+        ),
+        step_jit,
+        init_fn,
+        lambda s: {k: jnp.asarray(v) for k, v in ds.batch(s).items()},
+        on_step=on_step,
+    )
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(res.state["params"]))
+    first, last = np.mean(res.losses[:10]), np.mean(res.losses[-10:])
+    toks = args.steps * args.batch * args.seq
+    dt = time.monotonic() - t0
+    print(
+        f"\n{n_params/1e6:.1f}M params · {args.steps} steps · loss {first:.3f} → {last:.3f}"
+        f" · {toks/dt:.0f} tok/s · {res.restarts} restarts"
+    )
+    assert last < first
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,122 @@
+"""Architecture registry: ``--arch <id>`` → ModelConfig, cells, specs.
+
+``input_specs(cfg, cell)`` builds ShapeDtypeStruct stand-ins for every
+model input of a (architecture × shape) cell — weak-type-correct,
+shardable, no device allocation — which is exactly what the multi-pod
+dry-run lowers."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig
+from .base import SHAPES, ShapeCell
+
+__all__ = [
+    "ARCHS",
+    "SHAPES",
+    "ShapeCell",
+    "get_config",
+    "is_subquadratic",
+    "cells_for",
+    "input_specs",
+    "cache_specs",
+]
+
+ARCHS: dict[str, str] = {
+    "jamba-v0.1-52b": "jamba_v01_52b",
+    "gemma3-1b": "gemma3_1b",
+    "internlm2-1.8b": "internlm2_1_8b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "starcoder2-15b": "starcoder2_15b",
+    "whisper-medium": "whisper_medium",
+    "grok-1-314b": "grok_1_314b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t",
+    "mamba2-370m": "mamba2_370m",
+    "llama-3.2-vision-11b": "llama32_vision_11b",
+}
+
+
+def _module(arch: str):
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(ARCHS)}")
+    return importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+
+
+def get_config(arch: str, *, reduced: bool = False) -> ModelConfig:
+    m = _module(arch)
+    return m.reduced() if reduced else m.config()
+
+
+def is_subquadratic(arch: str) -> bool:
+    return bool(_module(arch).SUBQUADRATIC)
+
+
+def cells_for(arch: str) -> list[ShapeCell]:
+    """The runnable shape cells for an arch (long_500k only when
+    sub-quadratic, per the brief)."""
+    cells = [SHAPES["train_4k"], SHAPES["prefill_32k"], SHAPES["decode_32k"]]
+    if is_subquadratic(arch):
+        cells.append(SHAPES["long_500k"])
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict[str, Any]:
+    """Model inputs for a cell.
+
+    train:   {tokens, labels}                     (B, S) int32
+    prefill: {tokens}                             (B, S) int32
+    decode:  {token, pos}                         (B,) int32 + scalar
+    plus modality stubs (enc_frames / image_embeds) where the arch needs
+    them — "the modality frontend is a STUB; input_specs() provides
+    precomputed frame/patch embeddings" (brief).
+    """
+    B, S = cell.global_batch, cell.seq_len
+    out: dict[str, Any] = {}
+    if cell.kind == "train":
+        out["tokens"] = _sds((B, S), jnp.int32)
+        out["labels"] = _sds((B, S), jnp.int32)
+    elif cell.kind == "prefill":
+        out["tokens"] = _sds((B, S), jnp.int32)
+    else:  # decode
+        out["token"] = _sds((B,), jnp.int32)
+        out["pos"] = _sds((), jnp.int32)
+    if cfg.enc_dec and cell.kind != "decode":
+        out["enc_frames"] = _sds((B, min(S, ENC_FRAMES), cfg.d_model), cfg.cdtype)
+    if cfg.cross_attn_period and not cfg.enc_dec and cell.kind != "decode":
+        out["image_embeds"] = _sds((B, cfg.num_image_tokens, cfg.d_model), cfg.cdtype)
+    return out
+
+
+#: Whisper encoder output length (30 s at 50 Hz post-conv — the published
+#: frontend geometry; the conv stub's output length).
+ENC_FRAMES = 1500
+
+
+def cache_specs(cfg: ModelConfig, cell: ShapeCell) -> Any:
+    """Decode-cache ShapeDtypeStructs for a decode cell (the KV/SSM state
+    the serve_step reads and writes)."""
+    from repro.models import cache_init
+
+    if cfg.enc_dec:
+        # decoder KV sized to the target seq; cross-KV sized to the encoder
+        # output length (the conv-stub geometry)
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, num_image_tokens=min(cell.seq_len, ENC_FRAMES))
+    return jax.eval_shape(
+        lambda: cache_init(cfg, cell.global_batch, cell.seq_len)
+    )

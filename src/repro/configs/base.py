@@ -1,0 +1,29 @@
+"""Shape cells and the architecture registry scaffolding.
+
+Every architecture module exposes ``config()`` (the exact published dims)
+and ``reduced()`` (a same-family miniature for CPU smoke tests), plus
+``SUBQUADRATIC`` — whether the arch can run the ``long_500k`` cell (the
+brief: skip long_500k for pure full-attention archs)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+Kind = Literal["train", "prefill", "decode"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: Kind
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524_288, 1),
+}

@@ -1,0 +1,17 @@
+"""``repro.core`` — the paper's contribution: a graph-based IR with
+first-class functions/closures, closure-based source-transformation AD,
+call-site-specializing type/shape inference, and an optimizing pipeline
+(NeurIPS 2018, "Automatic differentiation in ML: where we are and where we
+should be going" — the Myia paper)."""
+
+from . import primitives as P  # noqa: F401
+from .ad import J, build_grad_graph, build_value_and_grad_graph, build_vjp_graph  # noqa: F401
+from .api import MyiaFunction, grad, myia, value_and_grad, vjp  # noqa: F401
+from .infer import InferenceError, infer  # noqa: F401
+from .ir import Apply, Constant, Graph, Node, Parameter, clone_graph  # noqa: F401
+from .jax_backend import compile_graph, trace_graph  # noqa: F401
+from .oo_tape import oo_grad, oo_value_and_grad  # noqa: F401
+from .opt import count_nodes, optimize  # noqa: F401
+from .parser import MyiaSyntaxError, parse_function  # noqa: F401
+from .values import Closure, EnvInstance, SymbolicKey  # noqa: F401
+from .vm import VM, run_graph  # noqa: F401

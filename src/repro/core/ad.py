@@ -1,0 +1,382 @@
+"""Closure-based source-transformation reverse-mode AD (paper §3.2).
+
+Following Pearlmutter & Siskind's "Lambda the ultimate backpropagator" as
+adopted by the paper:
+
+* ``J(g)`` transforms graph ``g`` into ``▶g`` ("forward graph"): every call
+  inside returns an **additional value**, a closure called the
+  *backpropagator* (``◀``); ``▶g`` itself returns ``(value, ◀g)``.
+* ``◀g(dout)`` calls the backpropagators of the body in reverse order and
+  returns ``(env, dparam_1, …, dparam_n)`` where ``env`` carries the partial
+  derivatives w.r.t. ``g``'s **free variables** keyed by symbolic keys
+  (see ``repro.core.values``).  The backpropagator of the scope that
+  *created* a closure unpacks that env — "this unpacking being the adjoint
+  of closure creation" (paper §3.2).
+* Because the transform's output is ordinary IR (closures included), it can
+  be applied to itself: **reverse-over-reverse** gives higher-order
+  derivatives.  No tape anywhere.
+
+There is no runtime machinery here: the result is a program, amenable to
+ahead-of-time optimization (``repro.core.opt``) — the paper's central
+argument for ST over operator overloading.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any
+
+from . import primitives as P
+from .ir import (
+    Apply,
+    Constant,
+    Graph,
+    Node,
+    Parameter,
+    dfs_nodes,
+    free_variables,
+    graph_and_descendants,
+    is_constant_graph,
+)
+from .primitives import Primitive
+from .values import SymbolicKey, newenv
+
+__all__ = ["J", "Jprim", "build_grad_graph", "build_value_and_grad_graph", "build_vjp_graph"]
+
+
+# ---------------------------------------------------------------------------
+# J of primitives
+# ---------------------------------------------------------------------------
+
+_JPRIM_CACHE: dict[tuple[int, int], Graph] = {}
+
+
+def _prim_arity(p: Primitive) -> int:
+    if callable(p.bprop):
+        return len(inspect.signature(p.bprop).parameters) - 2
+    try:
+        sig = inspect.signature(p.impl)
+    except (TypeError, ValueError):  # pragma: no cover
+        raise TypeError(f"cannot determine arity of primitive {p.name}")
+    if any(
+        prm.kind in (prm.VAR_POSITIONAL, prm.VAR_KEYWORD) for prm in sig.parameters.values()
+    ):
+        raise TypeError(f"variadic primitive {p.name} needs an explicit arity")
+    return len(sig.parameters)
+
+
+def Jprim(p: Primitive, arity: int | None = None) -> Graph:
+    """``▶p``: a graph ``(j1..jn) -> (p(j1..jn), ◀p)`` built from the
+    primitive's registered backpropagator definition."""
+    if arity is None:
+        arity = _prim_arity(p)
+    key = (id(p), arity)
+    if key in _JPRIM_CACHE:
+        return _JPRIM_CACHE[key]
+
+    jp = Graph(f"▶{p.name}")
+    jp.flags["is_jprim"] = p.name
+    params = [jp.add_parameter(f"j{i}") for i in range(arity)]
+    out = jp.apply(p, *params, debug_name=f"{p.name}_out")
+
+    bg = Graph(f"◀{p.name}")
+    bg.flags["is_bprop_of_prim"] = p.name
+    dout = bg.add_parameter("dout")
+
+    if p is P.make_tuple:
+        items = [bg.apply(P.tuple_getitem, dout, i) for i in range(arity)]
+    elif p.bprop == "zeros":
+        items = [bg.apply(P.zeros_like, prm) for prm in params]
+    elif callable(p.bprop):
+        from .parser import parse_function
+
+        bpg = parse_function(p.bprop)
+        tup = bg.apply(bpg, *params, out, dout)
+        items = [bg.apply(P.tuple_getitem, tup, i) for i in range(arity)]
+    else:
+        raise TypeError(f"primitive {p.name} has no backpropagator")
+
+    bg.set_return(bg.apply(P.make_tuple, newenv, *items))
+    jp.set_return(jp.apply(P.make_tuple, out, Constant(bg)))
+    _JPRIM_CACHE[key] = jp
+    return jp
+
+
+# ---------------------------------------------------------------------------
+# J of graphs (family-wide transform)
+# ---------------------------------------------------------------------------
+
+
+class JTransformer:
+    def __init__(self, root: Graph) -> None:
+        self.root = root
+        self.family = graph_and_descendants(root)
+        self.graph_map: dict[Graph, Graph] = {}  # g -> ▶g
+        self.bprop_graphs: dict[Graph, Graph] = {}  # g -> ◀g
+        self.node_map: dict[int, Node] = {}  # primal node id -> forward-value node
+        self.bprop_map: dict[int, Node] = {}  # primal apply id -> backpropagator node
+        self._fv_cache: dict[Graph, list[Node]] = {}
+
+    # -- public ---------------------------------------------------------
+    def transform(self) -> Graph:
+        cached = self.root.transforms.get("J")
+        if cached is not None:
+            return cached
+        for g in self.family:
+            jg = Graph(f"▶{g.name}")
+            jg.primal = g
+            jg.flags["is_j"] = True
+            self.graph_map[g] = jg
+            for prm in g.parameters:
+                jp = jg.add_parameter(prm.debug_name)
+                self.node_map[prm._id] = jp
+            bg = Graph(f"◀{g.name}")
+            bg.primal = g
+            bg.flags["is_bprop"] = True
+            self.bprop_graphs[g] = bg
+        for g in self.family:
+            self._build_forward(g)
+        for g in self.family:
+            self._build_backward(g)
+        for g in self.family:
+            g.transforms["J"] = self.graph_map[g]
+        return self.graph_map[self.root]
+
+    # -- forward ----------------------------------------------------------
+    def _fwd_fn(self, node: Node, call_arity: int | None) -> Node:
+        """Transform a node used in *function position*."""
+        if isinstance(node, Constant):
+            v = node.value
+            if isinstance(v, Primitive):
+                return Constant(Jprim(v, call_arity))
+            if isinstance(v, Graph):
+                return Constant(self.graph_map[v])
+            raise TypeError(f"cannot call non-function constant {v!r}")
+        return self._fwd(node)
+
+    def _fwd(self, node: Node) -> Node:
+        """Forward-value node for a primal node (iterative post-order)."""
+        if node._id in self.node_map:
+            return self.node_map[node._id]
+        stack: list[tuple[Node, bool]] = [(node, False)]
+        while stack:
+            cur, ready = stack.pop()
+            if cur._id in self.node_map:
+                continue
+            if isinstance(cur, Constant):
+                v = cur.value
+                if isinstance(v, Graph):
+                    new: Node = Constant(self.graph_map[v], cur.debug_name)
+                elif isinstance(v, Primitive):
+                    # primitive passed as a value (e.g. HOF argument)
+                    new = Constant(Jprim(v, None), cur.debug_name)
+                else:
+                    new = Constant(v, cur.debug_name)
+                self.node_map[cur._id] = new
+                continue
+            if isinstance(cur, Parameter):
+                raise RuntimeError(f"parameter {cur!r} not pre-mapped (outside family?)")
+            assert isinstance(cur, Apply)
+            if not ready:
+                stack.append((cur, True))
+                for inp in cur.inputs[1:]:
+                    if inp._id not in self.node_map:
+                        stack.append((inp, False))
+                fn = cur.inputs[0]
+                if not isinstance(fn, Constant) and fn._id not in self.node_map:
+                    stack.append((fn, False))
+                continue
+            jg = self.graph_map[cur.graph]
+            jf = self._fwd_fn(cur.inputs[0], len(cur.inputs) - 1)
+            jargs = [self.node_map[a._id] for a in cur.inputs[1:]]
+            japp = Apply([jf, *jargs], jg, debug_name=f"J_{cur.debug_name}")
+            fw = Apply([Constant(P.tuple_getitem), japp, Constant(0)], jg, cur.debug_name)
+            bp = Apply(
+                [Constant(P.tuple_getitem), japp, Constant(1)], jg, f"bprop_{cur.debug_name}"
+            )
+            self.node_map[cur._id] = fw
+            self.bprop_map[cur._id] = bp
+        return self.node_map[node._id]
+
+    def _build_forward(self, g: Graph) -> None:
+        jg = self.graph_map[g]
+        ret = self._fwd(g.return_)
+        # also force-transform applies only reachable through nested graphs
+        for n in dfs_nodes(g.return_):
+            if isinstance(n, Apply) and n.graph in self.family:
+                self._fwd(n)
+        jg.set_return(jg.apply(P.make_tuple, ret, Constant(self.bprop_graphs[g])))
+
+    # -- backward ---------------------------------------------------------
+    def _fvs(self, g: Graph) -> list[Node]:
+        if g not in self._fv_cache:
+            self._fv_cache[g] = free_variables(g)
+        return self._fv_cache[g]
+
+    def _adjoint_order(self, g: Graph) -> list[Apply]:
+        """g-owned apply nodes, topo-sorted with closure-capture edges:
+        an apply that references a nested graph depends on the g-owned free
+        variables that graph captures (closure creation 'uses' them)."""
+        owned = [
+            n
+            for n in dfs_nodes(g.return_)
+            if isinstance(n, Apply) and n.graph is g
+        ]
+        deps: dict[int, list[Node]] = {}
+        for u in owned:
+            d: list[Node] = []
+            for inp in u.inputs:
+                if inp.graph is g:
+                    d.append(inp)
+                elif is_constant_graph(inp) and inp.value in self.family:
+                    d.extend(v for v in self._fvs(inp.value) if v.graph is g)
+            deps[u._id] = d
+        order: list[Apply] = []
+        state: dict[int, int] = {}  # 0 visiting, 1 done
+
+        for root in owned:
+            if root._id in state:
+                continue
+            stack: list[tuple[Node, bool]] = [(root, False)]
+            while stack:
+                cur, ready = stack.pop()
+                if ready:
+                    state[cur._id] = 1
+                    order.append(cur)  # type: ignore[arg-type]
+                    continue
+                st = state.get(cur._id)
+                if st is not None:
+                    continue
+                state[cur._id] = 0
+                stack.append((cur, True))
+                for dep in deps.get(cur._id, ()):
+                    if isinstance(dep, Apply) and dep.graph is g and state.get(dep._id) is None:
+                        stack.append((dep, False))
+        return order
+
+    def _build_backward(self, g: Graph) -> None:
+        bg = self.bprop_graphs[g]
+        dout = bg.add_parameter("dout")
+        contribs: dict[int, list[Node]] = {}
+        env_contribs: dict[int, tuple[Node, list[Node]]] = {}
+        sens_memo: dict[int, Node] = {}
+
+        def fold(vals: list[Node]) -> Node:
+            acc = vals[0]
+            for v in vals[1:]:
+                acc = bg.apply(P.gadd, acc, v)
+            return acc
+
+        def sens_of(primal: Node) -> Node:
+            if primal._id in sens_memo:
+                return sens_memo[primal._id]
+            lst = contribs.get(primal._id)
+            if lst:
+                s = fold(lst)
+            else:
+                s = bg.apply(P.zeros_like, self.node_map[primal._id])
+            sens_memo[primal._id] = s
+            return s
+
+        def route(primal: Node, val: Node) -> None:
+            if isinstance(primal, Constant):
+                v = primal.value
+                if isinstance(v, Graph) and v in self.family:
+                    # adjoint of closure creation: unpack free-var grads
+                    for fv in self._fvs(v):
+                        fw_fv = self.node_map[fv._id]
+                        key = Constant(SymbolicKey(fw_fv))
+                        dflt = bg.apply(P.zeros_like, fw_fv)
+                        dv = bg.apply(P.env_getitem, val, key, dflt)
+                        route(fv, dv)
+                return  # sensitivities of data/primitive constants: discarded
+            if primal.graph is g:
+                contribs.setdefault(primal._id, []).append(val)
+            else:
+                # free variable of g: goes into the returned env
+                ec = env_contribs.setdefault(primal._id, (primal, []))
+                ec[1].append(val)
+
+        route(g.return_, dout)
+
+        for u in reversed(self._adjoint_order(g)):
+            du = sens_of(u)
+            ct = bg.apply(self.bprop_map[u._id], du, debug_name=f"d_{u.debug_name}")
+            for i, inp in enumerate(u.inputs):
+                route(inp, bg.apply(P.tuple_getitem, ct, i))
+
+        env_node: Node = Constant(newenv)
+        for nid in sorted(env_contribs):
+            primal, vals = env_contribs[nid]
+            fw = self.node_map[primal._id]
+            env_node = bg.apply(
+                P.env_setitem, env_node, Constant(SymbolicKey(fw)), fold(vals)
+            )
+        param_sens = [sens_of(prm) for prm in g.parameters]
+        bg.set_return(bg.apply(P.make_tuple, env_node, *param_sens))
+
+
+def J(g: Graph) -> Graph:
+    """Transform ``g`` into ``▶g`` (cached on the graph)."""
+    cached = g.transforms.get("J")
+    if cached is not None:
+        return cached
+    return JTransformer(g).transform()
+
+
+# ---------------------------------------------------------------------------
+# User-facing graph builders
+# ---------------------------------------------------------------------------
+
+
+def build_grad_graph(g: Graph, wrt: int | tuple[int, ...] = 0) -> Graph:
+    """``grad(f)``: a graph computing df/dx_wrt for a scalar-output ``f``."""
+    jg = J(g)
+    gg = Graph(f"grad_{g.name}")
+    params = [gg.add_parameter(p.debug_name) for p in g.parameters]
+    japp = gg.apply(jg, *params)
+    out = gg.apply(P.tuple_getitem, japp, 0)
+    bp = gg.apply(P.tuple_getitem, japp, 1)
+    one = gg.apply(P.cast, 1.0, gg.apply(P.dtype_of, out))
+    grads = gg.apply(bp, one)
+    if isinstance(wrt, int):
+        gg.set_return(gg.apply(P.tuple_getitem, grads, wrt + 1))
+    else:
+        items = [gg.apply(P.tuple_getitem, grads, i + 1) for i in wrt]
+        gg.set_return(gg.apply(P.make_tuple, *items))
+    gg.primal = g
+    return gg
+
+
+def build_value_and_grad_graph(g: Graph, wrt: int | tuple[int, ...] = 0) -> Graph:
+    jg = J(g)
+    gg = Graph(f"value_and_grad_{g.name}")
+    params = [gg.add_parameter(p.debug_name) for p in g.parameters]
+    japp = gg.apply(jg, *params)
+    out = gg.apply(P.tuple_getitem, japp, 0)
+    bp = gg.apply(P.tuple_getitem, japp, 1)
+    one = gg.apply(P.cast, 1.0, gg.apply(P.dtype_of, out))
+    grads = gg.apply(bp, one)
+    if isinstance(wrt, int):
+        gnode = gg.apply(P.tuple_getitem, grads, wrt + 1)
+    else:
+        gnode = gg.apply(P.make_tuple, *[gg.apply(P.tuple_getitem, grads, i + 1) for i in wrt])
+    gg.set_return(gg.apply(P.make_tuple, out, gnode))
+    gg.primal = g
+    return gg
+
+
+def build_vjp_graph(g: Graph) -> Graph:
+    """``vjp(f)``: graph ``(x1..xn, dout) -> (dx1..dxn)`` — arbitrary output
+    cotangent (non-scalar outputs)."""
+    jg = J(g)
+    gg = Graph(f"vjp_{g.name}")
+    params = [gg.add_parameter(p.debug_name) for p in g.parameters]
+    dout = gg.add_parameter("dout")
+    japp = gg.apply(jg, *params)
+    bp = gg.apply(P.tuple_getitem, japp, 1)
+    grads = gg.apply(bp, dout)
+    items = [gg.apply(P.tuple_getitem, grads, i + 1) for i in range(len(params))]
+    gg.set_return(gg.apply(P.make_tuple, *items))
+    gg.primal = g
+    return gg

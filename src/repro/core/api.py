@@ -1,0 +1,219 @@
+"""Public API of the Myia-style toolchain (paper §4).
+
+* ``@myia`` — compile a pure-Python-subset function through the pipeline:
+  parse → (AD transform) → inline → infer (call-site specialization on the
+  actual argument types/shapes, §4.2) → optimize (§4.3) → execute, either
+  through the reference VM or traced once under ``jax.jit`` so XLA compiles
+  the whole (straight-line) program.
+* ``grad`` / ``value_and_grad`` / ``vjp`` — the ST AD transforms of §3.2.
+  ``grad`` is also a *macro*: used inside ``@myia`` code it expands at parse
+  time (paper Figure 1: "After the grad macro is expanded …").
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from .ad import build_grad_graph, build_value_and_grad_graph, build_vjp_graph
+from .infer import InferenceError, abstract_of_value, infer
+from .ir import Constant, Graph, clone_graph
+from .opt import count_nodes, optimize
+from .parser import MyiaSyntaxError, parse_function
+from .values import is_array_like
+from .vm import VM
+
+__all__ = ["myia", "grad", "value_and_grad", "vjp", "MyiaFunction", "compile_pipeline"]
+
+
+def compile_pipeline(
+    graph: Graph,
+    example_args: tuple | None = None,
+    *,
+    opt: bool = True,
+    infer_types: bool = True,
+) -> Graph:
+    """inline → infer → optimize, on a private clone of ``graph``."""
+    g = clone_graph(graph)
+    if not opt:
+        return g
+    optimize(g)  # structural pass (no abstracts needed)
+    if infer_types and example_args is not None:
+        try:
+            infer(g, *example_args)
+        except InferenceError:
+            pass  # dynamic program: shape-directed rules simply won't fire
+        optimize(g)  # shape-directed pass
+    return g
+
+
+class MyiaFunction:
+    """A function compiled through the Myia pipeline, specialized and cached
+    per call signature (the paper's call-site specialization)."""
+
+    def __init__(
+        self,
+        fn: Callable | None = None,
+        graph: Graph | None = None,
+        *,
+        backend: str = "jax",
+        opt: bool = True,
+        name: str | None = None,
+    ) -> None:
+        if fn is None and graph is None:
+            raise ValueError("need fn or graph")
+        self._fn = fn
+        self._graph = graph
+        self.backend = backend
+        self.opt = opt
+        self._specializations: dict[tuple, Callable] = {}
+        self.__name__ = name or (fn.__name__ if fn is not None else graph.name)
+        if fn is not None:
+            functools.update_wrapper(self, fn, updated=())
+
+    # -- graph access ---------------------------------------------------
+    @property
+    def graph(self) -> Graph:
+        if self._graph is None:
+            self._graph = parse_function(self._fn)
+        return self._graph
+
+    def __myia_graph_factory__(self) -> Graph:
+        return self.graph
+
+    # -- compilation ------------------------------------------------------
+    def _sigkey(self, args: tuple) -> tuple:
+        out = []
+        for a in args:
+            if is_array_like(a) or isinstance(a, np.generic):
+                out.append(("arr", np.shape(a), np.dtype(a.dtype) if hasattr(a, "dtype") else None))
+            elif isinstance(a, tuple):
+                out.append(("tup", self._sigkey(a)))
+            else:
+                out.append(("val", type(a).__name__, a))
+        return tuple(out)
+
+    def specialize(self, args: tuple) -> Callable:
+        key = (self.backend, self._sigkey(args))
+        hit = self._specializations.get(key)
+        if hit is not None:
+            return hit
+        g = compile_pipeline(
+            self.graph,
+            tuple(abstract_of_value(a) for a in args),
+            opt=self.opt,
+        )
+        runner = self._make_runner(g, args)
+        self._specializations[key] = runner
+        return runner
+
+    def _make_runner(self, g: Graph, example_args: tuple) -> Callable:
+        if self.backend == "vm":
+            return lambda *args: VM().call(g, args)
+        # jax backend: arrays are dynamic (traced), everything else static.
+        dyn_idx = [i for i, a in enumerate(example_args) if is_array_like(a)]
+        static = {i: a for i, a in enumerate(example_args) if i not in set(dyn_idx)}
+
+        def run(*arrs):
+            full: list[Any] = [None] * (len(arrs) + len(static))
+            for i, v in static.items():
+                full[i] = v
+            for i, v in zip(dyn_idx, arrs):
+                full[i] = v
+            return VM().call(g, tuple(full))
+
+        jitted = jax.jit(run)
+
+        def runner(*args):
+            return jitted(*[args[i] for i in dyn_idx])
+
+        return runner
+
+    def __call__(self, *args: Any) -> Any:
+        return self.specialize(args)(*args)
+
+    # -- introspection (benchmarks / tests) --------------------------------
+    def optimized_graph(self, *args: Any) -> Graph:
+        return compile_pipeline(
+            self.graph, tuple(abstract_of_value(a) for a in args), opt=self.opt
+        )
+
+    def node_count(self, *args: Any, optimized: bool = True) -> int:
+        g = self.optimized_graph(*args) if optimized else self.graph
+        return count_nodes(g)
+
+
+def myia(fn: Callable | None = None, *, backend: str = "jax", opt: bool = True):
+    """Decorator: compile ``fn`` (pure Python subset) through the pipeline."""
+
+    def wrap(f: Callable) -> MyiaFunction:
+        return MyiaFunction(f, backend=backend, opt=opt)
+
+    return wrap(fn) if fn is not None else wrap
+
+
+# ---------------------------------------------------------------------------
+# AD entry points (callable API + in-language macros)
+# ---------------------------------------------------------------------------
+
+
+def _as_graph(fn: Any) -> Graph:
+    if isinstance(fn, Graph):
+        return fn
+    if isinstance(fn, MyiaFunction):
+        return fn.graph
+    return parse_function(fn)
+
+
+def _macro_expand_grad(parser, block, ast_args):
+    if len(ast_args) < 1:
+        raise MyiaSyntaxError("grad() takes a function argument")
+    fn_node = parser.expr(block, ast_args[0])
+    if not (isinstance(fn_node, Constant) and isinstance(fn_node.value, Graph)):
+        raise MyiaSyntaxError("grad() macro requires a statically-known function")
+    wrt: int | tuple = 0
+    if len(ast_args) > 1:
+        import ast as _ast
+
+        a1 = ast_args[1]
+        if isinstance(a1, _ast.Constant):
+            wrt = a1.value
+        elif isinstance(a1, _ast.Tuple):
+            wrt = tuple(e.value for e in a1.elts)
+        else:
+            raise MyiaSyntaxError("grad() wrt must be a literal")
+    return Constant(build_grad_graph(fn_node.value, wrt))
+
+
+def _macro_expand_vag(parser, block, ast_args):
+    fn_node = parser.expr(block, ast_args[0])
+    if not (isinstance(fn_node, Constant) and isinstance(fn_node.value, Graph)):
+        raise MyiaSyntaxError("value_and_grad() macro requires a statically-known function")
+    return Constant(build_value_and_grad_graph(fn_node.value))
+
+
+def grad(fn: Any, wrt: int | tuple[int, ...] = 0, *, backend: str = "jax", opt: bool = True):
+    """Reverse-mode gradient of a scalar-output function (paper §3.2)."""
+    g = build_grad_graph(_as_graph(fn), wrt)
+    return MyiaFunction(graph=g, backend=backend, opt=opt, name=g.name)
+
+
+def value_and_grad(
+    fn: Any, wrt: int | tuple[int, ...] = 0, *, backend: str = "jax", opt: bool = True
+):
+    g = build_value_and_grad_graph(_as_graph(fn), wrt)
+    return MyiaFunction(graph=g, backend=backend, opt=opt, name=g.name)
+
+
+def vjp(fn: Any, *, backend: str = "jax", opt: bool = True):
+    g = build_vjp_graph(_as_graph(fn))
+    return MyiaFunction(graph=g, backend=backend, opt=opt, name=g.name)
+
+
+grad.__is_myia_macro__ = True
+grad.__myia_macro_expand__ = _macro_expand_grad
+value_and_grad.__is_myia_macro__ = True
+value_and_grad.__myia_macro_expand__ = _macro_expand_vag

@@ -1,0 +1,483 @@
+"""Graph-based direct intermediate representation (the paper's §3).
+
+A *function* is a :class:`Graph` with a list of parameter nodes and a single
+return node (multiple return values via tuples).  A :class:`Node` is either
+
+* an **apply** node: an ordered list of incoming edges; the first edge points
+  to the function being applied, the rest to its arguments,
+* a **parameter** node: belongs to exactly one graph,
+* a **constant** node: no incoming edges, carries a ``value`` (a Python
+  scalar, array, :class:`Primitive <repro.core.primitives.Primitive>`, or a
+  :class:`Graph` — graphs are first-class values).
+
+Links are bidirectional (``node.users``) so graphs can be traversed either
+way.  Free variables are represented *directly*: an apply node belonging to
+graph ``G`` may point at a node owned by a different graph ``P``, which makes
+``G`` implicitly nested inside ``P`` (the Thorin-style closure representation
+of the paper §3 "Closure representation").
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Any, Callable, Iterable, Iterator
+
+__all__ = [
+    "Node",
+    "Apply",
+    "Parameter",
+    "Constant",
+    "Graph",
+    "GraphCloner",
+    "is_constant",
+    "is_constant_graph",
+    "is_constant_prim",
+    "is_apply",
+    "is_parameter",
+    "toposort",
+    "dfs_nodes",
+    "succ_incoming",
+    "free_variables",
+    "graphs_used",
+    "graph_and_descendants",
+]
+
+_counter = itertools.count()
+
+
+class Node:
+    """Base class for IR nodes."""
+
+    __slots__ = ("graph", "abstract", "debug_name", "_id", "users")
+
+    def __init__(self, graph: "Graph | None", debug_name: str = "") -> None:
+        self.graph = graph
+        #: inferred abstract value (types/shapes/values), set by ``infer``
+        self.abstract = None
+        self.debug_name = debug_name
+        self._id = next(_counter)
+        #: set of ``(user_node, input_index)`` pairs, maintained by Graph ops
+        self.users: set[tuple["Node", int]] = set()
+
+    # -- classification helpers ------------------------------------------
+    @property
+    def is_apply(self) -> bool:
+        return isinstance(self, Apply)
+
+    @property
+    def is_parameter(self) -> bool:
+        return isinstance(self, Parameter)
+
+    @property
+    def is_constant(self) -> bool:
+        return isinstance(self, Constant)
+
+    @property
+    def inputs(self) -> list["Node"]:
+        return []
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        name = self.debug_name or f"%{self._id}"
+        return f"<{type(self).__name__} {name}>"
+
+
+class Apply(Node):
+    """Function application: ``inputs[0]`` is the callee, the rest args."""
+
+    __slots__ = ("_inputs",)
+
+    def __init__(self, inputs: list[Node], graph: "Graph", debug_name: str = "") -> None:
+        super().__init__(graph, debug_name)
+        self._inputs: list[Node] = []
+        for i, inp in enumerate(inputs):
+            self._inputs.append(inp)
+            inp.users.add((self, i))
+
+    @property
+    def inputs(self) -> list[Node]:
+        return self._inputs
+
+    @property
+    def fn(self) -> Node:
+        return self._inputs[0]
+
+    @property
+    def args(self) -> list[Node]:
+        return self._inputs[1:]
+
+    def set_input(self, index: int, new: Node) -> None:
+        old = self._inputs[index]
+        old.users.discard((self, index))
+        self._inputs[index] = new
+        new.users.add((self, index))
+
+
+class Parameter(Node):
+    __slots__ = ()
+
+    def __init__(self, graph: "Graph", debug_name: str = "") -> None:
+        super().__init__(graph, debug_name)
+
+
+class Constant(Node):
+    """A constant value.  ``value`` may be a Graph (first-class functions)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self, value: Any, debug_name: str = "") -> None:
+        super().__init__(None, debug_name)
+        self.value = value
+
+    def __repr__(self) -> str:  # pragma: no cover
+        from .primitives import Primitive
+
+        if isinstance(self.value, Graph):
+            return f"<Const graph:{self.value.name}>"
+        if isinstance(self.value, Primitive):
+            return f"<Const prim:{self.value.name}>"
+        return f"<Const {self.value!r}>"
+
+
+def is_constant(node: Node) -> bool:
+    return isinstance(node, Constant)
+
+
+def is_constant_graph(node: Node) -> bool:
+    return isinstance(node, Constant) and isinstance(node.value, Graph)
+
+
+def is_constant_prim(node: Node, prim: Any = None) -> bool:
+    from .primitives import Primitive
+
+    if not (isinstance(node, Constant) and isinstance(node.value, Primitive)):
+        return False
+    return prim is None or node.value is prim
+
+
+def is_apply(node: Node, prim: Any = None) -> bool:
+    if not isinstance(node, Apply):
+        return False
+    return prim is None or is_constant_prim(node.fn, prim)
+
+
+def is_parameter(node: Node) -> bool:
+    return isinstance(node, Parameter)
+
+
+class Graph:
+    """A function: parameter nodes + a return node.
+
+    Graphs are first-class: wrap one in a :class:`Constant` to pass it as a
+    value.  ``flags`` carries parse/transform metadata (e.g. source info).
+    """
+
+    __slots__ = (
+        "name",
+        "parameters",
+        "return_",
+        "flags",
+        "parent_hint",
+        "_id",
+        "primal",
+        "transforms",
+    )
+
+    def __init__(self, name: str = "") -> None:
+        self._id = next(_counter)
+        self.name = name or f"g{self._id}"
+        self.parameters: list[Parameter] = []
+        self.return_: Node | None = None
+        self.flags: dict[str, Any] = {}
+        #: graph this one was created inside of (scoping hint from the parser)
+        self.parent_hint: "Graph | None" = None
+        #: if this graph was produced by a transform, its source graph
+        self.primal: "Graph | None" = None
+        #: cache of graph transforms, e.g. {"grad": <Graph>}
+        self.transforms: dict[str, Any] = {}
+
+    # -- construction helpers --------------------------------------------
+    def add_parameter(self, debug_name: str = "") -> Parameter:
+        p = Parameter(self, debug_name)
+        self.parameters.append(p)
+        return p
+
+    def apply(self, *inputs: Any, debug_name: str = "") -> Apply:
+        """Create an apply node in this graph.  Non-Node inputs are wrapped
+        in Constants (Graph/Primitive/array/scalar values alike)."""
+        nodes = [i if isinstance(i, Node) else Constant(i) for i in inputs]
+        return Apply(nodes, self, debug_name)
+
+    def constant(self, value: Any) -> Constant:
+        return Constant(value)
+
+    def set_return(self, node: Node) -> None:
+        self.return_ = node
+
+    # -- queries -----------------------------------------------------------
+    def nodes(self) -> list[Node]:
+        """All nodes reachable from the return node (incl. nested-graph uses)."""
+        return list(dfs_nodes(self.return_))
+
+    def local_nodes(self) -> list[Node]:
+        return [n for n in self.nodes() if n.graph is self]
+
+    def free_variables(self) -> list[Node]:
+        return free_variables(self)
+
+    def child_graphs(self) -> set["Graph"]:
+        """Graphs referenced as constants anywhere below this graph."""
+        return graphs_used(self)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"<Graph {self.name}>"
+
+
+# ---------------------------------------------------------------------------
+# Traversals
+# ---------------------------------------------------------------------------
+
+
+def succ_incoming(node: Node) -> Iterable[Node]:
+    """Successors following incoming edges, *entering* nested graphs."""
+    if isinstance(node, Apply):
+        yield from node.inputs
+    elif isinstance(node, Constant) and isinstance(node.value, Graph):
+        g = node.value
+        if g.return_ is not None:
+            yield g.return_
+        # parameters are roots; reachable via uses inside the body anyway
+
+
+def dfs_nodes(root: Node | None) -> Iterator[Node]:
+    """Depth-first over nodes reachable from ``root``, entering graph
+    constants (so the whole *graph family* below a node is visited)."""
+    if root is None:
+        return
+    seen: set[int] = set()
+    stack = [root]
+    while stack:
+        node = stack.pop()
+        if id(node) in seen:
+            continue
+        seen.add(id(node))
+        yield node
+        stack.extend(succ_incoming(node))
+
+
+def toposort(graph: Graph) -> list[Node]:
+    """Topological order of the nodes *owned by* ``graph`` (dependencies
+    first).  Nested graphs and free variables count as leaves."""
+    order: list[Node] = []
+    seen: set[int] = set()
+    # iterative post-order
+    stack: list[tuple[Node, bool]] = [(graph.return_, False)]
+    while stack:
+        node, processed = stack.pop()
+        if processed:
+            if node.graph is graph:
+                order.append(node)
+            continue
+        if id(node) in seen:
+            continue
+        seen.add(id(node))
+        stack.append((node, True))
+        if isinstance(node, Apply) and node.graph is graph:
+            for inp in node.inputs:
+                if id(inp) not in seen:
+                    stack.append((inp, False))
+    return order
+
+
+def graphs_used(graph: Graph) -> set[Graph]:
+    """All graphs appearing as constants in ``graph``'s reachable family."""
+    out: set[Graph] = set()
+    for node in dfs_nodes(graph.return_):
+        if is_constant_graph(node):
+            out.add(node.value)
+    return out
+
+
+def graph_and_descendants(graph: Graph) -> set[Graph]:
+    # dfs_nodes already enters graph constants transitively, so ONE dfs
+    # covers the whole family (the per-graph re-walk was O(F·N)).
+    out: set[Graph] = {graph}
+    for node in dfs_nodes(graph.return_):
+        if is_constant_graph(node):
+            out.add(node.value)
+    return out
+
+
+def direct_free_variables(graph: Graph) -> list[Node]:
+    """Nodes referenced by ``graph``'s own applies — or as its return node —
+    but owned by some other graph (one level; no nested propagation)."""
+    fvs: dict[int, Node] = {}
+    ret = graph.return_
+    if ret is not None and ret.graph is not None and ret.graph is not graph:
+        fvs[ret._id] = ret
+    for node in graph.nodes():
+        if isinstance(node, Apply) and node.graph is graph:
+            for inp in node.inputs:
+                if inp.graph is not None and inp.graph is not graph:
+                    fvs[inp._id] = inp
+    return [fvs[k] for k in sorted(fvs)]
+
+
+def free_variables(graph: Graph) -> list[Node]:
+    """Transitive free variables of ``graph``: every node owned by an
+    *enclosing* scope that ``graph`` — or any graph it references, directly
+    or transitively — may capture.  Computed as a least fixpoint over the
+    graph-reference relation (recursion through an enclosing graph must not
+    make that graph's locals look bound — see tests/core/test_ir.py)."""
+    # collect the reference closure
+    graphs = graph_and_descendants(graph)
+    direct: dict[Graph, set[Node]] = {}
+    refs: dict[Graph, set[Graph]] = {}
+    for g in graphs:
+        direct[g] = {n for n in direct_free_variables(g)}
+        refs[g] = set()
+        for node in dfs_nodes(g.return_):
+            if isinstance(node, Apply) and node.graph is g:
+                for inp in node.inputs:
+                    if is_constant_graph(inp):
+                        refs[g].add(inp.value)
+    fv: dict[Graph, set[Node]] = {g: set(direct[g]) for g in graphs}
+    changed = True
+    while changed:
+        changed = False
+        for g in graphs:
+            acc = set(direct[g])
+            for h in refs[g]:
+                acc |= fv.get(h, set())
+            acc = {n for n in acc if n.graph is not g}
+            if acc != fv[g]:
+                fv[g] = acc
+                changed = True
+    out = {n._id: n for n in fv[graph]}
+    return [out[k] for k in sorted(out)]
+
+
+# ---------------------------------------------------------------------------
+# Cloning
+# ---------------------------------------------------------------------------
+
+
+class GraphCloner:
+    """Clone a graph family, remapping internal references.
+
+    ``inline_target``: if given, nodes of the root graph are created inside
+    that graph instead of a fresh one (used by the inliner), and parameters
+    are replaced by ``param_map`` values.
+    """
+
+    def __init__(
+        self,
+        root: Graph,
+        *,
+        inline_target: Graph | None = None,
+        param_repl: dict[Node, Node] | None = None,
+        relabel: str = "",
+    ) -> None:
+        self.root = root
+        self.inline_target = inline_target
+        self.param_repl = param_repl or {}
+        self.relabel = relabel
+        self.node_map: dict[int, Node] = {}
+        self.graph_map: dict[Graph, Graph] = {}
+        self.family = graph_and_descendants(root)
+
+    def clone(self) -> Graph:
+        new_root = self._clone_graph_shell(self.root, inline=self.inline_target)
+        for g in self.family:
+            if g is self.root and self.inline_target is not None:
+                continue
+            self._clone_graph_shell(g)
+        # clone bodies
+        for g in self.family:
+            tgt = self.graph_map[g]
+            new_ret = self._clone_node(g.return_, g)
+            if not (g is self.root and self.inline_target is not None):
+                tgt.set_return(new_ret)
+            else:
+                # inline: stash the return value for the caller to fetch
+                self.inlined_return = new_ret
+        self._remap_symbolic_keys()
+        return new_root
+
+    def _remap_symbolic_keys(self) -> None:
+        """Symbolic keys referencing cloned nodes must point at the clones,
+        or gradient environments written by a cloned adjoint would not match
+        the keys used by its (also cloned) unpackers."""
+        from .values import SymbolicKey
+
+        for new in self.node_map.values():
+            if isinstance(new, Constant) and isinstance(new.value, SymbolicKey):
+                target = self.node_map.get(new.value.node._id)
+                if target is not None:
+                    new.value = SymbolicKey(target)
+
+    def _clone_graph_shell(self, g: Graph, inline: Graph | None = None) -> Graph:
+        if g in self.graph_map:
+            return self.graph_map[g]
+        if inline is not None:
+            self.graph_map[g] = inline
+            for p in g.parameters:
+                self.node_map[p._id] = self.param_repl[p]
+            return inline
+        ng = Graph(g.name + self.relabel)
+        ng.flags = dict(g.flags)
+        ng.primal = g.primal
+        ng.parent_hint = g.parent_hint
+        self.graph_map[g] = ng
+        for p in g.parameters:
+            np_ = ng.add_parameter(p.debug_name)
+            np_.abstract = p.abstract
+            self.node_map[p._id] = np_
+        return ng
+
+    def _clone_node(self, node: Node, owner: Graph) -> Node:
+        """Iterative post-order clone (deep graphs must not hit the Python
+        recursion limit)."""
+        if node._id in self.node_map:
+            return self.node_map[node._id]
+        stack: list[tuple[Node, bool]] = [(node, False)]
+        while stack:
+            cur, ready = stack.pop()
+            if cur._id in self.node_map:
+                continue
+            if isinstance(cur, Constant):
+                if isinstance(cur.value, Graph) and cur.value in self.family:
+                    new = Constant(self.graph_map[cur.value], cur.debug_name)
+                else:
+                    new = Constant(self.value_clone(cur.value), cur.debug_name)
+                new.abstract = cur.abstract
+                self.node_map[cur._id] = new
+                continue
+            if isinstance(cur, Parameter):
+                # parameter of a graph outside the family: free variable
+                self.node_map[cur._id] = cur
+                continue
+            assert isinstance(cur, Apply)
+            if cur.graph not in self.family:
+                # apply owned by an enclosing graph: free variable — keep
+                self.node_map[cur._id] = cur
+                continue
+            if ready:
+                new_inputs = [self.node_map[i._id] for i in cur.inputs]
+                new = Apply(new_inputs, self.graph_map[cur.graph], cur.debug_name)
+                new.abstract = cur.abstract
+                self.node_map[cur._id] = new
+            else:
+                stack.append((cur, True))
+                for i in cur.inputs:
+                    if i._id not in self.node_map:
+                        stack.append((i, False))
+        return self.node_map[node._id]
+
+    def value_clone(self, value: Any) -> Any:
+        """Hook: values that must be remapped on clone (e.g. symbolic env
+        keys referencing nodes) override this via subclassing in ad.py."""
+        return value
+
+
+def clone_graph(graph: Graph, relabel: str = "") -> Graph:
+    return GraphCloner(graph, relabel=relabel).clone()

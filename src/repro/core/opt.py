@@ -1,0 +1,397 @@
+"""Ahead-of-time optimization of IR graphs (paper §4.3).
+
+The AD transform produces graphs "substantially larger than the original
+source … many computations that are not necessary, such as gradients with
+respect to constants, and a lot of tuple packing and unpacking.  These
+graphs can be simplified using inlining and local optimizations."  (paper
+§4.3 / Figure 1.)  This module implements exactly that:
+
+* **inlining** of non-recursive graphs called through constants,
+* **local rules**: tuple getitem/setitem cancellation, gradient-environment
+  cancellation (``env_getitem(env_setitem(e,k,v),k,d) → v`` — this is what
+  erases the Env machinery from first-order adjoints), switch-of-constant,
+  algebraic simplification, constant folding, ``gadd``-with-zero removal,
+* **shape-directed rules** using inferred abstracts (``shape(x) → const``,
+  ``unbroadcast(d, shp) → d`` when shapes already agree) — these complete
+  the Figure-1 collapse of the adjoint of ``x ** 3`` to ``3·x²``.
+
+Dead code needs no explicit pass: execution and node counts only ever
+follow edges from the return node, so orphaned computation simply vanishes
+(the VM is demand-driven; ``reachable_nodes`` is the metric).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import numpy as np
+
+from . import primitives as P
+from .ir import (
+    Apply,
+    Constant,
+    Graph,
+    GraphCloner,
+    Node,
+    dfs_nodes,
+    graph_and_descendants,
+    is_apply,
+    is_constant_graph,
+    is_constant_prim,
+)
+from .infer import AArray, AScalar, ATuple  # noqa: F401 (ATuple used in folding)
+from .primitives import Primitive
+from .values import EnvInstance, SymbolicKey
+
+__all__ = ["optimize", "reachable_nodes", "count_nodes"]
+
+
+def reachable_nodes(graph: Graph) -> list[Node]:
+    return list(dfs_nodes(graph.return_))
+
+
+def count_nodes(graph: Graph) -> int:
+    return len(reachable_nodes(graph))
+
+
+# ---------------------------------------------------------------------------
+# Rewriting machinery
+# ---------------------------------------------------------------------------
+
+
+class _Rewriter:
+    def __init__(self, root: Graph, max_inline_size: int | None) -> None:
+        self.root = root
+        self.max_inline_size = max_inline_size
+        self.changed = False
+        self._fam: set[Graph] | None = None
+        self._desc_cache: dict[Graph, set[Graph]] = {}
+        self._rec_cache: dict[Graph, bool] = {}
+        self._safe_cache: dict[Graph, bool] = {}
+
+    # -- helpers -----------------------------------------------------------
+    def family(self) -> set[Graph]:
+        # cached: membership only changes when inlining clones graphs
+        # (invalidate_family below); local rewrites can orphan graphs but
+        # scanning an orphan is merely wasted work, never unsound.
+        if self._fam is None:
+            self._fam = graph_and_descendants(self.root)
+        return self._fam
+
+    def invalidate_family(self) -> None:
+        self._fam = None
+        self._desc_cache.clear()
+        self._rec_cache.clear()
+        self._safe_cache.clear()
+
+    def replace(self, old: Node, new: Node) -> None:
+        for user, idx in list(old.users):
+            user.set_input(idx, new)
+        for g in self.family():
+            if g.return_ is old:
+                g.set_return(new)
+        self.changed = True
+
+    # -- inlining -----------------------------------------------------------
+    def _desc(self, g: Graph) -> set[Graph]:
+        if g not in self._desc_cache:
+            self._desc_cache[g] = graph_and_descendants(g)
+        return self._desc_cache[g]
+
+    def _is_recursive(self, g: Graph) -> bool:
+        """Can ``g`` reach a reference to itself?  Uses the SAME
+        reachability the cloner uses (dfs entering graph constants AND
+        free-variable pointers into other graphs), so classification and
+        clone scope can never disagree."""
+        hit = self._rec_cache.get(g)
+        if hit is None:
+            hit = any(
+                is_constant_graph(n) and n.value is g for n in dfs_nodes(g.return_)
+            )
+            self._rec_cache[g] = hit
+        return hit
+
+    def _inline_safe(self, callee: Graph) -> bool:
+        """A callee may be inlined only if nothing recursive is reachable
+        from it: the cloner deep-copies ``graph_and_descendants(callee)``,
+        and duplicating a recursive cycle exposes a fresh entry wrapper
+        every wave — unbounded peeling of the recursion."""
+        hit = self._safe_cache.get(callee)
+        if hit is None:
+            hit = not any(self._is_recursive(h) for h in self._desc(callee))
+            self._safe_cache[callee] = hit
+        return hit
+
+    def _family_has_recursion(self) -> bool:
+        """Value-based partial evaluation is gated on this: the inferencer's
+        value inference is frame-insensitive for closures (AFunction joins
+        dedup closure specs by graph), so in RECURSIVE families an interior
+        node can be annotated with a base-case frame's value — folding it
+        would be unsound.  Non-recursive families keep full constant
+        propagation (the Figure-1 collapse)."""
+        return not self._inline_safe(self.root)
+
+    def inline_pass(self, max_waves: int = 64) -> bool:
+        """Wave-based inlining: one dfs collects every eligible call site,
+        all are inlined, repeat until a wave finds none.
+
+        Inlining a non-recursive callee cannot create a cycle among
+        pre-existing graphs (clones only *reference* graphs), so the
+        recursive set computed at wave start stays valid for the wave; it
+        is recomputed next wave so recursive clones are re-classified (or
+        recursion would unroll forever)."""
+        changed = False
+        for _ in range(max_waves):
+            fam = self.family()
+            targets: list[Apply] = []
+            for n in dfs_nodes(self.root.return_):
+                if (
+                    isinstance(n, Apply)
+                    and n.graph in fam
+                    and is_constant_graph(n.fn)
+                    and n.fn.value is not n.graph
+                    and self._inline_safe(n.fn.value)
+                ):
+                    callee = n.fn.value
+                    if callee.return_ is None:
+                        continue
+                    if (
+                        self.max_inline_size is not None
+                        and count_nodes(callee) > self.max_inline_size
+                    ):
+                        continue
+                    if len(callee.parameters) != len(n.args):
+                        continue  # arity error: leave for runtime
+                    targets.append(n)
+            if not targets:
+                return changed
+            for n in targets:
+                if not is_constant_graph(n.fn):
+                    continue  # rewritten by an earlier inline this wave
+                callee = n.fn.value
+                param_repl = dict(zip(callee.parameters, n.args))
+                cloner = GraphCloner(callee, inline_target=n.graph, param_repl=param_repl)
+                cloner.clone()  # (remaps symbolic env keys internally)
+                self.replace(n, cloner.inlined_return)
+                changed = True
+                self.changed = True
+            self.invalidate_family()  # clones added graphs
+        return changed
+
+    # -- local rules ----------------------------------------------------------
+    def rules_pass(self) -> bool:
+        changed = False
+        work = True
+        while work:
+            work = False
+            # one dfs over the whole family (dfs_nodes enters graph
+            # constants); per-graph re-walks were O(F·N)
+            for n in list(dfs_nodes(self.root.return_)):
+                if not (isinstance(n, Apply) and n.graph is not None):
+                    continue
+                new = self.try_rules(n)
+                if new is not None:
+                    self.replace(n, new)
+                    work = True
+                    changed = True
+        return changed
+
+    def try_rules(self, n: Apply) -> Node | None:
+        fn = n.fn
+        if not (isinstance(fn, Constant) and isinstance(fn.value, Primitive)):
+            return None
+        p: Primitive = fn.value
+        a = n.args
+
+        # partial evaluation: the inferencer proved the value (paper §4.2,
+        # "It can infer types as well as values (constant propagation)").
+        # Gated off in recursive families — see _family_has_recursion.
+        if p not in (P.env_setitem, P.env_getitem) and not self._family_has_recursion():
+            known = _known_abstract_value(n.abstract)
+            if known is not _NO_VALUE:
+                return Constant(known)
+
+        if p is P.tuple_getitem and len(a) == 2 and isinstance(a[1], Constant):
+            idx = a[1].value
+            src = a[0]
+            if is_apply(src, P.make_tuple):
+                if not (isinstance(idx, int) and -len(src.args) <= idx < len(src.args)):
+                    return None  # stale/dead node from the sweep snapshot
+                return src.args[idx]
+            if is_apply(src, P.tuple_setitem) and isinstance(src.args[1], Constant):
+                if src.args[1].value == idx:
+                    return src.args[2]
+                return n.graph.apply(P.tuple_getitem, src.args[0], idx)
+            if isinstance(src, Constant) and isinstance(src.value, tuple):
+                return Constant(src.value[idx])
+
+        if p is P.env_getitem and len(a) == 3:
+            env, key, dflt = a
+            if isinstance(key, Constant):
+                if is_apply(env, P.env_setitem) and isinstance(env.args[1], Constant):
+                    if env.args[1].value == key.value:
+                        return env.args[2]
+                    return n.graph.apply(P.env_getitem, env.args[0], key, dflt)
+                if isinstance(env, Constant) and isinstance(env.value, EnvInstance):
+                    if len(env.value) == 0:
+                        return dflt
+
+        if p is P.switch and len(a) == 3 and isinstance(a[0], Constant):
+            if a[0].value is True:
+                return a[1]
+            if a[0].value is False:
+                return a[2]
+
+        if p is P.gadd and len(a) == 2:
+            for i, j in ((0, 1), (1, 0)):
+                z = a[i]
+                if isinstance(z, Constant) and (
+                    z.value is None
+                    or (isinstance(z.value, (int, float)) and z.value == 0)
+                ):
+                    return a[j]
+                if is_apply(z, P.zeros_like):
+                    return a[j]
+
+        # algebraic: x+0, x-0, x*1, x/1, --x  (scalar literal identities only:
+        # they cannot change the broadcast shape of the result)
+        if p in (P.add, P.sub) and len(a) == 2:
+            if _is_scalar_const(a[1], 0):
+                return a[0]
+            if p is P.add and _is_scalar_const(a[0], 0):
+                return a[1]
+        if p in (P.mul, P.div) and len(a) == 2:
+            if _is_scalar_const(a[1], 1):
+                return a[0]
+            if p is P.mul and _is_scalar_const(a[0], 1):
+                return a[1]
+        if p in (P.power, P.integer_pow) and len(a) == 2 and _is_scalar_const(a[1], 1):
+            return a[0]
+        if p is P.neg and is_apply(a[0], P.neg):
+            return a[0].args[0]
+
+        # shape-directed rules (need inferred abstracts)
+        if p is P.shape and len(a) == 1:
+            ab = a[0].abstract
+            if isinstance(ab, AArray):
+                return Constant(tuple(ab.shape))
+            if isinstance(ab, AScalar) and ab.kind in ("int", "float", "bool"):
+                return Constant(())
+        if p is P.dtype_of and len(a) == 1:
+            ab = a[0].abstract
+            if isinstance(ab, AArray):
+                return Constant(ab.dtype)
+        if p in (P.unbroadcast, P.broadcast_to) and len(a) == 2 and isinstance(a[1], Constant):
+            ab = a[0].abstract
+            if isinstance(ab, AArray) and tuple(ab.shape) == tuple(a[1].value):
+                return a[0]
+            if (
+                isinstance(ab, AScalar)
+                and ab.kind in ("int", "float")
+                and tuple(a[1].value) == ()
+            ):
+                return a[0]
+        if p is P.cast and len(a) == 2 and isinstance(a[1], Constant):
+            ab = a[0].abstract
+            if isinstance(ab, AArray) and ab.dtype == np.dtype(a[1].value):
+                return a[0]
+        if p is P.reshape and len(a) == 2 and isinstance(a[1], Constant):
+            ab = a[0].abstract
+            if isinstance(ab, AArray) and tuple(ab.shape) == tuple(a[1].value):
+                return a[0]
+
+        # constant folding (pure, cheap prims on python scalars/tuples;
+        # results may be tiny arrays, e.g. cast(1.0, f32))
+        if p in _FOLDABLE and all(isinstance(x, Constant) for x in a):
+            vals = [x.value for x in a]
+            if all(_foldable_value(v) for v in vals):
+                try:
+                    res = p.impl(*vals)
+                except Exception:
+                    return None
+                if _foldable_value(res) or _tiny_array(res):
+                    return Constant(res)
+        return None
+
+
+_NO_VALUE = object()
+
+
+def _known_abstract_value(ab: Any) -> Any:
+    """Extract a fully-known python value from an inferred abstract."""
+    if isinstance(ab, AScalar) and ab.known() and ab.kind in (
+        "int", "float", "bool", "str", "none", "dtype"
+    ):
+        return ab.value
+    if isinstance(ab, ATuple):
+        vals = []
+        for e in ab.elements:
+            v = _known_abstract_value(e)
+            if v is _NO_VALUE:
+                return _NO_VALUE
+            vals.append(v)
+        return tuple(vals)
+    return _NO_VALUE
+
+
+def _tiny_array(v: Any) -> bool:
+    return hasattr(v, "shape") and hasattr(v, "size") and v.size <= 16
+
+
+def _is_scalar_const(node: Node, val: float) -> bool:
+    """Literal scalar ``val``, possibly behind a cast (``cast(1.0, dt)``) or
+    as a 0-d array constant — identities that cannot change broadcasting."""
+    if is_apply(node, P.cast) and len(node.args) == 2:
+        return _is_scalar_const(node.args[0], val)
+    if not isinstance(node, Constant):
+        return False
+    v = node.value
+    if isinstance(v, (int, float)) and not isinstance(v, bool):
+        return v == val
+    if _tiny_array(v) and getattr(v, "ndim", None) == 0:
+        try:
+            return float(v) == val
+        except Exception:
+            return False
+    return False
+
+
+def _foldable_value(v: Any) -> bool:
+    if isinstance(v, (int, float, bool, str, np.dtype)) or v is None:
+        return True
+    if isinstance(v, tuple):
+        return all(_foldable_value(x) for x in v)
+    return False
+
+
+_FOLDABLE = {
+    P.add, P.sub, P.mul, P.div, P.floordiv, P.mod, P.neg, P.power,
+    P.lt, P.gt, P.le, P.ge, P.eq, P.ne, P.bool_and, P.bool_or, P.bool_not,
+    P.maximum, P.minimum, P.tuple_getitem, P.tuple_setitem, P.tuple_len,
+    P.make_tuple, P.invert_permutation, P.axes_size, P.absolute, P.cast,
+    P.dtype_of, P.integer_pow,
+}
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+
+def optimize(
+    graph: Graph,
+    *,
+    inline: bool = True,
+    max_inline_size: int | None = None,
+    max_iterations: int = 50,
+) -> Graph:
+    """Optimize ``graph`` in place (and return it)."""
+    rw = _Rewriter(graph, max_inline_size)
+    for _ in range(max_iterations):
+        changed = False
+        if inline:
+            changed |= rw.inline_pass()
+        changed |= rw.rules_pass()
+        if not changed:
+            break
+    return graph

@@ -1,0 +1,171 @@
+"""Distributed execution: jitted train/serve steps with full sharding.
+
+``make_train_step``/``make_serve_fns`` close over a ModelConfig and build
+the pure step functions; ``jit_train_step`` etc. attach in/out shardings
+derived from :mod:`repro.distributed.sharding` under an active
+MeshContext and donate the state buffers.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import ModelConfig, decode_step, init_params, loss_fn, prefill
+from repro.optim import OptConfig, Optimizer, make_optimizer
+from repro.parallel import MeshContext
+from .sharding import batch_specs, make_rules, param_specs, tree_specs
+
+__all__ = [
+    "make_train_state_fn",
+    "make_train_step",
+    "make_serve_fns",
+    "state_shardings",
+    "jit_train_step",
+    "jit_prefill",
+    "jit_decode_step",
+    "make_rules",
+]
+
+
+def make_train_state_fn(cfg: ModelConfig, opt: Optimizer):
+    def init_state(rng=None):
+        rng = jax.random.PRNGKey(0) if rng is None else rng
+        params = init_params(cfg, rng)
+        return {"params": params, "opt": opt.init(params), "step": jnp.zeros((), jnp.int32)}
+
+    return init_state
+
+
+def make_train_step(cfg: ModelConfig, opt: Optimizer):
+    def train_step(state, batch):
+        def lossf(p):
+            loss, metrics = loss_fn(cfg, p, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(lossf, has_aux=True)(state["params"])
+        new_params, new_opt, opt_metrics = opt.update(
+            grads, state["opt"], state["params"], state["step"]
+        )
+        new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        return new_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_serve_fns(cfg: ModelConfig, max_len: int):
+    def prefill_fn(params, tokens, extras=None):
+        return prefill(cfg, params, tokens, max_len, batch_extras=extras)
+
+    def decode_fn(params, caches, token, pos):
+        logits, new_caches = decode_step(cfg, params, token, pos, caches)
+        return logits, new_caches
+
+    return prefill_fn, decode_fn
+
+
+# ---------------------------------------------------------------------------
+# Sharded jit wrappers
+# ---------------------------------------------------------------------------
+
+
+def state_shardings(cfg: ModelConfig, ctx: MeshContext, state: Any) -> Any:
+    """NamedShardings for a full train state (params + optimizer + step)."""
+    pspecs = param_specs(cfg, state["params"], ctx)
+    ospecs = tree_specs(pspecs, state["opt"], state["params"])
+    specs = {"params": pspecs, "opt": ospecs, "step": P()}
+    return jax.tree.map(
+        lambda s: NamedSharding(ctx.mesh, s), specs, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def jit_train_step(cfg: ModelConfig, opt: Optimizer, ctx: MeshContext, state_sds, batch_sds):
+    """AOT-shardable train step: returns (jitted_fn, state_shardings)."""
+    step = make_train_step(cfg, opt)
+    st_sh = state_shardings(cfg, ctx, state_sds)
+    b_sh = jax.tree.map(
+        lambda s: NamedSharding(ctx.mesh, s),
+        batch_specs(ctx, batch_sds),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return (
+        jax.jit(
+            step,
+            in_shardings=(st_sh, b_sh),
+            out_shardings=(st_sh, None),
+            donate_argnums=(0,),
+        ),
+        st_sh,
+    )
+
+
+def jit_prefill(cfg: ModelConfig, ctx: MeshContext, max_len: int, params_sds, batch_sds):
+    prefill_fn, _ = make_serve_fns(cfg, max_len)
+    p_sh = jax.tree.map(
+        lambda s: NamedSharding(ctx.mesh, s),
+        param_specs(cfg, params_sds, ctx),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    b_sh = jax.tree.map(
+        lambda s: NamedSharding(ctx.mesh, s),
+        batch_specs(ctx, batch_sds),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return jax.jit(prefill_fn, in_shardings=(p_sh, b_sh["tokens"]), static_argnums=()), p_sh
+
+
+def cache_shardings(cfg: ModelConfig, ctx: MeshContext, cache_sds) -> Any:
+    """Decode caches: KV on (batch, kv_heads, seq-or-kv_seq, head_dim);
+    conv/ssm state on batch — mirrors the constrain() calls in the model.
+    Resolved structurally: rank-4 f32/bf16 leaves with head_dim last are KV."""
+
+    def one(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        nd = len(leaf.shape)
+        if "ssm" in keys:
+            base = ("batch", "ssm_heads", None, None)
+        elif "conv" in keys:
+            base = ("batch", None, "ssm_proj")
+        elif "cross" in keys:
+            base = ("batch", "kv_heads", None, "head_dim")
+        else:  # self-attention KV; big caches shard on the sequence dim
+            big = nd >= 4 and leaf.shape[-2] > 8192
+            base = ("batch", "kv_heads", "kv_seq" if big else None, "head_dim")
+        # right-align under scan-stacking dims; divisibility-checked
+        aligned = (None,) * (nd - len(base)) + base[-nd:] if nd < len(base) else (
+            (None,) * (nd - len(base)) + base
+        )
+        return ctx.spec(aligned, leaf.shape)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_sds)
+    return jax.tree_util.tree_unflatten(
+        treedef, [NamedSharding(ctx.mesh, one(p, l)) for p, l in flat]
+    )
+
+
+def jit_decode_step(
+    cfg: ModelConfig, ctx: MeshContext, max_len: int, params_sds, cache_sds, batch: int
+):
+    _, decode_fn = make_serve_fns(cfg, max_len)
+    p_sh = jax.tree.map(
+        lambda s: NamedSharding(ctx.mesh, s),
+        param_specs(cfg, params_sds, ctx),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    c_sh = cache_shardings(cfg, ctx, cache_sds)
+    tok_sh = NamedSharding(ctx.mesh, ctx.spec(("batch",), (batch,)))
+    pos_sh = NamedSharding(ctx.mesh, P())
+    return (
+        jax.jit(
+            decode_fn,
+            in_shardings=(p_sh, c_sh, tok_sh, pos_sh),
+            out_shardings=(None, c_sh),
+            donate_argnums=(1,),
+        ),
+        p_sh,
+        c_sh,
+    )

@@ -1,0 +1,215 @@
+"""Parameter/state sharding: pytree-path → logical axes → PartitionSpec.
+
+The resolver walks the parameter pytree produced by ``repro.models`` and
+assigns *logical* axes by path (wq → ("embed", "heads", "head_dim"), MoE
+wi → ("experts", "embed", "expert_mlp"), …), then maps logical → physical
+through the active mesh rules with a **divisibility check**: a dim that
+does not divide by its mesh axis falls back to replication (e.g. kv=8
+heads on a 16-way model axis — Megatron-style KV replication).
+
+MoE fallback: when ``num_experts`` does not divide the model axis (grok:
+8e on 16 chips) the expert-parallel axis moves to the expert FFN width
+instead, so the big tensors stay sharded.
+
+ZeRO/FSDP: optimizer state mirrors parameters, so ``tree_specs`` applied
+to the optimizer pytree shards it identically; with ``cfg.fsdp`` the
+``embed_fsdp`` logical axis additionally shards the embed dim of the big
+matrices over the data axis.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import ModelConfig
+from repro.parallel import MeshContext
+
+__all__ = ["param_specs", "param_shardings", "tree_specs", "batch_specs", "make_rules"]
+
+
+def make_rules(cfg: ModelConfig) -> dict:
+    """Config-dependent logical-axis rules layered over the defaults."""
+    return {
+        "embed_fsdp": "data" if cfg.fsdp else None,
+        # when experts don't divide the model axis, expert_mlp picks it up
+        "expert_mlp": None,
+        "experts": "model",
+    }
+
+
+def _keyname(k: Any) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def _base_axes(cfg: ModelConfig, keys: list[str], ndim: int) -> tuple:
+    """Logical axes (right-aligned) for a parameter path."""
+    if keys[0] == "encoder":
+        keys = keys[1:]
+    head = keys[0]
+    if head == "embed":
+        return ("vocab", "embed_fsdp")
+    if head == "lm_head":
+        return ("embed_fsdp", "vocab")
+    if head == "final_norm":
+        return (None,)
+    # segments/<i>/layers/<j>/<section>/.../<leaf>
+    assert head == "segments", keys
+    section = keys[4]
+    leaf = keys[-1]
+    if section in ("norm1", "norm2", "norm_x"):
+        return (None,)
+    if section in ("mixer", "cross"):
+        if leaf == "wq":
+            return ("embed_fsdp", "heads", "head_dim")
+        if leaf in ("wk", "wv"):
+            return ("embed_fsdp", "kv_heads", "head_dim")
+        if leaf == "wo":
+            return ("heads", "head_dim", "embed_fsdp")
+        # mamba mixer
+        if leaf == "in_proj":
+            return ("embed_fsdp", "ssm_proj")
+        if leaf == "out_proj":
+            return ("ssm_proj", "embed_fsdp")
+        if leaf == "conv_w":
+            return (None, "ssm_proj")
+        if leaf in ("A_log", "D_skip", "dt_bias"):
+            return ("ssm_heads",)
+        if leaf == "gate_norm":
+            return (None,)
+        raise KeyError(f"no rule for mixer leaf {leaf!r} ({keys})")
+    if section == "ffn":
+        if leaf == "router":
+            return (None, None)
+        moe = "shared" not in keys and cfg.num_experts > 0 and _is_moe_leaf(keys, ndim)
+        if moe:
+            if leaf in ("wi", "wg"):
+                return ("experts", "embed_fsdp", "expert_mlp")
+            if leaf == "wo":
+                return ("experts", "expert_mlp", "embed_fsdp")
+        if leaf in ("wi", "wg"):
+            return ("embed_fsdp", "mlp")
+        if leaf == "wo":
+            return ("mlp", "embed_fsdp")
+        raise KeyError(f"no rule for ffn leaf {leaf!r} ({keys})")
+    raise KeyError(f"no rule for path {keys}")
+
+
+def _is_moe_leaf(keys: list[str], ndim: int) -> bool:
+    # dense mlp leaves under a moe layer live at ffn/shared/...
+    return "shared" not in keys
+
+
+def _physical(
+    ctx: MeshContext, logical: Sequence[str | None], shape: tuple[int, ...]
+) -> P:
+    """Map logical axes → mesh axes with divisibility fallback; guarantees
+    no two dims claim the same mesh axis."""
+    used: set[str] = set()
+    out: list = []
+    sizes = dict(ctx.mesh.shape)
+    for dim, name in zip(shape, logical):
+        phys = None if name is None else ctx.rules.get(name)
+        if phys is None:
+            out.append(None)
+            continue
+        cand = phys if isinstance(phys, tuple) else (phys,)
+        cand = tuple(a for a in cand if a in sizes and a not in used)
+        total = int(np.prod([sizes[a] for a in cand])) if cand else 1
+        if cand and dim % total == 0:
+            out.append(cand if len(cand) > 1 else cand[0])
+            used.update(cand)
+        else:
+            out.append(None)  # replicate: not divisible / axis taken
+    return P(*out)
+
+
+def _moe_fallback(cfg: ModelConfig, ctx: MeshContext, logical: tuple, shape: tuple) -> tuple:
+    """grok-style: 8 experts on a 16-way model axis — move the model axis
+    from the expert dim to the expert-FFN width."""
+    if "experts" not in logical:
+        return logical
+    sizes = dict(ctx.mesh.shape)
+    model = ctx.rules.get("experts")
+    if model is None or model not in sizes:
+        return logical
+    e_dim = shape[len(shape) - len(logical) + logical.index("experts")]
+    if e_dim % sizes[model] == 0:
+        return logical
+    # experts → replicated; expert_mlp (the F dim) picks up the model axis
+    swapped = tuple(
+        None if a == "experts" else ("mlp" if a == "expert_mlp" else a) for a in logical
+    )
+    return swapped
+
+
+def param_specs(cfg: ModelConfig, params: Any, ctx: MeshContext) -> Any:
+    """PartitionSpec pytree matching ``params`` (arrays or SDS)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        keys = [_keyname(k) for k in path]
+        shape = tuple(leaf.shape)
+        base = _base_axes(cfg, keys, len(shape))
+        base = _moe_fallback(cfg, ctx, base, shape)
+        aligned = (None,) * (len(shape) - len(base)) + tuple(base)
+        specs.append(_physical(ctx, aligned, shape))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(cfg: ModelConfig, params: Any, ctx: MeshContext) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(ctx.mesh, s),
+        param_specs(cfg, params, ctx),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def tree_specs(specs_of_params: Any, tree: Any, params: Any) -> Any:
+    """Broadcast parameter specs onto a state pytree that *mirrors* the
+    parameter tree below some wrapper prefix (optimizer m/v, adafactor
+    dicts) — ZeRO: optimizer state shards exactly like its parameter.
+    Leaves with no matching parameter (scalars, factored adafactor rows)
+    are replicated."""
+    lookup: dict[tuple, tuple] = {}
+    pflat = jax.tree_util.tree_flatten_with_path(params)[0]
+    sleaves = jax.tree_util.tree_leaves(
+        specs_of_params, is_leaf=lambda x: isinstance(x, P)
+    )
+    for (path, leaf), spec in zip(pflat, sleaves):
+        lookup[tuple(_keyname(k) for k in path)] = (tuple(leaf.shape), spec)
+
+    def resolve(path, leaf):
+        keys = tuple(_keyname(k) for k in path)
+        shape = tuple(leaf.shape)
+        # contiguous sub-path match (strips wrapper keys like "m"/"v"),
+        # accepted only when the shape matches the parameter's
+        for start in range(len(keys)):
+            for end in range(len(keys), start, -1):
+                hit = lookup.get(keys[start:end])
+                if hit and hit[0] == shape:
+                    return hit[1]
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return jax.tree_util.tree_unflatten(treedef, [resolve(p, l) for p, l in flat])
+
+
+def batch_specs(ctx: MeshContext, batch: Any) -> Any:
+    """Input batch: batch dim → ('pod','data'); everything else replicated.
+    Divisibility-checked (a global_batch=1 long-context cell replicates)."""
+
+    def one(leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        return ctx.spec(("batch",) + (None,) * (nd - 1), leaf.shape)
+
+    return jax.tree.map(one, batch)

@@ -1,0 +1,28 @@
+"""Pallas TPU kernels for the compute hot-spots, each with a pure-jnp
+oracle (``ref.py``) and a dispatching, differentiable wrapper (``ops.py``).
+
+Kernels double as *Myia primitives with known backpropagators* — the
+paper's model for low-level code (§3: "the user can write efficient
+low-level kernels and their derivatives in a low-level language … and
+expose them to Myia as primitives").
+"""
+
+from . import ref
+from .ops import (
+    flash_attention,
+    get_kernel_mode,
+    rmsnorm,
+    set_kernel_mode,
+    ssd_scan,
+    ssd_step,
+)
+
+__all__ = [
+    "ref",
+    "flash_attention",
+    "rmsnorm",
+    "ssd_scan",
+    "ssd_step",
+    "set_kernel_mode",
+    "get_kernel_mode",
+]

@@ -1,0 +1,376 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantic ground truth: each kernel's test sweeps shapes and
+dtypes and asserts ``allclose`` against the function here.  They are also
+the *production implementation on non-TPU backends* (the dry-run lowers
+these — XLA fuses them fine on CPU; the Pallas kernels are the TPU-target
+hot-spot implementations, validated in interpret mode).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30  # finite mask value: avoids NaN rows when l == 0
+
+
+def attention_mask(
+    q_len: int,
+    kv_len: int,
+    *,
+    causal: bool,
+    window: int | None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """(q_len, kv_len) boolean visibility mask.
+
+    ``q_offset`` places the query block inside a longer sequence (decode:
+    q_len==1 at position kv_len-1).  ``window`` means position ``j`` is
+    visible from ``i`` iff ``i - j < window`` (and ``j <= i`` if causal).
+    """
+    rows = jnp.arange(q_len)[:, None] + q_offset
+    cols = jnp.arange(kv_len)[None, :]
+    mask = jnp.ones((q_len, kv_len), dtype=bool)
+    if causal:
+        mask &= rows >= cols
+    if window is not None:
+        mask &= cols > rows - window
+    return mask
+
+
+def flash_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = False,
+    window: int | None = None,
+    sm_scale: float | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Full-softmax GQA attention.
+
+    q: (B, H, Sq, D); k, v: (B, KVH, Skv, D) with H % KVH == 0.
+    Returns (B, H, Sq, D) in q.dtype; softmax/matmuls accumulate in f32.
+    """
+    B, H, Sq, D = q.shape
+    KVH = k.shape[1]
+    assert H % KVH == 0, (H, KVH)
+    group = H // KVH
+    scale = sm_scale if sm_scale is not None else 1.0 / (D**0.5)
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # expand kv heads to q heads (GQA)
+    kf = jnp.repeat(kf, group, axis=1)
+    vf = jnp.repeat(vf, group, axis=1)
+
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    mask = attention_mask(Sq, k.shape[2], causal=causal, window=window, q_offset=q_offset)
+    s = jnp.where(mask[None, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+    return o.astype(q.dtype)
+
+
+def flash_attention_ref_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = False,
+    window: int | None = None,
+    sm_scale: float | None = None,
+    block_k: int = 512,
+) -> jax.Array:
+    """Online-softmax attention in pure jnp — the XLA-compilable twin of
+    the Pallas flash kernel: O(S·D) live memory instead of the O(S²)
+    score materialization of :func:`flash_attention_ref`.
+
+    This is what the TPU kernel does per KV block, expressed as a
+    ``lax.scan`` so the same memory behaviour shows up in the dry-run's
+    bytes-accessed (hillclimb: the "memory" roofline term)."""
+    B, H, Sq, D = q.shape
+    KVH, Skv = k.shape[1], k.shape[2]
+    group = H // KVH
+    scale = sm_scale if sm_scale is not None else 1.0 / (D**0.5)
+    nb = -(-Skv // block_k)
+    pad = nb * block_k - Skv
+
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.pad(k.astype(jnp.float32), ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vf = jnp.pad(v.astype(jnp.float32), ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = kf.reshape(B, KVH, nb, block_k, D).transpose(2, 0, 1, 3, 4)
+    vb = vf.reshape(B, KVH, nb, block_k, D).transpose(2, 0, 1, 3, 4)
+
+    rows = jnp.arange(Sq)[:, None]
+
+    def step(carry, inp):
+        acc, m, l = carry  # (B,H,Sq,D), (B,H,Sq,1), (B,H,Sq,1)
+        bi, kblk, vblk = inp  # (), (B,KVH,bk,D), (B,KVH,bk,D)
+        kr = jnp.repeat(kblk, group, axis=1)
+        vr = jnp.repeat(vblk, group, axis=1)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kr)
+        cols = bi * block_k + jnp.arange(block_k)[None, :]
+        mask = cols < Skv
+        if causal:
+            mask = mask & (rows >= cols)
+        if window is not None:
+            mask = mask & (cols > rows - window)
+        s = jnp.where(mask[None, None], s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bhqk,bhkd->bhqd", p, vr)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    m0 = jnp.full((B, H, Sq, 1), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq, 1), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), (jnp.arange(nb), kb, vb))
+    out = acc / jnp.where(l == 0.0, 1.0, l)
+    return out.astype(q.dtype)
+
+
+def flash_attention_fwd_lse_chunked(
+    q, k, v, causal=False, window=None, sm_scale=None, block_k: int = 512
+):
+    """Chunked forward that also returns the row logsumexp (needed by the
+    chunked backward).  Same math as flash_attention_ref_chunked."""
+    B, H, Sq, D = q.shape
+    KVH, Skv = k.shape[1], k.shape[2]
+    group = H // KVH
+    scale = sm_scale if sm_scale is not None else 1.0 / (D**0.5)
+    nb = -(-Skv // block_k)
+    pad = nb * block_k - Skv
+
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.pad(k.astype(jnp.float32), ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vf = jnp.pad(v.astype(jnp.float32), ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = kf.reshape(B, KVH, nb, block_k, D).transpose(2, 0, 1, 3, 4)
+    vb = vf.reshape(B, KVH, nb, block_k, D).transpose(2, 0, 1, 3, 4)
+    rows = jnp.arange(Sq)[:, None]
+
+    def step(carry, inp):
+        acc, m, l = carry
+        bi, kblk, vblk = inp
+        kr = jnp.repeat(kblk, group, axis=1)
+        vr = jnp.repeat(vblk, group, axis=1)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kr)
+        cols = bi * block_k + jnp.arange(block_k)[None, :]
+        mask = cols < Skv
+        if causal:
+            mask = mask & (rows >= cols)
+        if window is not None:
+            mask = mask & (cols > rows - window)
+        s = jnp.where(mask[None, None], s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bhqk,bhkd->bhqd", p, vr)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    m0 = jnp.full((B, H, Sq, 1), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq, 1), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), (jnp.arange(nb), kb, vb))
+    lsafe = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / lsafe).astype(q.dtype)
+    lse = m + jnp.log(lsafe)
+    return out, lse
+
+
+def flash_attention_bwd_chunked(
+    q, k, v, o, lse, do, causal=False, window=None, sm_scale=None, block_k: int = 512
+):
+    """Chunked flash backward: per-KV-block recomputation from the saved
+    logsumexp — O(S·D) live memory (the naive vjp materializes O(S²)).
+
+        δ_i   = Σ_d do_id·o_id
+        p_ij  = exp(s_ij − lse_i)
+        dv_j  = Σ_i p_ij·do_i
+        ds_ij = p_ij·(do_i·v_j − δ_i)
+        dq_i += scale·Σ_j ds_ij·k_j ;  dk_j = scale·Σ_i ds_ij·q_i
+    """
+    B, H, Sq, D = q.shape
+    KVH, Skv = k.shape[1], k.shape[2]
+    group = H // KVH
+    scale = sm_scale if sm_scale is not None else 1.0 / (D**0.5)
+    nb = -(-Skv // block_k)
+    pad = nb * block_k - Skv
+
+    qf = q.astype(jnp.float32)
+    dof = do.astype(jnp.float32)
+    delta = jnp.sum(dof * o.astype(jnp.float32), axis=-1, keepdims=True)
+    kf = jnp.pad(k.astype(jnp.float32), ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vf = jnp.pad(v.astype(jnp.float32), ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = kf.reshape(B, KVH, nb, block_k, D).transpose(2, 0, 1, 3, 4)
+    vb = vf.reshape(B, KVH, nb, block_k, D).transpose(2, 0, 1, 3, 4)
+    rows = jnp.arange(Sq)[:, None]
+
+    def step(dq, inp):
+        bi, kblk, vblk = inp
+        kr = jnp.repeat(kblk, group, axis=1)  # (B,H,bk,D)
+        vr = jnp.repeat(vblk, group, axis=1)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kr) * scale
+        cols = bi * block_k + jnp.arange(block_k)[None, :]
+        mask = cols < Skv
+        if causal:
+            mask = mask & (rows >= cols)
+        if window is not None:
+            mask = mask & (cols > rows - window)
+        s = jnp.where(mask[None, None], s, _NEG_INF)
+        p = jnp.exp(s - lse)  # (B,H,q,bk); masked → 0
+        dv_r = jnp.einsum("bhqk,bhqd->bhkd", p, dof)
+        dp = jnp.einsum("bhqd,bhkd->bhqk", dof, vr)
+        ds = p * (dp - delta)
+        dq = dq + scale * jnp.einsum("bhqk,bhkd->bhqd", ds, kr)
+        dk_r = scale * jnp.einsum("bhqk,bhqd->bhkd", ds, qf)
+        # fold grouped q-heads back onto their kv head
+        dk_blk = dk_r.reshape(B, KVH, group, block_k, D).sum(axis=2)
+        dv_blk = dv_r.reshape(B, KVH, group, block_k, D).sum(axis=2)
+        return dq, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    dq, (dkb, dvb) = jax.lax.scan(step, dq0, (jnp.arange(nb), kb, vb))
+    dk = dkb.transpose(1, 2, 0, 3, 4).reshape(B, KVH, nb * block_k, D)[:, :, :Skv]
+    dv = dvb.transpose(1, 2, 0, 3, 4).reshape(B, KVH, nb * block_k, D)[:, :, :Skv]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+def ssd_scan_ref_chunked(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B: jax.Array,
+    C: jax.Array,
+    chunk: int = 256,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD in pure jnp — the XLA twin of the Pallas SSD kernel:
+    per-timestep state materialization (S×H×N×P bytes in the stepwise
+    oracle) collapses to per-chunk matmuls + a (S/L)-step state scan."""
+    Bt, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    nc = S // L
+
+    xf = x.astype(jnp.float32).reshape(Bt, nc, L, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bt, nc, L, H)
+    Af = A.astype(jnp.float32)
+    Bf = jnp.repeat(B.astype(jnp.float32), rep, axis=2).reshape(Bt, nc, L, H, N)
+    Cf = jnp.repeat(C.astype(jnp.float32), rep, axis=2).reshape(Bt, nc, L, H, N)
+
+    da = Af[None, None, None] * dtf  # (Bt,nc,L,H)
+    cum = jnp.cumsum(da, axis=2)
+
+    # intra-chunk (dual form): y_i += Σ_{j≤i} (C_i·B_j)·exp(cum_i−cum_j)·dt_j·x_j
+    seg = cum[:, :, :, None] - cum[:, :, None, :]  # (Bt,nc,L,L,H)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    s = jnp.einsum("bclhn,bcmhn->bclmh", Cf, Bf) * decay * dtf[:, :, None]
+    y = jnp.einsum("bclmh,bcmhp->bclhp", s, xf)
+
+    # inter-chunk state recurrence over nc steps
+    w = jnp.exp(cum[:, :, -1:, :] - cum) * dtf  # (Bt,nc,L,H)
+    chunk_state = jnp.einsum("bclhn,bclh,bclhp->bchnp", Bf, w, xf)
+    total_decay = jnp.exp(cum[:, :, -1])  # (Bt,nc,H)
+
+    def step(h, inp):
+        cs, td = inp  # (Bt,H,N,P), (Bt,H)
+        h_new = td[..., None, None] * h + cs
+        return h_new, h  # emit state *entering* this chunk
+
+    hT, h_in = jax.lax.scan(
+        step,
+        jnp.zeros((Bt, H, N, P), jnp.float32),
+        (chunk_state.transpose(1, 0, 2, 3, 4), total_decay.transpose(1, 0, 2)),
+    )
+    h_in = h_in.transpose(1, 0, 2, 3, 4)  # (Bt,nc,H,N,P)
+    y = y + jnp.einsum("bclhn,bclh,bchnp->bclhp", Cf, jnp.exp(cum), h_in)
+    return y.reshape(Bt, S, H, P).astype(x.dtype), hT
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm over the last axis; accumulation in f32, output in x.dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def ssd_scan_ref(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B: jax.Array,
+    C: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Mamba-2 SSD recurrence, stepwise (the unambiguous oracle).
+
+    x: (Bt, S, H, P)   token inputs per head
+    dt: (Bt, S, H)     positive step sizes
+    A: (H,)            negative per-head decay rates
+    B, C: (Bt, S, G, N) input/output projections, G groups (H % G == 0)
+
+        h_t = exp(A·dt_t)·h_{t-1} + dt_t·(B_t ⊗ x_t)     h: (H, N, P)
+        y_t = C_t · h_t                                   y: (H, P)
+
+    Returns (y, final_state) with y: (Bt, S, H, P) in x.dtype and
+    final_state: (Bt, H, N, P) in f32.
+    """
+    Bt, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    assert H % G == 0, (H, G)
+    rep = H // G
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = jnp.repeat(B.astype(jnp.float32), rep, axis=2)  # (Bt, S, H, N)
+    Cf = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp  # (H,P) (H,) (H,N) (H,N)
+        a_t = jnp.exp(Af * dt_t)  # (H,)
+        h = a_t[:, None, None] * h + dt_t[:, None, None] * b_t[:, :, None] * x_t[:, None, :]
+        y_t = jnp.einsum("hn,hnp->hp", c_t, h)
+        return h, y_t
+
+    def scan_one(xb, dtb, bb, cb):
+        h0 = jnp.zeros((H, N, P), jnp.float32)
+        hT, ys = jax.lax.scan(step, h0, (xb, dtb, bb, cb))
+        return ys, hT
+
+    ys, hT = jax.vmap(scan_one)(xf, dtf, Bf, Cf)
+    return ys.astype(x.dtype), hT
+
+
+def ssd_step_ref(
+    h: jax.Array,
+    x_t: jax.Array,
+    dt_t: jax.Array,
+    A: jax.Array,
+    B_t: jax.Array,
+    C_t: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Single decode step of the SSD recurrence.
+
+    h: (Bt, H, N, P) carried state; x_t: (Bt, H, P); dt_t: (Bt, H);
+    B_t, C_t: (Bt, G, N).  Returns (new_state, y_t: (Bt, H, P))."""
+    G = B_t.shape[1]
+    H = x_t.shape[1]
+    rep = H // G
+    bf = jnp.repeat(B_t.astype(jnp.float32), rep, axis=1)  # (Bt,H,N)
+    cf = jnp.repeat(C_t.astype(jnp.float32), rep, axis=1)
+    a = jnp.exp(A.astype(jnp.float32) * dt_t.astype(jnp.float32))  # (Bt,H)
+    h = a[..., None, None] * h + (
+        dt_t.astype(jnp.float32)[..., None, None]
+        * bf[..., :, None]
+        * x_t.astype(jnp.float32)[..., None, :]
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", cf, h)
+    return h, y.astype(x_t.dtype)

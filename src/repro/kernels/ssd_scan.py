@@ -1,0 +1,131 @@
+"""Mamba-2 SSD (state-space duality) chunked-scan Pallas kernel.
+
+TPU adaptation (DESIGN.md §3): the sequence is split into chunks of length
+``L``.  Within a chunk the recurrence is *dualized* into attention-like
+matmuls (MXU work); across chunks only the small (N × P) state is carried
+— in VMEM scratch across sequential grid steps, exactly like the flash-
+attention online-softmax carry.
+
+Per chunk (head h, group g = h // (H/G)), with a_t = A_h·dt_t and
+``cum`` the inclusive cumsum of a over the chunk:
+
+    intra:   y_i += Σ_{j≤i} (C_i·B_j) · exp(cum_i − cum_j) · dt_j · x_j
+    inter:   y_i += exp(cum_i) · C_i · h_in
+    state:   h_out = exp(cum_L) · h_in + Σ_j exp(cum_L − cum_j) · dt_j · B_j ⊗ x_j
+
+All three are (L×N)@(N×L/P) matmuls — MXU-aligned for L, N, P multiples
+of 128 (P=64 heads still fill half the MXU; acceptable).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hT_ref, h_ref, *, chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)  # (L, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # (L,)
+    a = a_ref[0].astype(jnp.float32)  # ()
+    bm = b_ref[0, :, 0].astype(jnp.float32)  # (L, N)
+    cm = c_ref[0, :, 0].astype(jnp.float32)  # (L, N)
+
+    da = a * dt  # (L,) log-decay increments (a < 0)
+    cum = jnp.cumsum(da)  # (L,) inclusive
+
+    # -- intra-chunk (dual / attention-like form) ---------------------------
+    s = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (L, L):  C_i · B_j
+    seg = cum[:, None] - cum[None, :]  # log decay j→i
+    L = x.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    decay = jnp.where(rows >= cols, jnp.exp(seg), 0.0)
+    s = s * decay * dt[None, :]
+    y = jax.lax.dot_general(
+        s, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (L, P)
+
+    # -- inter-chunk: carried state contribution ----------------------------
+    h = h_ref[...]  # (N, P) f32
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cm, h, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # -- state update --------------------------------------------------------
+    w = jnp.exp(cum[-1] - cum) * dt  # (L,)
+    h_new = jnp.exp(cum[-1]) * h + jax.lax.dot_general(
+        bm * w[:, None], x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (N, P)
+    h_ref[...] = h_new
+
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        hT_ref[0, 0] = h_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_fwd(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B: jax.Array,
+    C: jax.Array,
+    *,
+    chunk: int = 128,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """x: (Bt,S,H,P); dt: (Bt,S,H); A: (H,); B,C: (Bt,S,G,N).
+
+    Returns (y: (Bt,S,H,P) in x.dtype, final_state: (Bt,H,N,P) f32)."""
+    Bt, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    assert H % G == 0, (H, G)
+    rep = H // G
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+
+    grid = (Bt, H, S // L)
+    kwargs = {}
+    if not interpret:  # pragma: no cover - requires TPU
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        )
+    y, hT = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=L),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, L, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, L, 1, N), lambda b, h, c, r=rep: (b, c, h // r, 0)),
+            pl.BlockSpec((1, L, 1, N), lambda b, h, c, r=rep: (b, c, h // r, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((Bt, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+        name="ssd_scan_fwd",
+        **kwargs,
+    )(x, dt, A, B, C)
+    return y, hT

@@ -1,0 +1,24 @@
+"""Model zoo: one config schema, every assigned architecture family."""
+
+from .common import LayerSpec, ModelConfig
+from .model import (
+    cache_init,
+    decode_step,
+    encode,
+    forward,
+    init_params,
+    loss_fn,
+    prefill,
+)
+
+__all__ = [
+    "LayerSpec",
+    "ModelConfig",
+    "init_params",
+    "forward",
+    "loss_fn",
+    "prefill",
+    "decode_step",
+    "cache_init",
+    "encode",
+]

@@ -1,0 +1,193 @@
+"""Model configuration schema + shared building blocks (RoPE, init, norms).
+
+One :class:`ModelConfig` describes every assigned architecture family:
+dense/GQA transformers, sliding-window patterns, MoE, Mamba-2 SSM mixers,
+hybrid interleaves, encoder-decoder, and cross-attention (VLM) injection.
+The per-layer structure is an explicit list of :class:`LayerSpec`s, which
+the stack builder groups into ``lax.scan`` segments (repeating periods) to
+bound HLO size at 60+ layers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Mixer = Literal["attn", "mamba"]
+AttnKind = Literal["global", "local"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """Structure of one layer: the sequence mixer + the channel mixer."""
+
+    mixer: Mixer = "attn"
+    attn_kind: AttnKind = "global"
+    moe: bool = False
+    ffn: bool = True  # False: mixer-only layer (pure Mamba-2 stacks)
+    cross_attn: bool = False  # extra cross-attention sublayer (VLM/enc-dec)
+
+    @property
+    def tag(self) -> str:
+        return (
+            f"{self.mixer}-{self.attn_kind if self.mixer == 'attn' else 'ssm'}"
+            f"{'-moe' if self.moe else ''}{'-x' if self.cross_attn else ''}"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"  # dense | moe | hybrid | ssm | audio | vlm
+
+    # dimensions
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int | None = None  # default d_model // n_heads
+    d_ff: int = 1024
+    vocab: int = 1024
+
+    # attention
+    rope_theta: float = 10_000.0
+    local_window: int = 1024  # for attn_kind == "local"
+    attn_logit_softcap: float | None = None
+    mlp_act: str = "silu"  # silu (SwiGLU) | gelu
+
+    # layer structure: period repeated through the depth (see layer_specs())
+    layer_period: tuple[LayerSpec, ...] | None = None
+
+    # MoE
+    num_experts: int = 0
+    top_k: int = 2
+    moe_d_ff: int | None = None  # expert FFN width (default d_ff)
+    shared_experts: int = 0  # always-on experts alongside routed ones
+    capacity_factor: float = 1.25  # GShard token-choice capacity
+
+    # Mamba-2 (SSM mixers)
+    ssm_state: int = 128  # N
+    ssm_head_dim: int = 64  # P
+    ssm_expand: int = 2  # d_inner = expand * d_model
+    conv_kernel: int = 4
+
+    # encoder-decoder (whisper)
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+
+    # VLM cross-attention injection
+    cross_attn_period: int = 0  # 0 = none; k = every k-th layer gets cross-attn
+    num_image_tokens: int = 1024
+
+    # dtypes / numerics
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+
+    # distribution hints (consumed by repro.distributed)
+    fsdp: bool = False  # additionally shard params over the data axis
+    remat: bool = True  # activation checkpointing on layer blocks
+    scan_layers: bool = True  # lax.scan over repeated periods
+
+    # -- derived -------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def pdtype(self) -> jnp.dtype:
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self) -> jnp.dtype:
+        return jnp.dtype(self.compute_dtype)
+
+    def layer_specs(self) -> list[LayerSpec]:
+        """The full depth-wise layer list, from the period."""
+        period = self.layer_period or (LayerSpec(),)
+        out = [period[i % len(period)] for i in range(self.n_layers)]
+        if self.cross_attn_period:
+            out = [
+                dataclasses.replace(
+                    s, cross_attn=((i + 1) % self.cross_attn_period == 0)
+                )
+                for i, s in enumerate(out)
+            ]
+        return out
+
+    def scan_segments(self) -> list[tuple[tuple[LayerSpec, ...], int]]:
+        """Group the depth into (pattern, repeat) segments for lax.scan.
+
+        A full period repeated r times scans with the period as body; any
+        remainder layers become trailing repeat-1 segments."""
+        specs = self.layer_specs()
+        period = list(self.layer_period or (LayerSpec(),))
+        if self.cross_attn_period:
+            # cross-attn breaks the strict period: fall back to chunking by
+            # the cross-attn cycle so the scan body stays uniform.
+            cyc = self.cross_attn_period
+            period = specs[:cyc]
+            if len(specs) >= cyc and all(
+                specs[i] == period[i % cyc] for i in range(len(specs) - len(specs) % cyc)
+            ):
+                reps, rem = divmod(len(specs), cyc)
+                segs = [(tuple(period), reps)] if reps else []
+                segs += [((s,), 1) for s in specs[reps * cyc:]]
+                return segs
+            return [((s,), 1) for s in specs]
+        k = len(period)
+        reps, rem = divmod(self.n_layers, k)
+        segs: list[tuple[tuple[LayerSpec, ...], int]] = []
+        if reps:
+            segs.append((tuple(period), reps))
+        segs += [((specs[reps * k + i],), 1) for i in range(rem)]
+        return segs
+
+
+# ---------------------------------------------------------------------------
+# Initializers / numerics helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key: jax.Array, shape: Sequence[int], dtype, fan_in: int | None = None):
+    """Truncated-normal with 1/sqrt(fan_in) scale (standard LM init)."""
+    fi = fan_in if fan_in is not None else shape[0]
+    scale = fi**-0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, tuple(shape), jnp.float32) * scale).astype(
+        dtype
+    )
+
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, H, S, D) with D even; positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,S,D/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,424 @@
+"""Layer building blocks: GQA attention, GLU MLP, top-k MoE, Mamba-2 mixer.
+
+Every block is a pair of pure functions ``*_init(cfg, key) -> params`` and
+``*_apply(cfg, params, …) -> y`` (plus a cached decode variant where the
+block carries state).  Activation sharding is expressed through *logical*
+axis names via :func:`repro.parallel.constrain`; parameter sharding rules
+live in :mod:`repro.distributed.sharding` and match the pytree paths used
+here.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import kernels
+from repro.parallel import constrain
+from .common import ModelConfig, apply_rope, dense_init, softcap
+
+Params = dict[str, Any]
+
+# ===========================================================================
+# Norm
+# ===========================================================================
+
+
+def norm_init(cfg: ModelConfig) -> jax.Array:
+    return jnp.ones((cfg.d_model,), jnp.float32)
+
+
+def norm_apply(cfg: ModelConfig, w: jax.Array, x: jax.Array) -> jax.Array:
+    return kernels.rmsnorm(x, w, eps=cfg.norm_eps)
+
+
+# ===========================================================================
+# Attention (self / cross, global / sliding-window, GQA)
+# ===========================================================================
+
+
+def attn_init(cfg: ModelConfig, key: jax.Array, *, cross: bool = False) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    D, H, KVH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.pdtype
+    return {
+        "wq": dense_init(kq, (D, H, hd), dt, fan_in=D),
+        "wk": dense_init(kk, (D, KVH, hd), dt, fan_in=D),
+        "wv": dense_init(kv, (D, KVH, hd), dt, fan_in=D),
+        "wo": dense_init(ko, (H, hd, D), dt, fan_in=H * hd),
+    }
+
+
+def _qkv(cfg: ModelConfig, p: Params, x: jax.Array, kv_src: jax.Array):
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(cfg.cdtype))
+    k = jnp.einsum("bsd,dhk->bhsk", kv_src, p["wk"].astype(cfg.cdtype))
+    v = jnp.einsum("bsd,dhk->bhsk", kv_src, p["wv"].astype(cfg.cdtype))
+    q = constrain(q, "batch", "heads", "seq", "head_dim")
+    k = constrain(k, "batch", "kv_heads", "seq", "head_dim")
+    v = constrain(v, "batch", "kv_heads", "seq", "head_dim")
+    return q, k, v
+
+
+def _out(cfg: ModelConfig, p: Params, o: jax.Array) -> jax.Array:
+    y = jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(cfg.cdtype))
+    return constrain(y, "batch", "seq", "embed")
+
+
+def attn_apply(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    kind: str = "global",
+    causal: bool = True,
+    cross_states: jax.Array | None = None,
+) -> jax.Array:
+    """Full-sequence attention (training / prefill).  x: (B, S, D)."""
+    kv_src = cross_states if cross_states is not None else x
+    q, k, v = _qkv(cfg, p, x, kv_src)
+    if cross_states is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    window = cfg.local_window if kind == "local" else None
+    o = kernels.flash_attention(
+        q, k, v, causal=causal and cross_states is None, window=window
+    )
+    o = constrain(o, "batch", "heads", "seq", "head_dim")
+    return _out(cfg, p, o)
+
+
+def attn_cache_init(
+    cfg: ModelConfig, batch: int, max_len: int, *, kind: str = "global"
+) -> Params:
+    KVH, hd = cfg.n_kv_heads, cfg.hd
+    size = min(max_len, cfg.local_window) if kind == "local" else max_len
+    seq_axis = "seq" if kind == "local" else "kv_seq"  # big caches shard on seq
+    k = jnp.zeros((batch, KVH, size, hd), cfg.cdtype)
+    v = jnp.zeros((batch, KVH, size, hd), cfg.cdtype)
+    return {
+        "k": constrain(k, "batch", "kv_heads", seq_axis, "head_dim"),
+        "v": constrain(v, "batch", "kv_heads", seq_axis, "head_dim"),
+    }
+
+
+def attn_decode(
+    cfg: ModelConfig,
+    p: Params,
+    x_t: jax.Array,
+    pos: jax.Array,
+    cache: Params,
+    *,
+    kind: str = "global",
+) -> tuple[jax.Array, Params]:
+    """One-token decode.  x_t: (B, 1, D); pos: scalar absolute position."""
+    B = x_t.shape[0]
+    size = cache["k"].shape[2]
+    q = jnp.einsum("bsd,dhk->bhsk", x_t, p["wq"].astype(cfg.cdtype))
+    k_t = jnp.einsum("bsd,dhk->bhsk", x_t, p["wk"].astype(cfg.cdtype))
+    v_t = jnp.einsum("bsd,dhk->bhsk", x_t, p["wv"].astype(cfg.cdtype))
+    q = apply_rope(q, pos[None], cfg.rope_theta)
+    k_t = apply_rope(k_t, pos[None], cfg.rope_theta)
+
+    slot = jnp.mod(pos, size) if kind == "local" else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k_t.astype(cache["k"].dtype), (0, 0, slot, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v_t.astype(cache["v"].dtype), (0, 0, slot, 0))
+    seq_axis = "seq" if kind == "local" else "kv_seq"
+    ck = constrain(ck, "batch", "kv_heads", seq_axis, "head_dim")
+    cv = constrain(cv, "batch", "kv_heads", seq_axis, "head_dim")
+
+    # visibility: slot j holds absolute position p_j; attend iff 0 <= p_j <= pos
+    # (ring buffers additionally imply pos - p_j < window by construction)
+    j = jnp.arange(size)
+    if kind == "local":
+        p_j = pos - jnp.mod(pos - j, size)
+    else:
+        p_j = j
+    valid = (p_j >= 0) & (p_j <= pos)
+
+    # grouped-head einsum: q reshaped (B, KVH, group, 1, hd) contracts the
+    # cache directly — no jnp.repeat, so no H-sized KV materialization and
+    # no involuntary kv→heads resharding collective on the mesh
+    group = cfg.n_heads // cfg.n_kv_heads
+    qg = q.astype(jnp.float32).reshape(B, cfg.n_kv_heads, group, 1, cfg.hd)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, ck.astype(jnp.float32)) * (cfg.hd**-0.5)
+    s = softcap(s, cfg.attn_logit_softcap)
+    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", pattn, cv.astype(jnp.float32))
+    o = o.reshape(B, cfg.n_heads, 1, cfg.hd).astype(cfg.cdtype)
+    return _out(cfg, p, o), {"k": ck, "v": cv}
+
+
+def cross_cache_init(cfg: ModelConfig, p: Params, states: jax.Array) -> Params:
+    """Precompute cross-attention K/V from encoder states (prefill once)."""
+    k = jnp.einsum("bsd,dhk->bhsk", states, p["wk"].astype(cfg.cdtype))
+    v = jnp.einsum("bsd,dhk->bhsk", states, p["wv"].astype(cfg.cdtype))
+    return {"k": k, "v": v}
+
+
+def cross_attn_decode(cfg: ModelConfig, p: Params, x_t: jax.Array, cache: Params) -> jax.Array:
+    B = x_t.shape[0]
+    q = jnp.einsum("bsd,dhk->bhsk", x_t, p["wq"].astype(cfg.cdtype))
+    group = cfg.n_heads // cfg.n_kv_heads
+    qg = q.astype(jnp.float32).reshape(B, cfg.n_kv_heads, group, 1, cfg.hd)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, cache["k"].astype(jnp.float32)) * (cfg.hd**-0.5)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", pattn, cache["v"].astype(jnp.float32))
+    o = o.reshape(B, cfg.n_heads, 1, cfg.hd).astype(cfg.cdtype)
+    return _out(cfg, p, o)
+
+
+# ===========================================================================
+# Dense GLU MLP
+# ===========================================================================
+
+
+def mlp_init(cfg: ModelConfig, key: jax.Array, d_ff: int | None = None) -> Params:
+    ki, kg, ko = jax.random.split(key, 3)
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    dt = cfg.pdtype
+    return {
+        "wi": dense_init(ki, (D, F), dt),
+        "wg": dense_init(kg, (D, F), dt),
+        "wo": dense_init(ko, (F, D), dt, fan_in=F),
+    }
+
+
+def _act(cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    return jax.nn.silu(x) if cfg.mlp_act == "silu" else jax.nn.gelu(x)
+
+
+def mlp_apply(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(cfg.cdtype))
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(cfg.cdtype))
+    h = constrain(h * _act(cfg, g), "batch", "seq", "mlp")
+    y = jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(cfg.cdtype))
+    return constrain(y, "batch", "seq", "embed")
+
+
+# ===========================================================================
+# Token-choice top-k MoE (GShard dispatch/combine einsums)
+# ===========================================================================
+
+
+def moe_init(cfg: ModelConfig, key: jax.Array) -> Params:
+    kr, ki, kg, ko, ks = jax.random.split(key, 5)
+    D, E, F = cfg.d_model, cfg.num_experts, cfg.moe_d_ff or cfg.d_ff
+    dt = cfg.pdtype
+    p: Params = {
+        "router": dense_init(kr, (D, E), jnp.float32),
+        "wi": dense_init(ki, (E, D, F), dt, fan_in=D),
+        "wg": dense_init(kg, (E, D, F), dt, fan_in=D),
+        "wo": dense_init(ko, (E, F, D), dt, fan_in=F),
+    }
+    if cfg.shared_experts:
+        p["shared"] = mlp_init(cfg, ks, d_ff=(cfg.moe_d_ff or cfg.d_ff) * cfg.shared_experts)
+    return p
+
+
+def moe_apply(
+    cfg: ModelConfig, p: Params, x: jax.Array, *, full_capacity: bool = False
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y, aux_loss).  Token-choice top-K routing with per-group
+    capacity, index-based (gather/scatter) dispatch:
+
+        route:    top-K(softmax(x·router))                    (G,S,K)
+        dispatch: slot buffer (E, C) of token indices; gather (G,E,C,D)
+        expert GLU on the gathered slots
+        combine:  scatter-add of gated expert outputs back to tokens
+
+    Unlike the dense GShard dispatch-einsum (O(S·E·C) one-hot tensors and
+    2·S·E·C·D routing FLOPs — prohibitive at E=384), the gather/scatter
+    form costs O(E·C·D) memory and ~zero routing FLOPs; the expert-
+    parallel all-to-all materializes when the gathered slots are
+    resharded from the data axis to the expert axis (constrain below).
+    Tokens beyond capacity are dropped (the residual passes them through);
+    groups = batch rows, as in GShard.
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    if full_capacity:
+        # decode / tiny batches: one group; capacity bounded by a generous
+        # factor instead of C=T (which cost E·T slots — 48× overcompute for
+        # kimi's 384 experts at decode batch 128; §Perf hillclimb)
+        G, Sg = 1, B * S
+        dcf = max(cfg.capacity_factor, 2.0)
+        C = min(Sg, max(1, int(Sg * K / E * dcf)))
+    else:
+        G, Sg = B, S
+        C = min(Sg, max(1, int(Sg * K / E * cfg.capacity_factor)))
+    xg = x.reshape(G, Sg, D)
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)  # (G,S,K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balancing auxiliary loss (Switch/GShard)
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_idx, E, dtype=jnp.float32), axis=2), axis=(0, 1)
+    )
+    aux = E * jnp.sum(me * ce)
+
+    def route_group(xs, eidx, gv):
+        # xs (Sg,D); eidx/gv (Sg,K) → slot buffers (E,C)
+        e_flat = eidx.reshape(-1)  # (Sg*K,) expert of each assignment
+        tok_flat = jnp.repeat(jnp.arange(Sg), K)
+        g_flat = gv.reshape(-1)
+        # position of each assignment within its expert's buffer
+        sel = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)  # (Sg*K,E)
+        pos_flat = jnp.sum(sel * (jnp.cumsum(sel, axis=0) - 1), axis=-1)
+        keep = pos_flat < C
+        e_safe = jnp.where(keep, e_flat, E)  # overflow row
+        p_safe = jnp.where(keep, pos_flat, 0)
+        slot_tok = jnp.full((E + 1, C), Sg, jnp.int32)  # Sg = zero-pad row
+        slot_tok = slot_tok.at[e_safe, p_safe].set(tok_flat, mode="drop")[:E]
+        slot_gate = jnp.zeros((E + 1, C), jnp.float32)
+        slot_gate = slot_gate.at[e_safe, p_safe].set(g_flat, mode="drop")[:E]
+        xs_pad = jnp.concatenate([xs, jnp.zeros((1, D), xs.dtype)], axis=0)
+        xe = xs_pad[slot_tok]  # (E,C,D) gather
+        return xe, slot_tok, slot_gate
+
+    xe, slot_tok, slot_gate = jax.vmap(route_group)(xg, gate_idx, gate_vals)
+    # the EP boundary: (G,E,C,D) moves from data-sharded G to expert-sharded
+    # E here — GSPMD materializes the MoE all-to-all at this constraint
+    xe = constrain(xe, "batch", "experts", None, "embed")
+    h = jnp.einsum("gecd,edf->gecf", xe, p["wi"].astype(cfg.cdtype))
+    g_ = jnp.einsum("gecd,edf->gecf", xe, p["wg"].astype(cfg.cdtype))
+    ye = jnp.einsum("gecf,efd->gecd", h * _act(cfg, g_), p["wo"].astype(cfg.cdtype))
+    ye = constrain(ye, "batch", "experts", None, "embed")
+
+    def combine_group(ye_g, slot_tok_g, slot_gate_g):
+        y = jnp.zeros((Sg + 1, D), jnp.float32)
+        w = ye_g.astype(jnp.float32) * slot_gate_g[..., None]
+        y = y.at[slot_tok_g.reshape(-1)].add(w.reshape(-1, D), mode="drop")
+        return y[:Sg]
+
+    y = jax.vmap(combine_group)(ye, slot_tok, slot_gate)
+    y = y.reshape(B, S, D).astype(cfg.cdtype)
+
+    if cfg.shared_experts:
+        y = y + mlp_apply(cfg, p["shared"], x)
+    return constrain(y, "batch", "seq", "embed"), aux
+
+
+# ===========================================================================
+# Mamba-2 mixer (SSD)
+# ===========================================================================
+
+
+def mamba_init(cfg: ModelConfig, key: jax.Array) -> Params:
+    kin, kout, kconv, kdt = jax.random.split(key, 4)
+    D, DI, NH, N = cfg.d_model, cfg.d_inner, cfg.n_ssm_heads, cfg.ssm_state
+    G = 1  # n_groups
+    dt = cfg.pdtype
+    conv_dim = DI + 2 * G * N
+    proj_out = 2 * DI + 2 * G * N + NH  # [z, x, B, C, dt]
+    return {
+        "in_proj": dense_init(kin, (D, proj_out), dt),
+        "conv_w": dense_init(kconv, (cfg.conv_kernel, conv_dim), dt, fan_in=cfg.conv_kernel),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, NH, dtype=jnp.float32)),
+        "D_skip": jnp.ones((NH,), jnp.float32),
+        "dt_bias": jnp.zeros((NH,), jnp.float32),
+        "gate_norm": jnp.ones((DI,), jnp.float32),
+        "out_proj": dense_init(kout, (DI, D), dt, fan_in=DI),
+    }
+
+
+def _mamba_split(cfg: ModelConfig, zxbcdt: jax.Array):
+    DI, N, NH = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    z, xc, dt = jnp.split(zxbcdt, [DI, 2 * DI + 2 * N], axis=-1)
+    return z, xc, dt  # xc = [x, B, C] (conv'd together), dt: (…, NH)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv along axis 1.  x: (B,S,C); w: (K,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K)
+    )
+    return out
+
+
+def mamba_apply(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    *,
+    return_state: bool = False,
+):
+    """Full-sequence Mamba-2 block.  x: (B, S, D)."""
+    B, S, D = x.shape
+    DI, N, NH, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(cfg.cdtype))
+    z, xc, dtr = _mamba_split(cfg, zxbcdt)
+    xc = _causal_conv(xc, p["conv_w"].astype(cfg.cdtype))
+    xc = jax.nn.silu(xc)
+    xs, Bm, Cm = jnp.split(xc, [DI, DI + N], axis=-1)
+    xs = constrain(xs, "batch", "seq", "ssm_proj")
+
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])  # (B,S,NH)
+    A = -jnp.exp(p["A_log"])  # (NH,) negative
+    xh = xs.reshape(B, S, NH, P)
+    out = kernels.ssd_scan(
+        xh,
+        dt,
+        A,
+        Bm[:, :, None, :],
+        Cm[:, :, None, :],
+        return_final_state=return_state,
+    )
+    y, state = out if return_state else (out, None)
+    y = y + p["D_skip"].astype(cfg.cdtype)[None, None, :, None] * xh  # skip
+    y = y.astype(cfg.cdtype).reshape(B, S, DI)
+    y = y * jax.nn.silu(z)
+    y = kernels.rmsnorm(y, p["gate_norm"], eps=cfg.norm_eps)
+    y = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cfg.cdtype))
+    y = constrain(y, "batch", "seq", "embed")
+    if return_state:
+        return y, state
+    return y
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int) -> Params:
+    G = 1
+    conv_dim = cfg.d_inner + 2 * G * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), cfg.cdtype),
+        "ssm": jnp.zeros(
+            (batch, cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32
+        ),
+    }
+
+
+def mamba_decode(
+    cfg: ModelConfig, p: Params, x_t: jax.Array, cache: Params
+) -> tuple[jax.Array, Params]:
+    """One-token Mamba-2 step.  x_t: (B, 1, D)."""
+    B = x_t.shape[0]
+    DI, N, NH, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x_t, p["in_proj"].astype(cfg.cdtype))
+    z, xc_t, dtr = _mamba_split(cfg, zxbcdt)  # xc_t: (B,1,conv_dim)
+
+    window = jnp.concatenate([cache["conv"], xc_t], axis=1)  # (B,K,conv)
+    w = p["conv_w"].astype(cfg.cdtype)
+    xc = jnp.einsum("bkc,kc->bc", window, w)[:, None, :]
+    xc = jax.nn.silu(xc)
+    new_conv = window[:, 1:]
+
+    xs, Bm, Cm = jnp.split(xc, [DI, DI + N], axis=-1)
+    dt = jax.nn.softplus(dtr[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,NH)
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, NH, P)
+    new_ssm, y = kernels.ssd_step(cache["ssm"], xh, dt, A, Bm[:, 0, None, :], Cm[:, 0, None, :])
+    y = y + p["D_skip"].astype(cfg.cdtype)[None, :, None] * xh
+    y = y.astype(cfg.cdtype).reshape(B, 1, DI)
+    y = y * jax.nn.silu(z)
+    y = kernels.rmsnorm(y, p["gate_norm"], eps=cfg.norm_eps)
+    y = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cfg.cdtype))
+    return y, {"conv": new_conv, "ssm": new_ssm}

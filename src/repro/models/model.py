@@ -1,0 +1,512 @@
+"""Model assembly: embedding → scanned layer stack → head, for every
+assigned architecture family.
+
+Three execution paths share one parameter pytree:
+
+* ``forward``      — full-sequence training forward (logits).
+* ``prefill``      — full-sequence forward that additionally materializes
+                     the decode caches (KV / conv+SSM state / cross-KV).
+* ``decode_step``  — single-token step against the caches.
+
+Depth is organized as *scan segments* (``ModelConfig.scan_segments``): a
+repeating period of layers becomes a ``lax.scan`` whose body applies one
+period, with parameters (and caches) stacked on the leading axis.  This
+bounds compiled-HLO size at 60+ layers and is remat-friendly: the
+checkpoint policy wraps the scan body.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import constrain
+from . import layers as L
+from .common import LayerSpec, ModelConfig
+
+Params = dict[str, Any]
+
+_AUX_WEIGHT = 0.01  # MoE load-balance loss weight
+
+
+# ===========================================================================
+# Per-layer init / apply
+# ===========================================================================
+
+
+def layer_init(cfg: ModelConfig, spec: LayerSpec, key: jax.Array) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Params = {"norm1": L.norm_init(cfg)}
+    p["mixer"] = L.attn_init(cfg, k1) if spec.mixer == "attn" else L.mamba_init(cfg, k1)
+    if spec.ffn:
+        p["norm2"] = L.norm_init(cfg)
+        p["ffn"] = L.moe_init(cfg, k2) if spec.moe else L.mlp_init(cfg, k2)
+    if spec.cross_attn:
+        p["norm_x"] = L.norm_init(cfg)
+        p["cross"] = L.attn_init(cfg, k3, cross=True)
+    return p
+
+
+def layer_apply(
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    p: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+    cross_states: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    h = L.norm_apply(cfg, p["norm1"], x)
+    if spec.mixer == "attn":
+        y = L.attn_apply(cfg, p["mixer"], h, positions, kind=spec.attn_kind, causal=causal)
+    else:
+        y = L.mamba_apply(cfg, p["mixer"], h)
+    x = x + y
+    if spec.cross_attn and cross_states is not None:
+        hx = L.norm_apply(cfg, p["norm_x"], x)
+        x = x + L.attn_apply(cfg, p["cross"], hx, positions, cross_states=cross_states)
+    if not spec.ffn:
+        return x, jnp.zeros((), jnp.float32)
+    h2 = L.norm_apply(cfg, p["norm2"], x)
+    if spec.moe:
+        y2, aux = L.moe_apply(cfg, p["ffn"], h2)
+    else:
+        y2, aux = L.mlp_apply(cfg, p["ffn"], h2), jnp.zeros((), jnp.float32)
+    return x + y2, aux
+
+
+# -- cached decode ----------------------------------------------------------
+
+
+def layer_cache_init(
+    cfg: ModelConfig, spec: LayerSpec, batch: int, max_len: int
+) -> Params:
+    c: Params = {}
+    if spec.mixer == "attn":
+        c["self"] = L.attn_cache_init(cfg, batch, max_len, kind=spec.attn_kind)
+    else:
+        c["self"] = L.mamba_cache_init(cfg, batch)
+    if spec.cross_attn:
+        KVH, hd = cfg.n_kv_heads, cfg.hd
+        n_cross = cfg.num_image_tokens
+        c["cross"] = {
+            "k": jnp.zeros((batch, KVH, n_cross, hd), cfg.cdtype),
+            "v": jnp.zeros((batch, KVH, n_cross, hd), cfg.cdtype),
+        }
+    return c
+
+
+def layer_decode(
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    p: Params,
+    x_t: jax.Array,
+    pos: jax.Array,
+    cache: Params,
+) -> tuple[jax.Array, Params]:
+    new_cache: Params = {}
+    h = L.norm_apply(cfg, p["norm1"], x_t)
+    if spec.mixer == "attn":
+        y, new_cache["self"] = L.attn_decode(
+            cfg, p["mixer"], h, pos, cache["self"], kind=spec.attn_kind
+        )
+    else:
+        y, new_cache["self"] = L.mamba_decode(cfg, p["mixer"], h, cache["self"])
+    x_t = x_t + y
+    if spec.cross_attn:
+        hx = L.norm_apply(cfg, p["norm_x"], x_t)
+        x_t = x_t + L.cross_attn_decode(cfg, p["cross"], hx, cache["cross"])
+        new_cache["cross"] = cache["cross"]
+    if not spec.ffn:
+        return x_t, new_cache
+    h2 = L.norm_apply(cfg, p["norm2"], x_t)
+    if spec.moe:
+        y2, _ = L.moe_apply(cfg, p["ffn"], h2, full_capacity=True)
+    else:
+        y2 = L.mlp_apply(cfg, p["ffn"], h2)
+    return x_t + y2, new_cache
+
+
+def layer_prefill(
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    p: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    max_len: int,
+    *,
+    cross_states: jax.Array | None = None,
+) -> tuple[jax.Array, Params]:
+    """Forward + cache construction (prefill).  Runs the same math as
+    ``layer_apply`` and additionally stores K/V (padded to ``max_len``),
+    conv windows and final SSM state."""
+    B, S, _ = x.shape
+    cache: Params = {}
+    h = L.norm_apply(cfg, p["norm1"], x)
+    if spec.mixer == "attn":
+        q, k, v = L._qkv(cfg, p["mixer"], h, h)
+        from repro import kernels
+
+        from .common import apply_rope
+
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        window = cfg.local_window if spec.attn_kind == "local" else None
+        o = kernels.flash_attention(q, k, v, causal=True, window=window)
+        y = L._out(cfg, p["mixer"], o)
+        c0 = L.attn_cache_init(cfg, B, max_len, kind=spec.attn_kind)
+        size = c0["k"].shape[2]
+        ktail = k[:, :, -size:] if S > size else k
+        vtail = v[:, :, -size:] if S > size else v
+        tail = ktail.shape[2]
+        if spec.attn_kind == "local" and S > size:
+            # ring placement: token at absolute position p lives in slot p%size
+            idx = jnp.mod(jnp.arange(tail) + (S - tail), size)
+            ck = c0["k"].at[:, :, idx].set(ktail.astype(c0["k"].dtype))
+            cv = c0["v"].at[:, :, idx].set(vtail.astype(c0["v"].dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice(c0["k"], ktail.astype(c0["k"].dtype), (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(c0["v"], vtail.astype(c0["v"].dtype), (0, 0, 0, 0))
+        cache["self"] = {"k": ck, "v": cv}
+    else:
+        DI, N = cfg.d_inner, cfg.ssm_state
+        zxbcdt = jnp.einsum("bsd,de->bse", h, p["mixer"]["in_proj"].astype(cfg.cdtype))
+        _, xc_raw, _ = L._mamba_split(cfg, zxbcdt)
+        y, state = L.mamba_apply(cfg, p["mixer"], h, return_state=True)
+        K = cfg.conv_kernel
+        conv = jnp.pad(xc_raw, ((0, 0), (max(K - 1 - S, 0), 0), (0, 0)))[:, -(K - 1):]
+        cache["self"] = {"conv": conv.astype(cfg.cdtype), "ssm": state}
+    x = x + y
+    if spec.cross_attn and cross_states is not None:
+        hx = L.norm_apply(cfg, p["norm_x"], x)
+        x = x + L.attn_apply(cfg, p["cross"], hx, positions, cross_states=cross_states)
+        cache["cross"] = L.cross_cache_init(cfg, p["cross"], cross_states)
+    if not spec.ffn:
+        return x, cache
+    h2 = L.norm_apply(cfg, p["norm2"], x)
+    if spec.moe:
+        y2, _ = L.moe_apply(cfg, p["ffn"], h2)
+    else:
+        y2 = L.mlp_apply(cfg, p["ffn"], h2)
+    return x + y2, cache
+
+
+# ===========================================================================
+# Stack (scan segments)
+# ===========================================================================
+
+
+def _stack_leaves(trees: list[Any]) -> Any:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def stack_init(cfg: ModelConfig, key: jax.Array, segments=None) -> list[Params]:
+    segments = segments if segments is not None else cfg.scan_segments()
+    out = []
+    for pattern, reps in segments:
+        keys = jax.random.split(key, reps + 1)
+        key = keys[0]
+        per_rep = [
+            [layer_init(cfg, spec, k2) for spec, k2 in zip(pattern, jax.random.split(k, len(pattern)))]
+            for k in keys[1:]
+        ]
+        if reps == 1:
+            out.append({"layers": per_rep[0]})
+        else:
+            out.append({"layers": [_stack_leaves([r[i] for r in per_rep]) for i in range(len(pattern))]})
+    return out
+
+
+def _maybe_remat(cfg: ModelConfig, fn):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def stack_apply(
+    cfg: ModelConfig,
+    segs: list[Params],
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+    cross_states: jax.Array | None = None,
+    segments=None,
+) -> tuple[jax.Array, jax.Array]:
+    segments = segments if segments is not None else cfg.scan_segments()
+    aux_total = jnp.zeros((), jnp.float32)
+    for (pattern, reps), seg in zip(segments, segs):
+        if reps == 1 or not cfg.scan_layers:
+            lp_list = seg["layers"]
+            iters = [jax.tree.map(lambda l: l[i], lp_list) for i in range(reps)] if reps > 1 else [lp_list]
+            for lps in iters:
+                for spec, lp in zip(pattern, lps):
+                    x, aux = layer_apply(
+                        cfg, spec, lp, x, positions, causal=causal, cross_states=cross_states
+                    )
+                    aux_total = aux_total + aux
+        else:
+
+            def body(carry, lps, pattern=pattern):
+                x, aux_sum = carry
+                for spec, lp in zip(pattern, lps):
+                    x, aux = layer_apply(
+                        cfg, spec, lp, x, positions, causal=causal, cross_states=cross_states
+                    )
+                    aux_sum = aux_sum + aux
+                return (x, aux_sum), None
+
+            (x, aux_total), _ = jax.lax.scan(
+                _maybe_remat(cfg, body), (x, aux_total), seg["layers"]
+            )
+    return x, aux_total
+
+
+def stack_cache_init(
+    cfg: ModelConfig, batch: int, max_len: int, segments=None
+) -> list[Params]:
+    segments = segments if segments is not None else cfg.scan_segments()
+    out = []
+    for pattern, reps in segments:
+        per_pos = [layer_cache_init(cfg, spec, batch, max_len) for spec in pattern]
+        if reps == 1:
+            out.append({"layers": per_pos})
+        else:
+            out.append(
+                {"layers": [jax.tree.map(lambda c: jnp.stack([c] * reps), c) for c in per_pos]}
+            )
+    return out
+
+
+def stack_decode(
+    cfg: ModelConfig,
+    segs: list[Params],
+    caches: list[Params],
+    x_t: jax.Array,
+    pos: jax.Array,
+    segments=None,
+) -> tuple[jax.Array, list[Params]]:
+    segments = segments if segments is not None else cfg.scan_segments()
+    new_caches = []
+    for (pattern, reps), seg, seg_cache in zip(segments, segs, caches):
+        if reps == 1 or not cfg.scan_layers:
+            ncs = []
+            layer_iter = (
+                [(jax.tree.map(lambda l: l[i], seg["layers"]), jax.tree.map(lambda c: c[i], seg_cache["layers"])) for i in range(reps)]
+                if reps > 1
+                else [(seg["layers"], seg_cache["layers"])]
+            )
+            for lps, lcs in layer_iter:
+                ncs_rep = []
+                for spec, lp, lc in zip(pattern, lps, lcs):
+                    x_t, nc = layer_decode(cfg, spec, lp, x_t, pos, lc)
+                    ncs_rep.append(nc)
+                ncs.append(ncs_rep)
+            if reps > 1:
+                new_caches.append({"layers": [_stack_leaves([r[i] for r in ncs]) for i in range(len(pattern))]})
+            else:
+                new_caches.append({"layers": ncs[0]})
+        else:
+
+            def body(x_t, lps_lcs, pattern=pattern):
+                lps, lcs = lps_lcs
+                ncs = []
+                for spec, lp, lc in zip(pattern, lps, lcs):
+                    x_t, nc = layer_decode(cfg, spec, lp, x_t, pos, lc)
+                    ncs.append(nc)
+                return x_t, ncs
+
+            x_t, nc_stacked = jax.lax.scan(body, x_t, (seg["layers"], seg_cache["layers"]))
+            new_caches.append({"layers": nc_stacked})
+    return x_t, new_caches
+
+
+def stack_prefill(
+    cfg: ModelConfig,
+    segs: list[Params],
+    x: jax.Array,
+    positions: jax.Array,
+    max_len: int,
+    *,
+    cross_states: jax.Array | None = None,
+    segments=None,
+) -> tuple[jax.Array, list[Params]]:
+    segments = segments if segments is not None else cfg.scan_segments()
+    caches = []
+    for (pattern, reps), seg in zip(segments, segs):
+        if reps == 1 or not cfg.scan_layers:
+            iters = (
+                [jax.tree.map(lambda l: l[i], seg["layers"]) for i in range(reps)]
+                if reps > 1
+                else [seg["layers"]]
+            )
+            ncs = []
+            for lps in iters:
+                ncs_rep = []
+                for spec, lp in zip(pattern, lps):
+                    x, c = layer_prefill(
+                        cfg, spec, lp, x, positions, max_len, cross_states=cross_states
+                    )
+                    ncs_rep.append(c)
+                ncs.append(ncs_rep)
+            if reps > 1:
+                caches.append({"layers": [_stack_leaves([r[i] for r in ncs]) for i in range(len(pattern))]})
+            else:
+                caches.append({"layers": ncs[0]})
+        else:
+
+            def body(x, lps, pattern=pattern):
+                cs = []
+                for spec, lp in zip(pattern, lps):
+                    x, c = layer_prefill(
+                        cfg, spec, lp, x, positions, max_len, cross_states=cross_states
+                    )
+                    cs.append(c)
+                return x, cs
+
+            x, cs_stacked = jax.lax.scan(_maybe_remat(cfg, body), x, seg["layers"])
+            caches.append({"layers": cs_stacked})
+    return x, caches
+
+
+# ===========================================================================
+# Full model
+# ===========================================================================
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    ke, ks, kh, kenc = jax.random.split(key, 4)
+    p: Params = {
+        "embed": L.dense_init(ke, (cfg.vocab, cfg.d_model), cfg.pdtype, fan_in=cfg.d_model),
+        "segments": stack_init(cfg, ks),
+        "final_norm": L.norm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(kh, (cfg.d_model, cfg.vocab), cfg.pdtype)
+    if cfg.enc_dec:
+        enc_cfg = encoder_config(cfg)
+        p["encoder"] = {
+            "segments": stack_init(enc_cfg, kenc, enc_cfg.scan_segments()),
+            "final_norm": L.norm_init(enc_cfg),
+        }
+    return p
+
+
+def encoder_config(cfg: ModelConfig) -> ModelConfig:
+    import dataclasses
+
+    return dataclasses.replace(
+        cfg,
+        n_layers=cfg.n_enc_layers,
+        layer_period=(LayerSpec(),),
+        cross_attn_period=0,
+        enc_dec=False,
+    )
+
+
+def _embed(cfg: ModelConfig, p: Params, tokens: jax.Array) -> jax.Array:
+    x = jnp.take(p["embed"], tokens, axis=0).astype(cfg.cdtype)
+    if cfg.tie_embeddings:
+        x = x * (cfg.d_model**0.5)  # gemma-style embedding scale
+    return constrain(x, "batch", "seq", "embed")
+
+
+def _logits(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    x = L.norm_apply(cfg, p["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum(
+            "bsd,vd->bsv", x, p["embed"].astype(cfg.cdtype),
+            preferred_element_type=jnp.float32,
+        )
+    else:
+        logits = jnp.einsum(
+            "bsd,dv->bsv", x, p["lm_head"].astype(cfg.cdtype),
+            preferred_element_type=jnp.float32,
+        )
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def encode(cfg: ModelConfig, p: Params, frames: jax.Array) -> jax.Array:
+    """Whisper-style encoder over precomputed frame embeddings (stub
+    frontend per the brief).  Non-causal self-attention."""
+    enc_cfg = encoder_config(cfg)
+    S = frames.shape[1]
+    pos = jnp.arange(S)
+    x = frames.astype(cfg.cdtype)
+    x, _ = stack_apply(
+        enc_cfg, p["encoder"]["segments"], x, pos, causal=False,
+        segments=enc_cfg.scan_segments(),
+    )
+    return L.norm_apply(enc_cfg, p["encoder"]["final_norm"], x)
+
+
+def forward(
+    cfg: ModelConfig,
+    p: Params,
+    tokens: jax.Array,
+    *,
+    cross_states: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Training forward.  Returns (logits (B,S,V) f32, moe aux loss)."""
+    B, S = tokens.shape
+    pos = jnp.arange(S)
+    x = _embed(cfg, p, tokens)
+    x, aux = stack_apply(cfg, p["segments"], x, pos, causal=True, cross_states=cross_states)
+    return _logits(cfg, p, x), aux
+
+
+def loss_fn(cfg: ModelConfig, p: Params, batch: dict) -> tuple[jax.Array, dict]:
+    cross = _cross_states(cfg, p, batch)
+    logits, aux = forward(cfg, p, batch["tokens"], cross_states=cross)
+    labels = batch["labels"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = jnp.mean(logz - gold)
+    loss = nll + _AUX_WEIGHT * aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+def _cross_states(cfg: ModelConfig, p: Params, batch: dict) -> jax.Array | None:
+    if cfg.enc_dec:
+        return encode(cfg, p, batch["enc_frames"])
+    if cfg.cross_attn_period:
+        return batch["image_embeds"].astype(cfg.cdtype)
+    return None
+
+
+def cache_init(cfg: ModelConfig, batch: int, max_len: int) -> list[Params]:
+    return stack_cache_init(cfg, batch, max_len)
+
+
+def prefill(
+    cfg: ModelConfig,
+    p: Params,
+    tokens: jax.Array,
+    max_len: int,
+    *,
+    batch_extras: dict | None = None,
+) -> tuple[jax.Array, list[Params]]:
+    """Returns (logits of last position (B,V), caches)."""
+    B, S = tokens.shape
+    pos = jnp.arange(S)
+    cross = _cross_states(cfg, p, batch_extras or {})
+    x = _embed(cfg, p, tokens)
+    x, caches = stack_prefill(cfg, p["segments"], x, pos, max_len, cross_states=cross)
+    logits = _logits(cfg, p, x[:, -1:])[:, 0]
+    return logits, caches
+
+
+def decode_step(
+    cfg: ModelConfig,
+    p: Params,
+    token_t: jax.Array,
+    pos: jax.Array,
+    caches: list[Params],
+) -> tuple[jax.Array, list[Params]]:
+    """token_t: (B,) int32; pos: scalar int32.  Returns ((B,V) f32, caches)."""
+    x_t = _embed(cfg, p, token_t[:, None])
+    x_t, new_caches = stack_decode(cfg, p["segments"], caches, x_t, pos)
+    logits = _logits(cfg, p, x_t)[:, 0]
+    return logits, new_caches

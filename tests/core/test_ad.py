@@ -1,0 +1,329 @@
+"""ST AD vs the jax.grad oracle (paper §3.2).
+
+jax.grad is itself closure-based functional AD — the production descendant
+of the technique this paper proposes — which makes it the natural oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import P, build_grad_graph, build_vjp_graph, parse_function, run_graph
+
+
+def myia_grad(fn, wrt=0):
+    g = build_grad_graph(parse_function(fn), wrt)
+    return lambda *args: run_graph(g, *args)
+
+
+ATOL = 1e-4
+
+
+class TestScalar:
+    def test_polynomial(self):
+        def f(x):
+            return 3.0 * x**4 - 2.0 * x**2 + x
+
+        for x in (0.5, -1.3, 2.0):
+            assert myia_grad(f)(x) == pytest.approx(12 * x**3 - 4 * x + 1, rel=1e-5)
+
+    def test_transcendental(self):
+        def f(x):
+            return P.exp(P.sin(x)) + P.log(x) * P.cos(x)
+
+        jf = lambda x: jnp.exp(jnp.sin(x)) + jnp.log(x) * jnp.cos(x)  # noqa: E731
+        for x in (0.7, 1.9):
+            assert float(myia_grad(f)(x)) == pytest.approx(float(jax.grad(jf)(x)), rel=1e-5)
+
+    def test_multi_arg(self):
+        def f(x, y, z):
+            return x * y + y * z + z * x
+
+        got = run_graph(build_grad_graph(parse_function(f), (0, 1, 2)), 2.0, 3.0, 5.0)
+        assert got == (8.0, 7.0, 5.0)
+
+    @given(
+        x=st.floats(min_value=-3, max_value=3, allow_nan=False),
+        y=st.floats(min_value=0.1, max_value=3, allow_nan=False),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_property_random_rational(self, x, y):
+        def f(a, b):
+            return (a * a - b) / (b + 1.0) + a * b
+
+        jf = lambda a, b: (a * a - b) / (b + 1.0) + a * b  # noqa: E731
+        ga, gb = run_graph(build_grad_graph(parse_function(f), (0, 1)), x, y)
+        ja, jb = jax.grad(jf, argnums=(0, 1))(x, y)
+        assert float(ga) == pytest.approx(float(ja), rel=1e-4, abs=1e-6)
+        assert float(gb) == pytest.approx(float(jb), rel=1e-4, abs=1e-6)
+
+
+class TestControlFlowAD:
+    def test_branch(self):
+        def f(x):
+            if x > 0.0:
+                return x * x
+            return x * x * x
+
+        assert myia_grad(f)(3.0) == 6.0
+        assert myia_grad(f)(-2.0) == 12.0
+
+    def test_loop_power(self):
+        def f(x, n):
+            r = 1.0
+            i = 0
+            while i < n:
+                r = r * x
+                i = i + 1
+            return r
+
+        assert myia_grad(f)(2.0, 5) == pytest.approx(80.0)
+
+    def test_for_loop_accumulation(self):
+        def f(x, n):
+            s = 0.0
+            for i in range(n):
+                s = s + x**2
+            return s
+
+        assert myia_grad(f)(3.0, 4) == pytest.approx(24.0)
+
+    def test_recursive(self):
+        def f(x, n):
+            if n == 0:
+                return 1.0
+            return x * f(x, n - 1)
+
+        assert myia_grad(f)(2.0, 5) == pytest.approx(80.0)
+
+    def test_data_dependent_iterations(self):
+        # iteration count depends on the *value* (OO-style flexibility,
+        # compiled via ST — the paper's headline combination)
+        def f(x):
+            s = x
+            while s < 10.0:
+                s = s * s
+            return s
+
+        # x=1.5: 1.5 -> 2.25 -> 5.06 -> 25.6; ds/dx = product chain
+        jf_val = jax.grad(lambda x: ((x**2) ** 2) ** 2)(1.5)
+        assert float(myia_grad(f)(1.5)) == pytest.approx(float(jf_val), rel=1e-5)
+
+
+class TestClosureAD:
+    def test_free_variable_grad(self):
+        def f(x, y):
+            def inner(z):
+                return z * y + x
+
+            return inner(x) * inner(y)
+
+        jf = lambda x, y: (x * y + x) * (y * y + x)  # noqa: E731
+        got = run_graph(build_grad_graph(parse_function(f), (0, 1)), 3.0, 4.0)
+        want = jax.grad(jf, argnums=(0, 1))(3.0, 4.0)
+        assert np.allclose(got, want)
+
+    def test_closure_escapes_scope(self):
+        def f(x):
+            def make(k):
+                def g(v):
+                    return v * k
+
+                return g
+
+            h = make(x)
+            return h(3.0) + h(4.0)
+
+        # f(x) = 3x + 4x = 7x
+        assert myia_grad(f)(2.0) == pytest.approx(7.0)
+
+    def test_hof_grad(self):
+        def f(x):
+            def compose(g, h):
+                def c(v):
+                    return g(h(v))
+
+                return c
+
+            return compose(lambda v: v * v, lambda v: v + 1.0)(x)
+
+        # d/dx (x+1)^2 = 2(x+1)
+        assert myia_grad(f)(3.0) == pytest.approx(8.0)
+
+    def test_closure_over_loop_state(self):
+        def f(x, n):
+            total = 0.0
+            i = 0
+            while i < n:
+                def term(v):
+                    return v * x
+
+                total = total + term(2.0)
+                i = i + 1
+            return total
+
+        # f = 2nx
+        assert myia_grad(f)(5.0, 4) == pytest.approx(8.0)
+
+
+class TestArrayAD:
+    def test_mlp(self, rng):
+        def f(x, w1, w2):
+            h = P.tanh(x @ w1)
+            o = P.sigmoid(h @ w2)
+            return P.reduce_sum(o * o, None, False)
+
+        def jf(x, w1, w2):
+            h = jnp.tanh(x @ w1)
+            o = jax.nn.sigmoid(h @ w2)
+            return jnp.sum(o * o)
+
+        x = jnp.asarray(rng.randn(4, 8), jnp.float32)
+        w1 = jnp.asarray(rng.randn(8, 16), jnp.float32)
+        w2 = jnp.asarray(rng.randn(16, 2), jnp.float32)
+        got = run_graph(build_grad_graph(parse_function(f), (1, 2)), x, w1, w2)
+        want = jax.grad(jf, argnums=(1, 2))(x, w1, w2)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, atol=ATOL)
+
+    def test_broadcasting(self, rng):
+        def f(a, b):
+            return P.reduce_sum(a * b + a, None, False)
+
+        def jf(a, b):
+            return jnp.sum(a * b + a)
+
+        a = jnp.asarray(rng.randn(4, 1, 3), jnp.float32)
+        b = jnp.asarray(rng.randn(5, 1), jnp.float32)
+        got = run_graph(build_grad_graph(parse_function(f), (0, 1)), a, b)
+        want = jax.grad(jf, argnums=(0, 1))(a, b)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, atol=ATOL)
+        assert got[0].shape == a.shape and got[1].shape == b.shape
+
+    def test_reductions_axes(self, rng):
+        def f(a):
+            m = P.reduce_sum(a, (1,), True)
+            return P.reduce_sum(a * m, None, False)
+
+        def jf(a):
+            return jnp.sum(a * jnp.sum(a, axis=1, keepdims=True))
+
+        a = jnp.asarray(rng.randn(3, 5), jnp.float32)
+        np.testing.assert_allclose(
+            run_graph(build_grad_graph(parse_function(f)), a), jax.grad(jf)(a), atol=ATOL
+        )
+
+    def test_reduce_max(self, rng):
+        def f(a):
+            return P.reduce_sum(P.reduce_max(a, (1,), False), None, False)
+
+        def jf(a):
+            return jnp.sum(jnp.max(a, axis=1))
+
+        a = jnp.asarray(rng.randn(4, 7), jnp.float32)
+        np.testing.assert_allclose(
+            run_graph(build_grad_graph(parse_function(f)), a), jax.grad(jf)(a), atol=ATOL
+        )
+
+    def test_matmul_batched(self, rng):
+        def f(a, b):
+            return P.reduce_sum(a @ b, None, False)
+
+        def jf(a, b):
+            return jnp.sum(a @ b)
+
+        a = jnp.asarray(rng.randn(2, 3, 4), jnp.float32)
+        b = jnp.asarray(rng.randn(2, 4, 5), jnp.float32)
+        got = run_graph(build_grad_graph(parse_function(f), (0, 1)), a, b)
+        want = jax.grad(jf, argnums=(0, 1))(a, b)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, atol=ATOL)
+
+    def test_take_index_add(self, rng):
+        def f(table, idx):
+            e = P.take(table, idx)
+            return P.reduce_sum(e * e, None, False)
+
+        def jf(table, idx):
+            e = jnp.take(table, idx, axis=0)
+            return jnp.sum(e * e)
+
+        table = jnp.asarray(rng.randn(10, 4), jnp.float32)
+        idx = jnp.asarray([1, 3, 3, 7])
+        np.testing.assert_allclose(
+            run_graph(build_grad_graph(parse_function(f)), table, idx),
+            jax.grad(jf)(table, idx),
+            atol=ATOL,
+        )
+
+    def test_slice_concat(self, rng):
+        def f(a):
+            lo = P.slice_axis(a, 1, 0, 2)
+            hi = P.slice_axis(a, 1, 2, 4)
+            rot = P.concat_axis((P.neg(hi), lo), 1)
+            return P.reduce_sum(rot * a, None, False)
+
+        def jf(a):
+            lo, hi = a[:, 0:2], a[:, 2:4]
+            rot = jnp.concatenate([-hi, lo], axis=1)
+            return jnp.sum(rot * a)
+
+        a = jnp.asarray(rng.randn(3, 4), jnp.float32)
+        np.testing.assert_allclose(
+            run_graph(build_grad_graph(parse_function(f)), a), jax.grad(jf)(a), atol=ATOL
+        )
+
+    def test_where(self, rng):
+        def f(a, b):
+            return P.reduce_sum(P.where(a > 0.0, a * b, b), None, False)
+
+        def jf(a, b):
+            return jnp.sum(jnp.where(a > 0, a * b, b))
+
+        a = jnp.asarray(rng.randn(4, 4), jnp.float32)
+        b = jnp.asarray(rng.randn(4, 4), jnp.float32)
+        got = run_graph(build_grad_graph(parse_function(f), (0, 1)), a, b)
+        want = jax.grad(jf, argnums=(0, 1))(a, b)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, atol=ATOL)
+
+    @given(
+        n=st.integers(min_value=1, max_value=5),
+        m=st.integers(min_value=1, max_value=5),
+        k=st.integers(min_value=1, max_value=5),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_property_matmul_shapes(self, n, m, k):
+        rng = np.random.RandomState(n * 100 + m * 10 + k)
+
+        def f(a, b):
+            return P.reduce_sum(P.relu(a @ b), None, False)
+
+        def jf(a, b):
+            return jnp.sum(jax.nn.relu(a @ b))
+
+        a = jnp.asarray(rng.randn(n, m), jnp.float32)
+        b = jnp.asarray(rng.randn(m, k), jnp.float32)
+        got = run_graph(build_grad_graph(parse_function(f), (0, 1)), a, b)
+        want = jax.grad(jf, argnums=(0, 1))(a, b)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, atol=ATOL)
+
+
+class TestVJP:
+    def test_nonscalar_cotangent(self, rng):
+        def f(a, b):
+            return P.tanh(a @ b)
+
+        a = jnp.asarray(rng.randn(3, 4), jnp.float32)
+        b = jnp.asarray(rng.randn(4, 5), jnp.float32)
+        ct = jnp.asarray(rng.randn(3, 5), jnp.float32)
+        got = run_graph(build_vjp_graph(parse_function(f)), a, b, ct)
+        _, pullback = jax.vjp(lambda a, b: jnp.tanh(a @ b), a, b)
+        want = pullback(ct)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, atol=ATOL)

@@ -1,0 +1,113 @@
+"""Reverse-over-reverse (paper §3.2: the transform applies to its own
+output — tape-based systems generally cannot do this)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import P, build_grad_graph, parse_function, run_graph
+
+
+def nth_grad(fn, order):
+    g = parse_function(fn)
+    for _ in range(order):
+        g = build_grad_graph(g)
+    return lambda *args: run_graph(g, *args)
+
+
+class TestHigherOrder:
+    def test_second_derivative_polynomial(self):
+        def f(x):
+            return x**4
+
+        assert nth_grad(f, 2)(2.0) == pytest.approx(48.0)  # 12 x^2
+
+    def test_third_derivative(self):
+        def f(x):
+            return x**4
+
+        assert nth_grad(f, 3)(2.0) == pytest.approx(48.0)  # 24 x
+
+    def test_second_derivative_transcendental(self):
+        def f(x):
+            return P.exp(x * x)
+
+        jf = lambda x: jnp.exp(x * x)  # noqa: E731
+        want = jax.grad(jax.grad(jf))(0.7)
+        assert float(nth_grad(f, 2)(0.7)) == pytest.approx(float(want), rel=1e-4)
+
+    def test_grad_of_grad_with_closure(self):
+        def f(x, y):
+            def inner(z):
+                return z * z * y
+
+            return inner(x)
+
+        # d2f/dx2 = 2y
+        g1 = build_grad_graph(parse_function(f), 0)
+        g2 = build_grad_graph(g1, 0)
+        assert run_graph(g2, 3.0, 5.0) == pytest.approx(10.0)
+
+    def test_grad_of_grad_through_branch(self):
+        def f(x):
+            if x > 0.0:
+                return x**3
+            return x**2
+
+        assert nth_grad(f, 2)(2.0) == pytest.approx(12.0)
+        assert nth_grad(f, 2)(-2.0) == pytest.approx(2.0)
+
+    def test_grad_of_grad_through_loop(self):
+        def f(x, n):
+            r = 1.0
+            i = 0
+            while i < n:
+                r = r * x
+                i = i + 1
+            return r
+
+        # f = x^4, f'' = 12 x^2
+        g1 = build_grad_graph(parse_function(f), 0)
+        g2 = build_grad_graph(g1, 0)
+        assert run_graph(g2, 2.0, 4) == pytest.approx(48.0)
+
+    def test_hessian_row_sums_array(self, rng):
+        # h(x) = sum(grad_f(x)); grad h == Hessian row sums — a full
+        # reverse-over-reverse on array code
+        x = jnp.asarray(rng.randn(5), jnp.float32)
+        gg = build_grad_graph(parse_function(_f_sum_tanh))
+        hg = build_grad_graph(_compose_sum(gg))
+        got = run_graph(hg, x)
+
+        jf = lambda v: jnp.sum(jnp.tanh(v) * jnp.tanh(v))  # noqa: E731
+        want = jax.grad(lambda v: jnp.sum(jax.grad(jf)(v)))(x)
+        np.testing.assert_allclose(got, want, atol=1e-4)
+
+    def test_in_language_grad_macro_nested(self):
+        from repro.core import myia, grad  # noqa: F401
+
+        @myia
+        def f(x):
+            def inner(y):
+                return y**3
+
+            df = grad(inner)
+            return df(x) * x  # 3x^2 * x = 3x^3 -> value at 2: 24
+
+        assert float(f(2.0)) == pytest.approx(24.0)
+
+
+def _f_sum_tanh(x):
+    return P.reduce_sum(P.tanh(x) * P.tanh(x), None, False)
+
+
+def _compose_sum(inner_graph):
+    """Graph computing sum(inner_graph(x)) — helper for Hessian tests."""
+    from repro.core import Graph
+
+    g = Graph("sum_of_grad")
+    p = g.add_parameter("x")
+    inner = g.apply(inner_graph, p)
+    g.set_return(g.apply(P.reduce_sum, inner, None, False))
+    return g

@@ -1,0 +1,183 @@
+"""Type/shape/value inference tests (paper §4.2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import P, parse_function
+from repro.core.infer import (
+    AArray,
+    AScalar,
+    ATuple,
+    InferenceError,
+    abstract_of_value,
+    infer,
+)
+
+
+def sds(shape, dtype=jnp.float32):
+    return abstract_of_value(jax.ShapeDtypeStruct(shape, dtype))
+
+
+class TestScalarInference:
+    def test_value_inference(self):
+        def f(x):
+            return x * 3 + 1
+
+        out = infer(parse_function(f), 4)
+        assert isinstance(out, AScalar) and out.value == 13
+
+    def test_type_only(self):
+        def f(x, y):
+            return x * y + 1.0
+
+        out = infer(parse_function(f), AScalar("float"), AScalar("float"))
+        assert isinstance(out, AScalar) and out.kind == "float" and not out.known()
+
+    def test_bool_out(self):
+        def f(x):
+            return x > 0
+
+        out = infer(parse_function(f), AScalar("int"))
+        assert isinstance(out, AScalar) and out.kind == "bool"
+
+
+class TestShapeInference:
+    def test_matmul_shapes(self):
+        def f(a, b):
+            return a @ b
+
+        out = infer(parse_function(f), sds((3, 4)), sds((4, 5)))
+        assert out == AArray(jnp.float32, (3, 5))
+
+    def test_shape_mismatch_is_eager_error(self):
+        """'operations tend to be very costly and it is best to catch errors
+        as early as possible' (paper §3)."""
+
+        def f(a, b):
+            return a @ b
+
+        with pytest.raises(InferenceError):
+            infer(parse_function(f), sds((3, 4)), sds((5, 6)))
+
+    def test_reduction_shapes(self):
+        def f(a):
+            return P.reduce_sum(a, (1,), True)
+
+        out = infer(parse_function(f), sds((2, 5, 7)))
+        assert out == AArray(jnp.float32, (2, 1, 7))
+
+    def test_broadcast_shapes(self):
+        def f(a, b):
+            return a * b + a
+
+        out = infer(parse_function(f), sds((4, 1, 3)), sds((5, 1)))
+        assert out == AArray(jnp.float32, (4, 5, 3))
+
+    def test_tuple_of_arrays(self):
+        def f(a):
+            return (a, a @ a.T)
+
+        out = infer(parse_function(f), sds((3, 4)))
+        assert isinstance(out, ATuple)
+        assert out.elements[1] == AArray(jnp.float32, (3, 3))
+
+    def test_shape_value_inference(self):
+        def f(a):
+            return a.shape
+
+        out = infer(parse_function(f), sds((3, 4)))
+        assert out == ATuple((AScalar("int", 3), AScalar("int", 4)))
+
+
+class TestControlFlowInference:
+    def test_branches_join(self):
+        def f(x, a):
+            if x > 0:
+                return a * 2.0
+            return a + 1.0
+
+        out = infer(parse_function(f), AScalar("int"), sds((3,)))
+        assert out == AArray(jnp.float32, (3,))
+
+    def test_branch_shape_conflict_error(self):
+        def f(x, a):
+            if x > 0:
+                return a @ a.T
+            return a
+
+        with pytest.raises(InferenceError):
+            infer(parse_function(f), AScalar("int"), sds((3, 4)))
+
+    def test_known_condition_selects_branch(self):
+        def f(x, a):
+            if x > 0:
+                return a @ a.T  # (3,3)
+            return a  # (3,4) — dead for x=1
+
+        out = infer(parse_function(f), 1, sds((3, 4)))
+        assert out == AArray(jnp.float32, (3, 3))
+
+    def test_loop_fixpoint(self):
+        def f(a, n):
+            i = 0
+            while i < n:
+                a = P.tanh(a)
+                i = i + 1
+            return a
+
+        out = infer(parse_function(f), sds((2, 3)), AScalar("int"))
+        assert out == AArray(jnp.float32, (2, 3))
+
+    def test_recursion_fixpoint(self):
+        def fact(n):
+            if n <= 1:
+                return 1
+            return n * fact(n - 1)
+
+        out = infer(parse_function(fact), AScalar("int"))
+        assert isinstance(out, AScalar) and out.kind == "int"
+
+
+class TestPolymorphism:
+    def test_specialize_per_signature(self):
+        """'Myia will specialize each use of a function according to the
+        input type signature for that call site' (paper §4.2)."""
+
+        def poly(v):
+            return v * v
+
+        def f(a, x):
+            def p(v):
+                return v * v
+
+            return (p(a), p(x))
+
+        out = infer(parse_function(f), sds((3, 2)), AScalar("float"))
+        assert isinstance(out, ATuple)
+        assert out.elements[0] == AArray(jnp.float32, (3, 2))
+        assert out.elements[1].kind == "float"
+
+    def test_hof_inference(self):
+        def f(a):
+            def apply_fn(g, v):
+                return g(v)
+
+            return apply_fn(P.tanh, a)
+
+        out = infer(parse_function(f), sds((4,)))
+        assert out == AArray(jnp.float32, (4,))
+
+    def test_closure_inference(self):
+        def f(a):
+            def scale(k):
+                def s(v):
+                    return v * k
+
+                return s
+
+            return scale(2.0)(a)
+
+        out = infer(parse_function(f), sds((4, 4)))
+        assert out == AArray(jnp.float32, (4, 4))

@@ -1,0 +1,313 @@
+"""Frontend tests: the pure Python subset of paper §4.1."""
+
+import pytest
+
+from repro.core import MyiaSyntaxError, parse_function, run_graph
+from repro.core import P
+
+
+def run(fn, *args):
+    return run_graph(parse_function(fn), *args)
+
+
+class TestBasics:
+    def test_arith(self):
+        def f(x, y):
+            return (x + y) * (x - y) / y
+
+        assert run(f, 7.0, 2.0) == pytest.approx((9 * 5) / 2)
+
+    def test_pow_mod_floordiv(self):
+        def f(x):
+            return (x**3 % 7) // 2
+
+        assert run(f, 4) == (64 % 7) // 2
+
+    def test_tuple_destructure(self):
+        def f(p):
+            a, b = p
+            return a * b
+
+        assert run(f, (3, 4)) == 12
+
+    def test_tuple_build_and_index(self):
+        def f(x):
+            t = (x, x + 1, x + 2)
+            return t[0] + t[2]
+
+        assert run(f, 10) == 22
+
+    def test_nested_tuple_target(self):
+        def f(p):
+            (a, b), c = p
+            return a + b + c
+
+        assert run(f, ((1, 2), 3)) == 6
+
+    def test_unary(self):
+        def f(x):
+            return -x + (+x) * 2
+
+        assert run(f, 3) == 3
+
+    def test_compare_chain(self):
+        def f(x):
+            if 0 < x < 10:
+                return 1
+            return 0
+
+        assert run(f, 5) == 1
+        assert run(f, 15) == 0
+
+    def test_builtin_len_abs_min_max(self):
+        def f(t, x):
+            return len(t) + abs(x) + max(x, 2) + min(x, 2)
+
+        assert run(f, (1, 2, 3), -4) == 3 + 4 + 2 + (-4)
+
+
+class TestControlFlow:
+    def test_if_else(self):
+        def f(x):
+            if x > 0:
+                y = x * 2
+            else:
+                y = -x
+            return y + 1
+
+        assert run(f, 3) == 7
+        assert run(f, -3) == 4
+
+    def test_if_no_else_merge(self):
+        def f(x):
+            y = 0
+            if x > 0:
+                y = x
+            return y
+
+        assert run(f, 5) == 5
+        assert run(f, -5) == 0
+
+    def test_early_return_in_branch(self):
+        def f(x):
+            if x > 0:
+                return 1
+            return 2
+
+        assert run(f, 1) == 1
+        assert run(f, -1) == 2
+
+    def test_while(self):
+        def f(n):
+            s = 0
+            i = 0
+            while i < n:
+                s = s + i
+                i = i + 1
+            return s
+
+        assert run(f, 10) == 45
+
+    def test_nested_while(self):
+        def f(n):
+            s = 0
+            i = 0
+            while i < n:
+                j = 0
+                while j < i:
+                    s = s + 1
+                    j = j + 1
+                i = i + 1
+            return s
+
+        assert run(f, 5) == 10
+
+    def test_for_range(self):
+        def f(n):
+            s = 1
+            for i in range(1, n + 1):
+                s = s * i
+            return s
+
+        assert run(f, 5) == 120
+
+    def test_for_range_step(self):
+        def f(n):
+            s = 0
+            for i in range(0, n, 2):
+                s = s + i
+            return s
+
+        assert run(f, 10) == 20
+
+    def test_break_continue(self):
+        def f(n):
+            s = 0
+            for i in range(n):
+                if i == 3:
+                    continue
+                if i > 6:
+                    break
+                s = s + i
+            return s
+
+        assert run(f, 100) == 0 + 1 + 2 + 4 + 5 + 6
+
+    def test_ifexp(self):
+        def f(x):
+            return 1 if x > 0 else -1
+
+        assert run(f, 2) == 1
+        assert run(f, -2) == -1
+
+    def test_shortcircuit_and_guards_recursion(self):
+        def f(n):
+            if n > 0 and f(n - 1) > -100:
+                return n + f(n - 1)
+            return 0
+
+        assert run(f, 4) == 10
+
+    def test_loop_then_code_after(self):
+        def f(n):
+            s = 0
+            i = 0
+            while i < n:
+                s = s + 2
+                i = i + 1
+            t = s * 10
+            return t + 1
+
+        assert run(f, 3) == 61
+
+
+class TestFunctions:
+    def test_recursion(self):
+        def fact(n):
+            if n <= 1:
+                return 1
+            return n * fact(n - 1)
+
+        assert run(fact, 6) == 720
+
+    def test_mutual_recursion_nested(self):
+        def f(n):
+            def is_even(k):
+                if k == 0:
+                    return True
+                return is_odd(k - 1)
+
+            def is_odd(k):
+                if k == 0:
+                    return False
+                return is_even(k - 1)
+
+            return is_even(n)
+
+        assert run(f, 10) is True
+        assert run(f, 7) is False
+
+    def test_closures(self):
+        def f(x):
+            def make_adder(k):
+                def add_k(v):
+                    return v + k
+
+                return add_k
+
+            return make_adder(10)(x) + make_adder(20)(x)
+
+        assert run(f, 1) == 32
+
+    def test_higher_order(self):
+        def f(x):
+            def twice(g, v):
+                return g(g(v))
+
+            return twice(lambda v: v * 3, x)
+
+        assert run(f, 2) == 18
+
+    def test_lambda(self):
+        def f(x):
+            sq = lambda v: v * v  # noqa: E731
+            return sq(x) + sq(x + 1)
+
+        assert run(f, 3) == 9 + 16
+
+    def test_global_function_reference(self):
+        assert run(_calls_global, 4) == 24
+
+
+def _global_helper(x):
+    return x * 6
+
+
+def _calls_global(x):
+    return _global_helper(x)
+
+
+class TestPurity:
+    """The paper forbids mutation (§4.1)."""
+
+    def test_augassign_forbidden(self):
+        def f(x):
+            x += 1
+            return x
+
+        with pytest.raises(MyiaSyntaxError, match="augmented"):
+            parse_function(f)
+
+    def test_index_assign_forbidden(self):
+        def f(t):
+            t[0] = 1
+            return t
+
+        with pytest.raises(MyiaSyntaxError, match="forbidden"):
+            parse_function(f)
+
+    def test_attribute_assign_forbidden(self):
+        def f(t):
+            t.x = 1
+            return t
+
+        with pytest.raises(MyiaSyntaxError, match="forbidden"):
+            parse_function(f)
+
+    def test_kwargs_forbidden(self):
+        def f(x):
+            return _global_helper(x=x)
+
+        with pytest.raises(MyiaSyntaxError, match="keyword"):
+            parse_function(f)
+
+    def test_unknown_name(self):
+        def f(x):
+            return x + not_defined_anywhere  # noqa: F821
+
+        with pytest.raises(MyiaSyntaxError, match="not defined"):
+            run_graph(parse_function(f), 1)
+
+
+class TestArrays:
+    def test_matmul_and_attrs(self, rng):
+        import jax.numpy as jnp
+        import numpy as np
+
+        def f(a, b):
+            c = a @ b
+            return P.reduce_sum(c.T, None, False)
+
+        a = jnp.asarray(rng.randn(3, 4), jnp.float32)
+        b = jnp.asarray(rng.randn(4, 5), jnp.float32)
+        got = run(f, a, b)
+        assert np.allclose(got, np.sum(np.asarray(a) @ np.asarray(b)), atol=1e-5)
+
+    def test_shape_attr(self, rng):
+        import jax.numpy as jnp
+
+        def f(a):
+            return a.shape
+
+        a = jnp.zeros((3, 4))
+        assert run(f, a) == (3, 4)

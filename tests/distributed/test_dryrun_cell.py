@@ -1,0 +1,40 @@
+"""The multi-pod dry-run stays green: lower+compile one real cell on the
+production 16×16 mesh in a subprocess (the main pytest process has a
+locked 1-device backend)."""
+
+import json
+import os
+import subprocess
+import sys
+
+
+def test_dryrun_cell_compiles(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath("src")
+    res = subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "repro.launch.dryrun",
+            "--arch",
+            "internlm2-1.8b",
+            "--cell",
+            "decode_32k",
+            "--mesh",
+            "single",
+            "--out",
+            str(tmp_path),
+        ],
+        capture_output=True,
+        text=True,
+        timeout=420,
+        env=env,
+        cwd=os.path.dirname(os.path.abspath("src")),
+    )
+    assert res.returncode == 0, res.stdout[-2000:] + res.stderr[-2000:]
+    art = tmp_path / "internlm2-1.8b__decode_32k__single_pod_16x16.json"
+    rec = json.loads(art.read_text())
+    assert rec["mesh_shape"] == [16, 16]
+    assert rec["cost"]["flops"] > 0
+    assert rec["memory"]["argument_size_bytes"] > 0
+    assert sum(rec["collective_bytes"].values()) >= 0

@@ -1,0 +1,105 @@
+"""Per-architecture smoke tests (brief requirement): for each of the 10
+assigned archs, instantiate the REDUCED same-family config and run one
+forward/train step + one decode step on CPU, asserting output shapes and
+no NaNs.  The FULL configs are exercised only via the dry-run."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, cells_for, get_config, input_specs, SHAPES
+from repro.models import decode_step, init_params, loss_fn, prefill
+
+
+def _extras(cfg, B, S):
+    rs = np.random.RandomState(0)
+    if cfg.enc_dec:
+        return {"enc_frames": rs.randn(B, 24, cfg.d_model).astype("float32")}
+    if cfg.cross_attn_period:
+        return {
+            "image_embeds": rs.randn(B, cfg.num_image_tokens, cfg.d_model).astype("float32")
+        }
+    return {}
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+class TestArchSmoke:
+    def test_train_step(self, arch):
+        cfg = get_config(arch, reduced=True)
+        p = init_params(cfg, jax.random.PRNGKey(0))
+        B, S = 2, 16
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+        batch = {"tokens": toks, "labels": toks, **_extras(cfg, B, S)}
+
+        def step(p):
+            return loss_fn(cfg, p, batch)[0]
+
+        loss, grads = jax.value_and_grad(step)(p)
+        assert loss.shape == ()
+        assert bool(jnp.isfinite(loss)), f"{arch}: loss={loss}"
+        leaves = jax.tree.leaves(grads)
+        assert leaves, arch
+        for g in leaves:
+            assert bool(jnp.all(jnp.isfinite(g))), f"{arch}: non-finite grad"
+
+    def test_prefill_and_decode_step(self, arch):
+        cfg = get_config(arch, reduced=True)
+        p = init_params(cfg, jax.random.PRNGKey(0))
+        B, S, MAX = 2, 12, 24
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0, cfg.vocab)
+        logits, caches = prefill(cfg, p, toks[:, :S], MAX, batch_extras=_extras(cfg, B, S))
+        assert logits.shape == (B, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits))), arch
+        logits2, caches2 = decode_step(cfg, p, toks[:, S], jnp.int32(S), caches)
+        assert logits2.shape == (B, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits2))), arch
+        assert jax.tree.structure(caches) == jax.tree.structure(caches2)
+
+
+class TestRegistry:
+    def test_all_archs_present(self):
+        assert len(ARCHS) == 10
+
+    def test_full_config_dims_match_brief(self):
+        """The exact published dims from the assignment block."""
+        expect = {
+            "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+            "gemma3-1b": (26, 1152, 4, 1, 6912, 262144),
+            "internlm2-1.8b": (24, 2048, 16, 8, 8192, 92544),
+            "deepseek-coder-33b": (62, 7168, 56, 8, 19200, 32256),
+            "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+            "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+            "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+            "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+            "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+            "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+        }
+        for arch, (L, D, H, KV, F, V) in expect.items():
+            cfg = get_config(arch)
+            got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.vocab)
+            assert got == (L, D, H, KV, F, V), (arch, got)
+
+    def test_cell_assignment(self):
+        """40 cells total: 3 or 4 per arch; long_500k exactly for the
+        sub-quadratic set."""
+        total = sum(len(cells_for(a)) for a in ARCHS)
+        long_runners = {a for a in ARCHS if len(cells_for(a)) == 4}
+        assert long_runners == {"jamba-v0.1-52b", "gemma3-1b", "mamba2-370m"}
+        assert total == 33  # 33 runnable + 7 documented long_500k skips = 40
+
+    def test_moe_structure(self):
+        jamba = get_config("jamba-v0.1-52b")
+        specs = jamba.layer_specs()
+        assert sum(s.mixer == "attn" for s in specs) == 4  # 1:7 over 32 layers
+        assert sum(s.moe for s in specs) == 16  # alternating
+        kimi = get_config("kimi-k2-1t-a32b")
+        assert kimi.num_experts == 384 and kimi.top_k == 8
+
+    def test_input_specs_shapes(self):
+        cfg = get_config("llama-3.2-vision-11b")
+        sp = input_specs(cfg, SHAPES["train_4k"])
+        assert sp["tokens"].shape == (256, 4096)
+        assert sp["image_embeds"].shape == (256, 1600, 4096)
+        spd = input_specs(cfg, SHAPES["decode_32k"])
+        assert spd["token"].shape == (128,) and spd["pos"].shape == ()

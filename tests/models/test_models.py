@@ -1,0 +1,153 @@
+"""Model-zoo behaviour tests: every architecture family forward+grad,
+prefill+decode ≡ full forward, scan/unrolled equivalence, MoE invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import (
+    ModelConfig,
+    LayerSpec,
+    decode_step,
+    init_params,
+    loss_fn,
+    prefill,
+)
+from repro.models.model import _cross_states, forward
+
+F32 = dict(param_dtype="float32", compute_dtype="float32", capacity_factor=8.0)
+
+
+def dense_cfg(**kw):
+    base = dict(
+        name="dense", n_layers=4, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=256, **F32,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+FAMILIES = {
+    "dense": dense_cfg(),
+    "moe": dense_cfg(
+        name="moe", vocab=128, num_experts=4, top_k=2,
+        layer_period=(LayerSpec(moe=True),),
+    ),
+    "ssm": dense_cfg(
+        name="ssm", vocab=128, d_ff=0, tie_embeddings=True,
+        layer_period=(LayerSpec(mixer="mamba", ffn=False),),
+        ssm_state=16, ssm_head_dim=16,
+    ),
+    "hybrid": dense_cfg(
+        name="hybrid", vocab=128, num_experts=4, top_k=2,
+        ssm_state=16, ssm_head_dim=16,
+        layer_period=(LayerSpec(mixer="mamba"), LayerSpec(mixer="attn", moe=True)),
+    ),
+    "local_global": dense_cfg(
+        name="lg", vocab=128, n_kv_heads=1, local_window=8, n_layers=6,
+        layer_period=(LayerSpec(attn_kind="local"),) * 5 + (LayerSpec(attn_kind="global"),),
+    ),
+    "vlm": dense_cfg(
+        name="vlm", vocab=128, n_layers=5, cross_attn_period=5, num_image_tokens=8,
+    ),
+    "encdec": dense_cfg(
+        name="encdec", vocab=128, n_layers=3, n_enc_layers=2, n_kv_heads=4,
+        enc_dec=True, cross_attn_period=1,
+    ),
+}
+
+
+def extras_for(cfg, B=2):
+    rs = np.random.RandomState(0)
+    if cfg.enc_dec:
+        return {"enc_frames": rs.randn(B, 24, cfg.d_model).astype("float32")}
+    if cfg.cross_attn_period:
+        return {"image_embeds": rs.randn(B, cfg.num_image_tokens, cfg.d_model).astype("float32")}
+    return {}
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+class TestFamilies:
+    def test_forward_and_grad_finite(self, family):
+        cfg = FAMILIES[family]
+        p = init_params(cfg, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+        batch = {"tokens": toks, "labels": toks, **extras_for(cfg)}
+        loss, metrics = loss_fn(cfg, p, batch)
+        assert jnp.isfinite(loss)
+        g = jax.grad(lambda p_: loss_fn(cfg, p_, batch)[0])(p)
+        gn = jax.tree.reduce(lambda a, b: a + jnp.sum(jnp.abs(b).astype(jnp.float32)), g, 0.0)
+        assert jnp.isfinite(gn) and gn > 0
+
+    def test_prefill_decode_matches_forward(self, family):
+        cfg = FAMILIES[family]
+        p = init_params(cfg, jax.random.PRNGKey(0))
+        B, S = 2, 12
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 4), 0, cfg.vocab)
+        ext = extras_for(cfg, B)
+        full, _ = forward(cfg, p, toks, cross_states=_cross_states(cfg, p, ext))
+        last, caches = prefill(cfg, p, toks[:, :S], 32, batch_extras=ext)
+        np.testing.assert_allclose(
+            np.asarray(last), np.asarray(full[:, S - 1]), rtol=3e-4, atol=3e-4
+        )
+        for i in range(4):
+            last, caches = decode_step(cfg, p, toks[:, S + i], jnp.int32(S + i), caches)
+            np.testing.assert_allclose(
+                np.asarray(last), np.asarray(full[:, S + i]), rtol=5e-4, atol=5e-4
+            )
+
+
+class TestScanEquivalence:
+    def test_scan_vs_unrolled(self):
+        """lax.scan over stacked periods == the plain per-layer loop."""
+        cfg_scan = dense_cfg(n_layers=6)
+        cfg_loop = dense_cfg(n_layers=6, scan_layers=False)
+        p = init_params(cfg_scan, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg_scan.vocab)
+        l1, _ = forward(cfg_scan, p, toks)
+        l2, _ = forward(cfg_loop, p, toks)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-5, atol=1e-5)
+
+    def test_remat_matches_no_remat(self):
+        cfg_a = dense_cfg(remat=True)
+        cfg_b = dense_cfg(remat=False)
+        p = init_params(cfg_a, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg_a.vocab)
+        batch = {"tokens": toks, "labels": toks}
+        ga = jax.grad(lambda p_: loss_fn(cfg_a, p_, batch)[0])(p)
+        gb = jax.grad(lambda p_: loss_fn(cfg_b, p_, batch)[0])(p)
+        jax.tree.map(
+            lambda a, b: np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6
+            ),
+            ga,
+            gb,
+        )
+
+
+class TestMoE:
+    def test_aux_loss_positive_and_capacity_drops(self):
+        from repro.models.layers import moe_apply, moe_init
+
+        cfg = dense_cfg(name="m", num_experts=4, top_k=2, capacity_factor=0.5)
+        p = moe_init(cfg, jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+        y_tight, aux = moe_apply(cfg, p, x)
+        assert float(aux) >= 1.0  # Switch aux is ≥ 1 at balance, > 1 skewed
+        y_full, _ = moe_apply(cfg, p, x, full_capacity=True)
+        # tight capacity must actually drop something for random routing
+        assert not np.allclose(np.asarray(y_tight), np.asarray(y_full))
+
+    def test_expert_outputs_mix_by_gates(self):
+        """Each token's output is a convex combination over its top-k
+        experts (weights sum to 1): scaling all expert outputs scales y."""
+        from repro.models.layers import moe_apply, moe_init
+
+        cfg = dense_cfg(name="m2", num_experts=4, top_k=2)
+        p = moe_init(cfg, jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, cfg.d_model))
+        y1, _ = moe_apply(cfg, p, x, full_capacity=True)
+        p2 = dict(p, wo=p["wo"] * 2.0)
+        y2, _ = moe_apply(cfg, p2, x, full_capacity=True)
+        np.testing.assert_allclose(np.asarray(y2), 2 * np.asarray(y1), rtol=1e-5, atol=1e-5)

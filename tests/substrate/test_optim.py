@@ -1,0 +1,70 @@
+"""Optimizer tests: descent on a quadratic, state dtypes, adafactor
+factoring, clipping, schedule."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import OptConfig, clip_by_global_norm, make_optimizer, warmup_cosine
+
+
+def quad_loss(p):
+    return jnp.sum((p["w"] - 3.0) ** 2) + jnp.sum((p["b"] + 1.0) ** 2)
+
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor"])
+def test_converges_on_quadratic(name):
+    # total_steps == the run length so the cosine schedule anneals lr → 0
+    # (Adafactor's RMS-normalized updates oscillate at amplitude ~lr without decay)
+    cfg = OptConfig(name=name, lr=0.1, weight_decay=0.0, warmup_steps=0, total_steps=300)
+    opt = make_optimizer(cfg)
+    params = {"w": jnp.zeros((4, 130)), "b": jnp.zeros((7,))}
+    state = opt.init(params)
+    for i in range(300):
+        g = jax.grad(quad_loss)(params)
+        params, state, _ = opt.update(g, state, params, jnp.int32(i))
+    assert float(quad_loss(params)) < 1e-2
+
+
+def test_adamw_bf16_state_dtype():
+    cfg = OptConfig(state_dtype="bfloat16")
+    opt = make_optimizer(cfg)
+    state = opt.init({"w": jnp.zeros((8, 8))})
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    assert state["v"]["w"].dtype == jnp.bfloat16
+
+
+def test_adafactor_factored_state_is_small():
+    cfg = OptConfig(name="adafactor", min_dim_size_to_factor=128)
+    opt = make_optimizer(cfg)
+    params = {"big": jnp.zeros((512, 256)), "small": jnp.zeros((16, 16)), "vec": jnp.zeros((300,))}
+    st_ = opt.init(params)
+    assert set(st_["v"]["big"]) == {"vr", "vc"}
+    assert st_["v"]["big"]["vr"].shape == (512,)
+    assert st_["v"]["big"]["vc"].shape == (256,)
+    assert set(st_["v"]["small"]) == {"v"}  # below factoring threshold
+    assert set(st_["v"]["vec"]) == {"v"}
+
+
+@settings(max_examples=20, deadline=None)
+@given(scale=st.floats(0.01, 100.0), max_norm=st.floats(0.1, 10.0))
+def test_clip_property(scale, max_norm):
+    g = {"a": jnp.full((5,), scale), "b": jnp.full((3, 2), -scale)}
+    clipped, gn = clip_by_global_norm(g, max_norm)
+    new_norm = float(
+        jnp.sqrt(sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(clipped)))
+    )
+    assert new_norm <= max_norm * 1.01 + 1e-6
+    if float(gn) <= max_norm:  # no-op when already small
+        np.testing.assert_allclose(np.asarray(clipped["a"]), np.asarray(g["a"]), rtol=1e-5)
+
+
+def test_schedule_shape():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=110)
+    lrs = [float(warmup_cosine(cfg, jnp.int32(s))) for s in range(0, 111, 10)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 1.0) < 1e-6  # end of warmup
+    assert lrs[-1] < 1e-3  # decayed to ~0
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[1:], lrs[2:]))  # monotone decay
