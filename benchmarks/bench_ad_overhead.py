@@ -21,6 +21,8 @@ import jax.numpy as jnp
 
 from repro.core import api as myia
 from repro.core import oo_tape as oo
+from repro.core.primitives import reduce_sum as _sum
+from repro.core.primitives import tanh as _tanh
 
 
 def timeit(fn, *args, reps=30, warmup=3) -> float:
@@ -64,14 +66,10 @@ def make_mlp(size):
     return mlp_loss_oo, mlp_loss
 
 
-def run() -> list[dict]:
-    global _tanh, _sum
-    import repro.core.primitives as P
-
+def run(reps: int = 30) -> list[dict]:
     results = []
 
     # scalar workload
-    _tanh, _sum = P.tanh, P.reduce_sum
     oo_fn = oo.oo_grad(scalar_chain, wrt=(0, 1))
     st_fn = myia.grad(scalar_chain, wrt=(0, 1))
     jx_fn = jax.jit(jax.grad(scalar_chain, argnums=(0, 1)))
@@ -80,9 +78,9 @@ def run() -> list[dict]:
     results.append(
         {
             "workload": "scalar_chain(40 ops)",
-            "oo_us": timeit(oo_fn, a, b),
-            "st_myia_us": timeit(st_fn, a, b),
-            "jax_grad_us": timeit(jx_fn, a, b),
+            "oo_us": timeit(oo_fn, a, b, reps=reps),
+            "st_myia_us": timeit(st_fn, a, b, reps=reps),
+            "jax_grad_us": timeit(jx_fn, a, b, reps=reps),
         }
     )
 
@@ -101,9 +99,9 @@ def run() -> list[dict]:
         results.append(
             {
                 "workload": f"mlp_{size}x{size}",
-                "oo_us": timeit(oo_fn, w1, w2, x),
-                "st_myia_us": timeit(st_fn, w1, w2, x),
-                "jax_grad_us": timeit(jx_fn, w1, w2, x),
+                "oo_us": timeit(oo_fn, w1, w2, x, reps=reps),
+                "st_myia_us": timeit(st_fn, w1, w2, x, reps=reps),
+                "jax_grad_us": timeit(jx_fn, w1, w2, x, reps=reps),
             }
         )
     for r in results:

@@ -2,8 +2,16 @@
 triggers type-inference + optimization + compilation once; repeat calls
 hit the specialization cache.
 
-Measures: first-call (specialize+compile) latency per signature, cached-
-call latency, and specialization-cache isolation across signatures."""
+Measures, per signature:
+
+* ``first_call_ms`` — specialize + first execution.  With direct lowering
+  the first call answers from a cheap tier-0 XLA compile of the
+  straight-line callable (a fraction of the full-opt compile latency).
+* ``compile_call_ms`` — the second call, which traces + XLA-compiles the
+  fully optimized jitted path (tiered compilation moves it here).
+* ``cached_call_us`` — steady-state cached calls (after the jit warmed).
+* ``specializations`` — cache isolation across signatures.
+"""
 
 from __future__ import annotations
 
@@ -13,36 +21,39 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import api as myia
+from repro.core.primitives import tanh as _tanh
 
 
-def run() -> list[dict]:
-    import repro.core.primitives as P
+def model(w, x):
+    h = _tanh(x @ w)
+    return h @ w
 
-    global _tanh
-    _tanh = P.tanh
 
-    def model(w, x):
-        h = _tanh(x @ w)
-        return h @ w
-
+def run(reps: int = 50) -> list[dict]:
     rows = []
     for shape in [(8, 8), (64, 64), (256, 256)]:
         fn = myia.myia(model)
         w = jnp.ones(shape)
         x = jnp.ones((4, shape[0]))
         t0 = time.perf_counter()
-        fn(w, x)
+        jax.block_until_ready(fn(w, x))
         first = time.perf_counter() - t0
         t0 = time.perf_counter()
-        for _ in range(50):
+        jax.block_until_ready(fn(w, x))
+        compile_call = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for _ in range(reps):
             r = fn(w, x)
         jax.block_until_ready(r)
-        cached = (time.perf_counter() - t0) / 50
+        cached = (time.perf_counter() - t0) / reps
+        runner = fn.specialize((w, x))
         rows.append(
             {
                 "signature": f"f32{list(shape)}",
                 "first_call_ms": round(first * 1e3, 2),
+                "compile_call_ms": round(compile_call * 1e3, 2),
                 "cached_call_us": round(cached * 1e6, 1),
+                "lowered": bool(getattr(runner, "lowered", False)),
                 "specializations": len(fn._specializations),
             }
         )

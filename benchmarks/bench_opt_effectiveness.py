@@ -5,39 +5,76 @@ to what one would have written by hand."
 
 Measured as IR node counts of the AD-transformed graph before/after the
 optimization pipeline, against the node count of the hand-written
-derivative parsed directly."""
+derivative parsed directly.  Also records the worklist rewriter's effort
+(``OptStats``): total rule hits, nodes examined, and verification-sweep
+stragglers (which should stay 0 — see ``repro.core.opt``), plus whether
+the optimized graph lowers to a straight-line callable.
+"""
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from repro.core import api as myia
-from repro.core.opt import count_nodes
+from repro.core.infer import abstract_of_value
+from repro.core.lowering import lowering_blockers
+from repro.core.opt import OptStats, count_nodes
+from repro.core.primitives import tanh as _tanh
+
+
+def cube(x):
+    return x ** 3
+
+
+def cube_hand(x):  # d/dx x³ by hand
+    return 3.0 * x * x
+
+
+def poly(x):
+    return 2.0 * x ** 3 + 4.0 * x * x + x + 1.0
+
+
+def poly_hand(x):
+    return 6.0 * x * x + 8.0 * x + 1.0
+
+
+def chain(x):
+    return _tanh(_tanh(_tanh(x)))
+
+
+def _cascade_case(n: int = 400) -> dict:
+    """Rewriter-engine scaling on a leaf→root constant-fold cascade — the
+    worst case for whole-family sweeps (quadratic) and the best showcase of
+    the worklist engine (linear)."""
+    import time
+
+    from repro.core.ir import Graph
+    import repro.core.primitives as P
+
+    def build():
+        g = Graph("cascade")
+        p = g.add_parameter("x")
+        node = g.apply(P.add, 1.0, 1.0)
+        for _ in range(n):
+            node = g.apply(P.add, 1.0, node)
+        g.set_return(g.apply(P.mul, p, node))
+        return g
+
+    from repro.core.opt import optimize
+
+    row = {"case": f"fold_cascade({n})"}
+    for engine in ("sweep", "worklist"):
+        g = build()
+        stats = OptStats()
+        t0 = time.perf_counter()
+        optimize(g, inline=False, engine=engine, stats=stats)
+        row[f"{engine}_ms"] = round((time.perf_counter() - t0) * 1e3, 1)
+    row["speedup"] = f"{row['sweep_ms'] / max(row['worklist_ms'], 1e-9):.1f}×"
+    return row
 
 
 def run() -> list[dict]:
-    import repro.core.primitives as P
-
-    global _tanh
-    _tanh = P.tanh
-
     cases = []
-
-    def cube(x):
-        return x ** 3
-
-    def cube_hand(x):  # d/dx x³ by hand
-        return 3.0 * x * x
-
-    def poly(x):
-        return 2.0 * x ** 3 + 4.0 * x * x + x + 1.0
-
-    def poly_hand(x):
-        return 6.0 * x * x + 8.0 * x + 1.0
-
-    def chain(x):
-        return _tanh(_tanh(_tanh(x)))
-
     for name, fn, hand, arg in [
         ("x**3 (paper Fig.1)", cube, cube_hand, 2.0),
         ("2x³+4x²+x+1", poly, poly_hand, 2.0),
@@ -46,12 +83,21 @@ def run() -> list[dict]:
         g_noopt = myia.grad(fn, opt=False)
         g_opt = myia.grad(fn, opt=True)
         before = g_noopt.node_count(arg, optimized=False)
-        after = g_opt.node_count(arg, optimized=True)
+        stats = OptStats()
+        opt_graph = myia.compile_pipeline(
+            g_opt.graph, (abstract_of_value(arg),), stats=stats
+        )
+        after = count_nodes(opt_graph)
         row = {
             "case": name,
             "nodes_after_ad": before,
             "nodes_after_opt": after,
             "reduction": f"{before / after:.1f}×",
+            "rewrites": stats.total_rewrites,
+            "inlined_calls": stats.inlined_calls,
+            "worklist_pops": stats.worklist_pops,
+            "verify_sweep_hits": stats.verify_sweep_hits,
+            "lowerable": not lowering_blockers(opt_graph),
         }
         if hand is not None:
             h = myia.MyiaFunction(hand)
@@ -59,6 +105,7 @@ def run() -> list[dict]:
         # correctness unchanged by optimization
         assert abs(g_noopt(arg) - g_opt(arg)) < 1e-6
         cases.append(row)
+    cases.append(_cascade_case())
     return cases
 
 

@@ -2,10 +2,14 @@
 
     PYTHONPATH=src python -m benchmarks.run            # all benches
     PYTHONPATH=src python -m benchmarks.run --only ad_overhead
+    PYTHONPATH=src python -m benchmarks.run --quick    # reduced reps
 
 Results land in ``artifacts/bench/<name>.json`` and a summary prints to
-stdout.  The roofline section only reports if the dry-run artifacts exist
-(run ``python -m repro.launch.dryrun`` first)."""
+stdout.  The compile-time and AD-overhead rows are additionally written to
+``BENCH_compile.json`` / ``BENCH_ad_overhead.json`` at the repo root so
+successive PRs leave a perf trajectory to compare against (``--quick`` is
+the cheap way to refresh them).  The roofline section only reports if the
+dry-run artifacts exist (run ``python -m repro.launch.dryrun`` first)."""
 
 from __future__ import annotations
 
@@ -13,20 +17,34 @@ import argparse
 import json
 import os
 
+#: repo-root trajectory files: bench name -> filename
+TRAJECTORY = {
+    "compile_time": "BENCH_compile.json",
+    "ad_overhead": "BENCH_ad_overhead.json",
+}
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="reduced reps; still refreshes the BENCH_*.json trajectory files",
+    )
     args = ap.parse_args(argv)
 
     from . import bench_ad_overhead, bench_compile_time, bench_kernels, bench_opt_effectiveness
 
     benches = {
-        "ad_overhead": bench_ad_overhead.run,
+        "ad_overhead": lambda: bench_ad_overhead.run(reps=5 if args.quick else 30),
         "opt_effectiveness": bench_opt_effectiveness.run,
-        "compile_time": bench_compile_time.run,
+        "compile_time": lambda: bench_compile_time.run(reps=10 if args.quick else 50),
         "kernels": bench_kernels.run,
     }
+    if args.quick and not args.only:
+        # kernels are the slow outlier and have no trajectory file
+        benches.pop("kernels")
     os.makedirs("artifacts/bench", exist_ok=True)
     for name, fn in benches.items():
         if args.only and name != args.only:
@@ -37,6 +55,9 @@ def main(argv=None) -> int:
             print("  ", row)
         with open(f"artifacts/bench/{name}.json", "w") as f:
             json.dump(rows, f, indent=1, default=str)
+        if name in TRAJECTORY:
+            with open(TRAJECTORY[name], "w") as f:
+                json.dump(rows, f, indent=1, default=str)
 
     # roofline summary (from dry-run artifacts, if present)
     if (args.only in (None, "roofline")) and os.path.isdir("artifacts/dryrun"):

@@ -2,9 +2,13 @@
 
 * ``@myia`` — compile a pure-Python-subset function through the pipeline:
   parse → (AD transform) → inline → infer (call-site specialization on the
-  actual argument types/shapes, §4.2) → optimize (§4.3) → execute, either
-  through the reference VM or traced once under ``jax.jit`` so XLA compiles
-  the whole (straight-line) program.
+  actual argument types/shapes, §4.2) → worklist-optimize (§4.3) → execute.
+  First-order graphs are *lowered directly* to a straight-line callable
+  (``repro.core.lowering``); the first call answers from a cheap tier-0
+  XLA compile of it, and subsequent calls use the fully optimized
+  ``jax.jit`` executable.  Graphs with residual recursion / higher-order
+  calls fall back to the reference VM, traced once under ``jax.jit``.
+  See ``docs/pipeline.md``.
 * ``grad`` / ``value_and_grad`` / ``vjp`` — the ST AD transforms of §3.2.
   ``grad`` is also a *macro*: used inside ``@myia`` code it expands at parse
   time (paper Figure 1: "After the grad macro is expanded …").
@@ -13,6 +17,7 @@
 from __future__ import annotations
 
 import functools
+import hashlib
 from typing import Any, Callable
 
 import jax
@@ -21,12 +26,48 @@ import numpy as np
 from .ad import build_grad_graph, build_value_and_grad_graph, build_vjp_graph
 from .infer import InferenceError, abstract_of_value, infer
 from .ir import Constant, Graph, clone_graph
-from .opt import count_nodes, optimize
+from .lowering import try_lower
+from .opt import OptStats, count_nodes, optimize
 from .parser import MyiaSyntaxError, parse_function
 from .values import is_array_like
 from .vm import VM
 
 __all__ = ["myia", "grad", "value_and_grad", "vjp", "MyiaFunction", "compile_pipeline"]
+
+#: XLA options for the throwaway first-call executable (tiered compilation):
+#: skip backend optimizations and expensive LLVM passes — on CPU this
+#: roughly halves time-to-first-result for straight-line lowered graphs,
+#: and the executable is discarded once the full-opt jit takes over.
+_TIER0_COMPILER_OPTIONS = {
+    "xla_backend_optimization_level": 0,
+    "xla_llvm_disable_expensive_passes": True,
+}
+
+
+def _content_key(a: Any) -> tuple:
+    """Hashable content-capturing key for an unhashable static argument.
+
+    The whole value is baked into the specialized runner, so two statics
+    may share a cache slot only if their *contents* agree — ``repr`` is not
+    enough (numpy elides arrays > 1000 elements with ``...``)."""
+    if isinstance(a, (list, tuple)):
+        return (type(a).__name__, tuple(_content_key(e) for e in a))
+    if isinstance(a, dict):
+        return (
+            "dict",
+            tuple(
+                (_content_key(k), _content_key(v))
+                for k, v in sorted(a.items(), key=lambda kv: repr(kv[0]))
+            ),
+        )
+    if is_array_like(a) or isinstance(a, np.generic):
+        arr = np.asarray(a)
+        return ("arrval", arr.shape, str(arr.dtype), hashlib.sha1(arr.tobytes()).hexdigest())
+    try:
+        hash(a)
+        return ("val", type(a).__name__, a)
+    except TypeError:
+        return ("repr", type(a).__name__, repr(a))
 
 
 def compile_pipeline(
@@ -35,18 +76,24 @@ def compile_pipeline(
     *,
     opt: bool = True,
     infer_types: bool = True,
+    engine: str = "worklist",
+    stats: OptStats | None = None,
 ) -> Graph:
-    """inline → infer → optimize, on a private clone of ``graph``."""
+    """inline → infer → optimize, on a private clone of ``graph``.
+
+    ``engine`` / ``stats`` are forwarded to :func:`repro.core.opt.optimize`
+    (both optimize calls share the one stats object).
+    """
     g = clone_graph(graph)
     if not opt:
         return g
-    optimize(g)  # structural pass (no abstracts needed)
+    optimize(g, engine=engine, stats=stats)  # structural pass (no abstracts)
     if infer_types and example_args is not None:
         try:
             infer(g, *example_args)
         except InferenceError:
             pass  # dynamic program: shape-directed rules simply won't fire
-        optimize(g)  # shape-directed pass
+        optimize(g, engine=engine, stats=stats)  # shape-directed pass
     return g
 
 
@@ -93,7 +140,15 @@ class MyiaFunction:
             elif isinstance(a, tuple):
                 out.append(("tup", self._sigkey(a)))
             else:
-                out.append(("val", type(a).__name__, a))
+                try:
+                    hash(a)
+                except TypeError:
+                    # unhashable static (list, dict, …): its *content* is
+                    # baked into the specialization, so the key must capture
+                    # content — repr() truncates large arrays and collides
+                    out.append(("val", type(a).__name__, _content_key(a)))
+                else:
+                    out.append(("val", type(a).__name__, a))
         return tuple(out)
 
     def specialize(self, args: tuple) -> Callable:
@@ -101,35 +156,78 @@ class MyiaFunction:
         hit = self._specializations.get(key)
         if hit is not None:
             return hit
-        g = compile_pipeline(
-            self.graph,
-            tuple(abstract_of_value(a) for a in args),
-            opt=self.opt,
-        )
+        try:
+            example = tuple(abstract_of_value(a) for a in args)
+        except InferenceError:
+            example = None  # e.g. a list static: skip inference, VM handles it
+        g = compile_pipeline(self.graph, example, opt=self.opt)
         runner = self._make_runner(g, args)
         self._specializations[key] = runner
         return runner
 
     def _make_runner(self, g: Graph, example_args: tuple) -> Callable:
         if self.backend == "vm":
-            return lambda *args: VM().call(g, args)
+            def runner(*args):
+                return VM().call(g, args)
+
+            runner.lowered = False
+            return runner
         # jax backend: arrays are dynamic (traced), everything else static.
         dyn_idx = [i for i, a in enumerate(example_args) if is_array_like(a)]
         static = {i: a for i, a in enumerate(example_args) if i not in set(dyn_idx)}
+        lowered = try_lower(g)
 
-        def run(*arrs):
+        def assemble(arrs) -> tuple:
             full: list[Any] = [None] * (len(arrs) + len(static))
             for i, v in static.items():
                 full[i] = v
             for i, v in zip(dyn_idx, arrs):
                 full[i] = v
-            return VM().call(g, tuple(full))
+            return tuple(full)
+
+        if lowered is not None:
+            def run(*arrs):
+                return lowered(*assemble(arrs))
+        else:
+            # residual graph values (recursion, higher-order calls): the VM
+            # evaluates, and jit traces *through* the interpreter.
+            def run(*arrs):
+                return VM().call(g, assemble(arrs))
 
         jitted = jax.jit(run)
 
-        def runner(*args):
-            return jitted(*[args[i] for i in dyn_idx])
+        if lowered is not None:
+            # Tiered compilation (only possible because the program is a
+            # straight-line lowered function, not an interpreter trace):
+            # the first call compiles at a low XLA optimization level —
+            # a fraction of the full-opt compile time on CPU — and answers
+            # from that; the second call onwards uses the fully optimized
+            # ``jax.jit`` executable.  If the backend rejects the tier-0
+            # options, the first call simply takes the normal jit path.
+            state = {"calls": 0}
 
+            def runner(*args):
+                arrs = [args[i] for i in dyn_idx]
+                state["calls"] += 1
+                if state["calls"] == 1:
+                    fast = None
+                    try:
+                        fast = jitted.lower(*arrs).compile(
+                            compiler_options=_TIER0_COMPILER_OPTIONS
+                        )
+                    except Exception:
+                        pass  # unknown option/backend: use the full jit
+                    if fast is not None:
+                        # outside the try: a genuine runtime error must
+                        # surface, not silently re-run under the full jit
+                        return fast(*arrs)
+                return jitted(*arrs)
+        else:
+            def runner(*args):
+                return jitted(*[args[i] for i in dyn_idx])
+
+        runner.lowered = lowered is not None
+        runner.jitted = jitted
         return runner
 
     def __call__(self, *args: Any) -> Any:

@@ -448,6 +448,20 @@ class Inferencer:
             except Exception as e:
                 raise InferenceError(f"{p.name} failed during value inference: {e}")
 
+        # The eval_shape result is a pure function of (prim, arg abstracts):
+        # memoize process-wide — adjoint graphs apply the same prim at the
+        # same signature hundreds of times, and each eval_shape is a full
+        # jax trace (milliseconds, the bulk of specialization latency).
+        try:
+            cache_key = (id(p), args)
+            hash(cache_key)
+        except TypeError:
+            cache_key = None
+        if cache_key is not None:
+            hit = _EVAL_SHAPE_MEMO.get(cache_key)
+            if hit is not None:
+                return hit
+
         # default: shape inference through jax.eval_shape on the jnp impl.
         # Known scalars/tuples are baked in as *statics* (axes, dtypes and
         # flags must not become tracers); only unknowns are traced.
@@ -475,8 +489,15 @@ class Inferencer:
         # array, a 0-d result is a scalar of the promoted kind, not an array.
         if not any(_contains_array(a) for a in args):
             ab = _demote_scalars(ab)
+        if cache_key is not None:
+            if len(_EVAL_SHAPE_MEMO) > 8192:
+                _EVAL_SHAPE_MEMO.clear()
+            _EVAL_SHAPE_MEMO[cache_key] = ab
         return ab
 
+
+#: (id(prim), arg abstracts) -> result abstract; see _apply_prim
+_EVAL_SHAPE_MEMO: dict[tuple, AbstractValue] = {}
 
 _KIND_OF_DTYPE = {"f": "float", "i": "int", "u": "int", "b": "bool"}
 

@@ -29,6 +29,7 @@ __all__ = [
     "Constant",
     "Graph",
     "GraphCloner",
+    "FamilyIndex",
     "is_constant",
     "is_constant_graph",
     "is_constant_prim",
@@ -354,6 +355,104 @@ def free_variables(graph: Graph) -> list[Node]:
                 changed = True
     out = {n._id: n for n in fv[graph]}
     return [out[k] for k in sorted(out)]
+
+
+# ---------------------------------------------------------------------------
+# Incremental family bookkeeping
+# ---------------------------------------------------------------------------
+
+
+class FamilyIndex:
+    """Incrementally-maintained family / recursion / inline-safety facts for
+    a root graph under rewriting.
+
+    The optimizer asks three questions over and over: which graphs make up
+    the family below ``root``, is a graph recursive (can it reach a constant
+    reference to itself), and is a callee safe to inline (nothing recursive
+    reachable from it).  Recomputing these from scratch after every inline
+    wave is O(family × nodes); this index instead updates *per clone*:
+
+    * ``note_clone`` adds the freshly-cloned graphs to the family set and
+      drops only the descendant entries that contain the inline target.
+    * Recursion and safety caches survive clones entirely: an inline-safe
+      callee's family is a closed, acyclic graph-reference set, and its
+      clones reference only other clones — so no pre-existing graph's
+      self-reachability (or safety) can change, and every added clone is
+      itself non-recursive.
+    * Local rewrites may *orphan* graphs (the family set becomes a
+      superset) — scanning an orphan is wasted work, never unsound.  A
+      rewrite can also cut a graph's self-reference; call
+      ``invalidate_rewrites`` between rewrite passes to pick that up.
+    """
+
+    __slots__ = ("root", "_graphs", "_desc", "_rec", "_safe")
+
+    def __init__(self, root: Graph) -> None:
+        self.root = root
+        self._graphs: set[Graph] | None = None
+        self._desc: dict[Graph, set[Graph]] = {}
+        self._rec: dict[Graph, bool] = {}
+        self._safe: dict[Graph, bool] = {}
+
+    # -- queries -----------------------------------------------------------
+    def graphs(self) -> set[Graph]:
+        if self._graphs is None:
+            self._graphs = graph_and_descendants(self.root)
+        return self._graphs
+
+    def descendants(self, g: Graph) -> set[Graph]:
+        hit = self._desc.get(g)
+        if hit is None:
+            hit = self._desc[g] = graph_and_descendants(g)
+        return hit
+
+    def is_recursive(self, g: Graph) -> bool:
+        """Can ``g`` reach a constant reference to itself?  Uses the SAME
+        reachability the cloner uses (dfs entering graph constants), so
+        classification and clone scope can never disagree."""
+        hit = self._rec.get(g)
+        if hit is None:
+            hit = any(
+                is_constant_graph(n) and n.value is g for n in dfs_nodes(g.return_)
+            )
+            self._rec[g] = hit
+        return hit
+
+    def inline_safe(self, g: Graph) -> bool:
+        """True iff nothing recursive is reachable from ``g`` — the cloner
+        deep-copies ``graph_and_descendants(g)``, and duplicating a
+        recursive cycle exposes a fresh entry wrapper every wave (unbounded
+        peeling of the recursion)."""
+        hit = self._safe.get(g)
+        if hit is None:
+            hit = not any(self.is_recursive(h) for h in self.descendants(g))
+            self._safe[g] = hit
+        return hit
+
+    # -- maintenance -------------------------------------------------------
+    def note_clone(self, cloner: "GraphCloner") -> None:
+        """Incremental update after an inline clone: extend the family with
+        the new graphs; drop descendant entries that contained the inline
+        target (they just gained the clones).  Recursion/safety caches stay
+        valid — see the class docstring."""
+        target = cloner.inline_target
+        new_graphs = set(cloner.graph_map.values())
+        if target is not None:
+            new_graphs.discard(target)
+        if self._graphs is not None:
+            self._graphs |= new_graphs
+        if target is not None:
+            stale = [g for g, d in self._desc.items() if target in d]
+            for g in stale:
+                del self._desc[g]
+
+    def invalidate_rewrites(self) -> None:
+        """Local rewrites changed the graph bodies: recursion facts may be
+        stale (a rewrite can cut a self-reference), so drop everything but
+        the family set (which only ever grows into a sound superset)."""
+        self._desc.clear()
+        self._rec.clear()
+        self._safe.clear()
 
 
 # ---------------------------------------------------------------------------

@@ -1,10 +1,24 @@
 """JAX backend: execute IR graphs under ``jax.jit``.
 
 The paper compiled "the straight-line parts of the graph using TVM"; the
-TPU-idiomatic equivalent is to *trace* the whole optimized graph once with
-JAX — every primitive's implementation is jnp — and let XLA compile the
-resulting straight-line program.  Interpreter overhead is paid once at
-trace time (contrast with the OO baseline, which pays it per call).
+TPU-idiomatic equivalent is to hand XLA the whole optimized graph as one
+straight-line program.  Two routes produce that program:
+
+* **Direct lowering** (the fast path): ``repro.core.lowering`` emits the
+  optimized first-order graph as generated Python source — one assignment
+  per apply node in topological order over the primitives' ``jnp``
+  implementations.  ``jax.jit`` traces that straight-line function with
+  *zero* interpreter machinery in the way, and the same callable can also
+  run eagerly (no XLA compile on the critical path of the first call).
+* **VM trace** (the fallback): when residual graph values survive
+  optimization — recursion, higher-order calls, closures selected by
+  ``switch`` on traced values — the reference VM evaluates the graph and
+  ``jax.jit`` traces *through* the interpreter.  Interpreter overhead is
+  paid once at trace time (contrast with the OO baseline, which pays it
+  per call).
+
+``compile_graph`` picks automatically: lowering when
+``lowering_blockers(graph)`` is empty, VM otherwise.
 
 Data-dependent control flow: conditions that stay concrete (python ints)
 unroll during tracing, exactly like the loop-specialization the inferencer
@@ -18,13 +32,14 @@ from typing import Any, Callable
 import jax
 
 from .ir import Graph
+from .lowering import lower_graph, lowering_blockers, try_lower
 from .vm import VM
 
-__all__ = ["compile_graph", "trace_graph"]
+__all__ = ["compile_graph", "trace_graph", "lower_graph", "lowering_blockers"]
 
 
 def trace_graph(graph: Graph) -> Callable:
-    """A plain callable evaluating the graph (traceable by jax)."""
+    """A plain callable evaluating the graph via the VM (traceable by jax)."""
 
     def run(*args: Any) -> Any:
         return VM().call(graph, tuple(args))
@@ -33,8 +48,31 @@ def trace_graph(graph: Graph) -> Callable:
     return run
 
 
-def compile_graph(graph: Graph, *, jit: bool = True, donate_argnums=()) -> Callable:
-    fn = trace_graph(graph)
-    if not jit:
-        return fn
-    return jax.jit(fn, donate_argnums=donate_argnums)
+def compile_graph(
+    graph: Graph,
+    *,
+    jit: bool = True,
+    donate_argnums=(),
+    lower: bool = True,
+) -> Callable:
+    """Compile ``graph`` to a callable.
+
+    Straight-line first-order graphs are lowered directly (no VM in the
+    trace); anything with residual graph values falls back to tracing the
+    VM.  The returned callable carries ``.lowered`` (bool) and ``.fn`` (the
+    un-jitted callable) for introspection.
+    """
+    fn = try_lower(graph) if lower else None
+    lowered = fn is not None
+    if fn is None:
+        fn = trace_graph(graph)
+    out = jax.jit(fn, donate_argnums=donate_argnums) if jit else fn
+
+    def runner(*args: Any) -> Any:
+        return out(*args)
+
+    runner.__name__ = f"myia_{graph.name}"
+    runner.lowered = lowered
+    runner.fn = fn
+    runner.jitted = out if jit else None
+    return runner

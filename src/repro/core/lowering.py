@@ -1,0 +1,178 @@
+"""Direct lowering: straight-line compilation of first-order graphs.
+
+The paper's performance claim for ST AD (§4.3, Figure 1) is that once the
+adjoint has been inlined and simplified, what remains is a *straight-line
+program* that can be compiled ahead of time — "the graphs become amenable
+to ahead-of-time optimization" — instead of being interpreted.  The VM
+(``repro.core.vm``) is the general evaluator: it handles closures, free
+variables, recursion and data-dependent calls, at the price of heap task
+stacks, per-node frame dictionaries and per-input dispatch.  After the
+optimizer has done its job, the overwhelmingly common case is a graph with
+*none* of those features left — every apply calls a primitive held in a
+constant, every reachable node belongs to the root graph.
+
+This module emits that common case as generated Python source: one
+assignment per apply node in topological order, executed over the
+primitives' ``jnp`` implementations.  No Frame dicts, no task stack, no
+users-edge bookkeeping — the function can be run eagerly (cheap first
+call) or handed to ``jax.jit`` (XLA sees the identical straight-line
+program the VM trace would have produced, minus the interpretation cost).
+
+``lowering_blockers`` reports why a graph must stay on the VM:
+
+* a constant holding a :class:`Graph` survived optimization (residual
+  recursion, or a closure passed as a value — e.g. through ``switch`` on a
+  traced condition),
+* an apply whose callee is not a constant primitive (higher-order call),
+* a node owned by another graph (free variable: the graph is nested).
+
+``try_lower`` returns ``None`` in those cases and the caller falls back to
+the VM path (see ``jax_backend.compile_graph`` / ``api.MyiaFunction``).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+from .ir import (
+    Apply,
+    Constant,
+    Graph,
+    Node,
+    Parameter,
+    dfs_nodes,
+    is_constant_graph,
+    toposort,
+)
+from .primitives import Primitive
+
+__all__ = ["LoweringError", "lowering_blockers", "lower_graph", "try_lower"]
+
+
+class LoweringError(Exception):
+    """The graph is not a first-order straight-line program."""
+
+
+def lowering_blockers(graph: Graph) -> list[str]:
+    """Reasons ``graph`` cannot be lowered (empty list: lowerable)."""
+    blockers: list[str] = []
+    if graph.return_ is None:
+        return ["graph has no return node"]
+    for n in dfs_nodes(graph.return_):
+        if is_constant_graph(n):
+            blockers.append(
+                f"graph-valued constant {n.value.name!r} survived optimization "
+                "(residual recursion or closure value)"
+            )
+        elif isinstance(n, Apply):
+            if n.graph is not graph:
+                blockers.append(
+                    f"free variable: apply node owned by nested graph "
+                    f"{n.graph and n.graph.name!r}"
+                )
+            fn = n.fn
+            if not (isinstance(fn, Constant) and isinstance(fn.value, Primitive)):
+                blockers.append(
+                    f"non-primitive callee {fn!r} (higher-order or graph call)"
+                )
+        elif isinstance(n, Parameter) and n.graph is not graph:
+            blockers.append(f"free parameter {n!r} of graph {n.graph.name!r}")
+    return blockers
+
+
+def _literal(value: Any) -> str | None:
+    """Source literal for ``value``, or None if it must be bound by name.
+
+    Exact-type checks only: subclasses (np.float64, IntEnum, …) may repr
+    to invalid or semantically different source (e.g. numpy>=2 reprs as
+    ``np.float64(1.5)``, and demoting a strong-typed numpy scalar to a
+    Python literal would change jax dtype promotion) — those are bound in
+    the closure environment instead."""
+    if value is None:
+        return "None"
+    t = type(value)
+    if t is bool or t is str or t is int:
+        return repr(value)
+    if t is float:
+        return repr(value) if math.isfinite(value) else None
+    if t is tuple:
+        elts = [_literal(v) for v in value]
+        if any(e is None for e in elts):
+            return None
+        inner = ", ".join(elts)
+        return f"({inner},)" if len(elts) == 1 else f"({inner})"
+    return None
+
+
+def lower_graph(graph: Graph) -> Callable:
+    """Compile a first-order straight-line graph to a Python callable.
+
+    The generated source (kept on the result as ``fn.__lowered_source__``)
+    is one assignment per apply node in topological order; primitive
+    implementations and non-literal constants are bound in the closure
+    namespace.  Raises :class:`LoweringError` if the graph has residual
+    graph values / higher-order calls / free variables.
+    """
+    blockers = lowering_blockers(graph)
+    if blockers:
+        raise LoweringError("; ".join(blockers))
+
+    env: dict[str, Any] = {}
+    prim_names: dict[int, str] = {}  # id(prim) -> bound name
+    names: dict[int, str] = {}  # node id -> source name
+    params = []
+    for i, p in enumerate(graph.parameters):
+        names[p._id] = f"p{i}"
+        params.append(f"p{i}")
+
+    def bind_prim(prim: Primitive) -> str:
+        name = prim_names.get(id(prim))
+        if name is None:
+            name = f"_prim_{prim.name}_{len(prim_names)}"
+            prim_names[id(prim)] = name
+            env[name] = prim.impl
+        return name
+
+    def ref(node: Node) -> str:
+        got = names.get(node._id)
+        if got is not None:
+            return got
+        assert isinstance(node, Constant), f"unnamed non-constant {node!r}"
+        lit = _literal(node.value)
+        if lit is not None:
+            return lit
+        name = f"_const_{len(env)}"
+        env[name] = node.value
+        names[node._id] = name
+        return name
+
+    lines = [f"def _lowered({', '.join(params)}):"]
+    seq = 0
+    for n in toposort(graph):
+        if not isinstance(n, Apply):
+            continue
+        prim = n.fn.value
+        args = ", ".join(ref(a) for a in n.args)
+        name = f"v{seq}"
+        seq += 1
+        names[n._id] = name
+        lines.append(f"    {name} = {bind_prim(prim)}({args})  # {prim.name}")
+    lines.append(f"    return {ref(graph.return_)}")
+    source = "\n".join(lines) + "\n"
+
+    namespace = dict(env)
+    exec(compile(source, f"<myia-lowered:{graph.name}>", "exec"), namespace)
+    fn = namespace["_lowered"]
+    fn.__name__ = f"lowered_{graph.name}"
+    fn.__lowered_source__ = source
+    fn.__lowered_env__ = env
+    return fn
+
+
+def try_lower(graph: Graph) -> Callable | None:
+    """``lower_graph`` if possible, else None (caller falls back to the VM)."""
+    try:
+        return lower_graph(graph)
+    except LoweringError:
+        return None

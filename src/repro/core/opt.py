@@ -18,10 +18,30 @@ graphs can be simplified using inlining and local optimizations."  (paper
 Dead code needs no explicit pass: execution and node counts only ever
 follow edges from the return node, so orphaned computation simply vanishes
 (the VM is demand-driven; ``reachable_nodes`` is the metric).
+
+Rewriting engines
+-----------------
+Two engines drive the local rules to their fixed point:
+
+* ``engine="worklist"`` (default): users-edge-driven.  Every reachable
+  node is seeded once; each ``replace(old, new)`` re-enqueues only ``new``,
+  its users (one and two levels — rules inspect at most grandchildren), and
+  the users of the replaced node's inputs.  Local rules therefore converge
+  in near-linear time instead of O(sweeps × family-size).  When the
+  worklist drains, one full verification sweep confirms the fixed point
+  (any stragglers — there should be none — are processed and the drain
+  repeats), so both engines always reach the same normal form.
+* ``engine="sweep"``: the reference fixed-point implementation — repeated
+  whole-family DFS sweeps until a sweep finds nothing.  Kept as the
+  equivalence oracle for tests and debugging.
+
+``optimize(..., stats=OptStats())`` fills a per-rule hit counter plus
+worklist/inline counters, so benchmarks can record *why* a graph shrank.
 """
 
 from __future__ import annotations
 
+from collections import deque
 from typing import Any, Callable
 
 import numpy as np
@@ -30,11 +50,11 @@ from . import primitives as P
 from .ir import (
     Apply,
     Constant,
+    FamilyIndex,
     Graph,
     GraphCloner,
     Node,
     dfs_nodes,
-    graph_and_descendants,
     is_apply,
     is_constant_graph,
     is_constant_prim,
@@ -43,7 +63,7 @@ from .infer import AArray, AScalar, ATuple  # noqa: F401 (ATuple used in folding
 from .primitives import Primitive
 from .values import EnvInstance, SymbolicKey
 
-__all__ = ["optimize", "reachable_nodes", "count_nodes"]
+__all__ = ["optimize", "reachable_nodes", "count_nodes", "OptStats"]
 
 
 def reachable_nodes(graph: Graph) -> list[Node]:
@@ -59,30 +79,81 @@ def count_nodes(graph: Graph) -> int:
 # ---------------------------------------------------------------------------
 
 
+class OptStats:
+    """Counters from one ``optimize`` run (pass ``optimize(..., stats=s)``).
+
+    * ``rule_hits`` — rewrites applied, per rule name,
+    * ``inlined_calls`` / ``inline_waves`` — inliner activity,
+    * ``worklist_pops`` — nodes examined by the worklist engine,
+    * ``verify_sweep_hits`` — rewrites found only by the post-drain
+      verification sweep (should stay 0: nonzero means the enqueue locality
+      missed a rule dependency and the engine fell back to sweeping),
+    * ``iterations`` — outer inline+rules iterations until fixpoint.
+    """
+
+    __slots__ = (
+        "rule_hits",
+        "inlined_calls",
+        "inline_waves",
+        "worklist_pops",
+        "verify_sweep_hits",
+        "iterations",
+    )
+
+    def __init__(self) -> None:
+        self.rule_hits: dict[str, int] = {}
+        self.inlined_calls = 0
+        self.inline_waves = 0
+        self.worklist_pops = 0
+        self.verify_sweep_hits = 0
+        self.iterations = 0
+
+    def record_rule(self, name: str) -> None:
+        self.rule_hits[name] = self.rule_hits.get(name, 0) + 1
+
+    @property
+    def total_rewrites(self) -> int:
+        return sum(self.rule_hits.values())
+
+    def as_dict(self) -> dict:
+        return {
+            "rule_hits": dict(sorted(self.rule_hits.items())),
+            "total_rewrites": self.total_rewrites,
+            "inlined_calls": self.inlined_calls,
+            "inline_waves": self.inline_waves,
+            "worklist_pops": self.worklist_pops,
+            "verify_sweep_hits": self.verify_sweep_hits,
+            "iterations": self.iterations,
+        }
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"OptStats({self.as_dict()!r})"
+
+
 class _Rewriter:
-    def __init__(self, root: Graph, max_inline_size: int | None) -> None:
+    def __init__(
+        self,
+        root: Graph,
+        max_inline_size: int | None,
+        stats: OptStats | None = None,
+    ) -> None:
         self.root = root
         self.max_inline_size = max_inline_size
         self.changed = False
-        self._fam: set[Graph] | None = None
-        self._desc_cache: dict[Graph, set[Graph]] = {}
-        self._rec_cache: dict[Graph, bool] = {}
-        self._safe_cache: dict[Graph, bool] = {}
+        self.stats = stats if stats is not None else OptStats()
+        self.fam = FamilyIndex(root)
+        #: enqueue hook, live only while the worklist engine drains
+        self._push: Callable[[Node], None] | None = None
+        #: ids of the family's return nodes, maintained while the worklist
+        #: engine runs (a userless node that is no graph's return is dead)
+        self._returns: set[int] | None = None
 
     # -- helpers -----------------------------------------------------------
     def family(self) -> set[Graph]:
-        # cached: membership only changes when inlining clones graphs
-        # (invalidate_family below); local rewrites can orphan graphs but
-        # scanning an orphan is merely wasted work, never unsound.
-        if self._fam is None:
-            self._fam = graph_and_descendants(self.root)
-        return self._fam
-
-    def invalidate_family(self) -> None:
-        self._fam = None
-        self._desc_cache.clear()
-        self._rec_cache.clear()
-        self._safe_cache.clear()
+        # incrementally maintained: inline clones extend it (note_clone);
+        # local rewrites can orphan graphs, but scanning an orphan is merely
+        # wasted work, never unsound.
+        return self.fam.graphs()
 
     def replace(self, old: Node, new: Node) -> None:
         for user, idx in list(old.users):
@@ -90,37 +161,32 @@ class _Rewriter:
         for g in self.family():
             if g.return_ is old:
                 g.set_return(new)
+                if self._returns is not None:
+                    self._returns.discard(old._id)
+                    self._returns.add(new._id)
         self.changed = True
-
-    # -- inlining -----------------------------------------------------------
-    def _desc(self, g: Graph) -> set[Graph]:
-        if g not in self._desc_cache:
-            self._desc_cache[g] = graph_and_descendants(g)
-        return self._desc_cache[g]
-
-    def _is_recursive(self, g: Graph) -> bool:
-        """Can ``g`` reach a reference to itself?  Uses the SAME
-        reachability the cloner uses (dfs entering graph constants AND
-        free-variable pointers into other graphs), so classification and
-        clone scope can never disagree."""
-        hit = self._rec_cache.get(g)
-        if hit is None:
-            hit = any(
-                is_constant_graph(n) and n.value is g for n in dfs_nodes(g.return_)
-            )
-            self._rec_cache[g] = hit
-        return hit
-
-    def _inline_safe(self, callee: Graph) -> bool:
-        """A callee may be inlined only if nothing recursive is reachable
-        from it: the cloner deep-copies ``graph_and_descendants(callee)``,
-        and duplicating a recursive cycle exposes a fresh entry wrapper
-        every wave — unbounded peeling of the recursion."""
-        hit = self._safe_cache.get(callee)
-        if hit is None:
-            hit = not any(self._is_recursive(h) for h in self._desc(callee))
-            self._safe_cache[callee] = hit
-        return hit
+        if isinstance(old, Apply):
+            # the replaced node is gone: sever its input edges so its former
+            # inputs' users sets stay live-only (this is what lets the
+            # worklist engine recognise — and skip — orphaned subtrees)
+            for i, inp in enumerate(old.inputs):
+                inp.users.discard((old, i))
+        push = self._push
+        if push is not None:
+            # users-edge-driven requeue: the replacement may itself match a
+            # rule; its users (= the replaced node's former users, rewired
+            # above) consume the new value; rules look through one level of
+            # inputs (make_tuple/setitem/cast chains), so refresh two levels
+            # of users; and the replaced node's inputs lost a user.
+            push(new)
+            for user, _ in list(new.users):
+                push(user)
+                for uu, _ in list(user.users):
+                    push(uu)
+            if isinstance(old, Apply):
+                for inp in old.inputs:
+                    for user, _ in list(inp.users):
+                        push(user)
 
     def _family_has_recursion(self) -> bool:
         """Value-based partial evaluation is gated on this: the inferencer's
@@ -129,17 +195,18 @@ class _Rewriter:
         node can be annotated with a base-case frame's value — folding it
         would be unsound.  Non-recursive families keep full constant
         propagation (the Figure-1 collapse)."""
-        return not self._inline_safe(self.root)
+        return not self.fam.inline_safe(self.root)
 
+    # -- inlining -----------------------------------------------------------
     def inline_pass(self, max_waves: int = 64) -> bool:
         """Wave-based inlining: one dfs collects every eligible call site,
         all are inlined, repeat until a wave finds none.
 
         Inlining a non-recursive callee cannot create a cycle among
-        pre-existing graphs (clones only *reference* graphs), so the
-        recursive set computed at wave start stays valid for the wave; it
-        is recomputed next wave so recursive clones are re-classified (or
-        recursion would unroll forever)."""
+        pre-existing graphs (clones only *reference* clones), so the
+        recursion facts cached in the family index stay valid across waves;
+        only the family set and stale descendant entries are updated, per
+        clone (``FamilyIndex.note_clone``)."""
         changed = False
         for _ in range(max_waves):
             fam = self.family()
@@ -150,7 +217,7 @@ class _Rewriter:
                     and n.graph in fam
                     and is_constant_graph(n.fn)
                     and n.fn.value is not n.graph
-                    and self._inline_safe(n.fn.value)
+                    and self.fam.inline_safe(n.fn.value)
                 ):
                     callee = n.fn.value
                     if callee.return_ is None:
@@ -165,6 +232,7 @@ class _Rewriter:
                     targets.append(n)
             if not targets:
                 return changed
+            self.stats.inline_waves += 1
             for n in targets:
                 if not is_constant_graph(n.fn):
                     continue  # rewritten by an earlier inline this wave
@@ -173,30 +241,107 @@ class _Rewriter:
                 cloner = GraphCloner(callee, inline_target=n.graph, param_repl=param_repl)
                 cloner.clone()  # (remaps symbolic env keys internally)
                 self.replace(n, cloner.inlined_return)
+                self.fam.note_clone(cloner)
+                self.stats.inlined_calls += 1
                 changed = True
                 self.changed = True
-            self.invalidate_family()  # clones added graphs
         return changed
 
     # -- local rules ----------------------------------------------------------
-    def rules_pass(self) -> bool:
+    def rules_pass(self, engine: str = "worklist") -> bool:
+        if engine == "sweep":
+            return self._rules_sweep()
+        if engine == "worklist":
+            return self._rules_worklist()
+        raise ValueError(f"unknown rewrite engine {engine!r}")
+
+    def _rules_sweep(self) -> bool:
+        """Reference engine: whole-family DFS sweeps to a fixed point."""
         changed = False
         work = True
         while work:
             work = False
-            # one dfs over the whole family (dfs_nodes enters graph
-            # constants); per-graph re-walks were O(F·N)
             for n in list(dfs_nodes(self.root.return_)):
                 if not (isinstance(n, Apply) and n.graph is not None):
                     continue
-                new = self.try_rules(n)
-                if new is not None:
+                hit = self.try_rules(n)
+                if hit is not None:
+                    new, rule = hit
+                    self.stats.record_rule(rule)
                     self.replace(n, new)
                     work = True
                     changed = True
         return changed
 
-    def try_rules(self, n: Apply) -> Node | None:
+    def _rules_worklist(self) -> bool:
+        """Worklist engine: seed every reachable node once, then follow
+        users edges — each replacement requeues only its local neighborhood
+        (see ``replace``), and subtrees orphaned by a rewrite are skipped
+        (userless non-return nodes cannot affect the program).  A final
+        verification sweep certifies the fixed point — any straggler it
+        finds is rewritten on the spot and the drain repeats — so this
+        engine and the sweep reference agree on normal forms."""
+        changed = False
+        work: deque[Apply] = deque()
+        queued: set[int] = set()
+
+        def push(node: Node) -> None:
+            if isinstance(node, Apply) and id(node) not in queued:
+                queued.add(id(node))
+                work.append(node)
+
+        self._push = push
+        self._returns = {
+            g.return_._id for g in self.family() if g.return_ is not None
+        }
+        try:
+            for n in dfs_nodes(self.root.return_):
+                push(n)
+            while True:
+                while work:
+                    n = work.popleft()
+                    queued.discard(id(n))
+                    if n.graph is None:
+                        continue
+                    if not n.users and n._id not in self._returns:
+                        # dead or orphaned: cannot affect the program.  Sever
+                        # its input edges and requeue the inputs — orphan
+                        # subtrees disconnect (and get skipped) transitively,
+                        # mirroring how a sweep's dfs never visits them.
+                        for i, inp in enumerate(n.inputs):
+                            inp.users.discard((n, i))
+                            push(inp)
+                        continue
+                    self.stats.worklist_pops += 1
+                    hit = self.try_rules(n)
+                    if hit is not None:
+                        new, rule = hit
+                        self.stats.record_rule(rule)
+                        self.replace(n, new)
+                        changed = True
+                # verification sweep: certify the fixed point (a hit here
+                # means a rule dependency the requeue policy missed — apply
+                # it directly and drain the consequences)
+                stragglers = 0
+                for n in list(dfs_nodes(self.root.return_)):
+                    if not (isinstance(n, Apply) and n.graph is not None):
+                        continue
+                    hit = self.try_rules(n)
+                    if hit is not None:
+                        new, rule = hit
+                        self.stats.record_rule(rule)
+                        self.replace(n, new)
+                        changed = True
+                        stragglers += 1
+                if not stragglers:
+                    break
+                self.stats.verify_sweep_hits += stragglers
+        finally:
+            self._push = None
+            self._returns = None
+        return changed
+
+    def try_rules(self, n: Apply) -> tuple[Node, str] | None:
         fn = n.fn
         if not (isinstance(fn, Constant) and isinstance(fn.value, Primitive)):
             return None
@@ -209,38 +354,44 @@ class _Rewriter:
         if p not in (P.env_setitem, P.env_getitem) and not self._family_has_recursion():
             known = _known_abstract_value(n.abstract)
             if known is not _NO_VALUE:
-                return Constant(known)
+                return Constant(known), "partial_eval"
 
         if p is P.tuple_getitem and len(a) == 2 and isinstance(a[1], Constant):
             idx = a[1].value
             src = a[0]
             if is_apply(src, P.make_tuple):
                 if not (isinstance(idx, int) and -len(src.args) <= idx < len(src.args)):
-                    return None  # stale/dead node from the sweep snapshot
-                return src.args[idx]
+                    return None  # stale/dead node from the pass snapshot
+                return src.args[idx], "getitem_of_make_tuple"
             if is_apply(src, P.tuple_setitem) and isinstance(src.args[1], Constant):
                 if src.args[1].value == idx:
-                    return src.args[2]
-                return n.graph.apply(P.tuple_getitem, src.args[0], idx)
+                    return src.args[2], "getitem_of_setitem_hit"
+                return (
+                    n.graph.apply(P.tuple_getitem, src.args[0], idx),
+                    "getitem_of_setitem_skip",
+                )
             if isinstance(src, Constant) and isinstance(src.value, tuple):
-                return Constant(src.value[idx])
+                return Constant(src.value[idx]), "getitem_of_const"
 
         if p is P.env_getitem and len(a) == 3:
             env, key, dflt = a
             if isinstance(key, Constant):
                 if is_apply(env, P.env_setitem) and isinstance(env.args[1], Constant):
                     if env.args[1].value == key.value:
-                        return env.args[2]
-                    return n.graph.apply(P.env_getitem, env.args[0], key, dflt)
+                        return env.args[2], "env_getitem_of_setitem_hit"
+                    return (
+                        n.graph.apply(P.env_getitem, env.args[0], key, dflt),
+                        "env_getitem_of_setitem_skip",
+                    )
                 if isinstance(env, Constant) and isinstance(env.value, EnvInstance):
                     if len(env.value) == 0:
-                        return dflt
+                        return dflt, "env_getitem_empty"
 
         if p is P.switch and len(a) == 3 and isinstance(a[0], Constant):
             if a[0].value is True:
-                return a[1]
+                return a[1], "switch_const"
             if a[0].value is False:
-                return a[2]
+                return a[2], "switch_const"
 
         if p is P.gadd and len(a) == 2:
             for i, j in ((0, 1), (1, 0)):
@@ -249,56 +400,56 @@ class _Rewriter:
                     z.value is None
                     or (isinstance(z.value, (int, float)) and z.value == 0)
                 ):
-                    return a[j]
+                    return a[j], "gadd_zero"
                 if is_apply(z, P.zeros_like):
-                    return a[j]
+                    return a[j], "gadd_zero"
 
         # algebraic: x+0, x-0, x*1, x/1, --x  (scalar literal identities only:
         # they cannot change the broadcast shape of the result)
         if p in (P.add, P.sub) and len(a) == 2:
             if _is_scalar_const(a[1], 0):
-                return a[0]
+                return a[0], "add_zero"
             if p is P.add and _is_scalar_const(a[0], 0):
-                return a[1]
+                return a[1], "add_zero"
         if p in (P.mul, P.div) and len(a) == 2:
             if _is_scalar_const(a[1], 1):
-                return a[0]
+                return a[0], "mul_one"
             if p is P.mul and _is_scalar_const(a[0], 1):
-                return a[1]
+                return a[1], "mul_one"
         if p in (P.power, P.integer_pow) and len(a) == 2 and _is_scalar_const(a[1], 1):
-            return a[0]
+            return a[0], "pow_one"
         if p is P.neg and is_apply(a[0], P.neg):
-            return a[0].args[0]
+            return a[0].args[0], "neg_neg"
 
         # shape-directed rules (need inferred abstracts)
         if p is P.shape and len(a) == 1:
             ab = a[0].abstract
             if isinstance(ab, AArray):
-                return Constant(tuple(ab.shape))
+                return Constant(tuple(ab.shape)), "shape_const"
             if isinstance(ab, AScalar) and ab.kind in ("int", "float", "bool"):
-                return Constant(())
+                return Constant(()), "shape_const"
         if p is P.dtype_of and len(a) == 1:
             ab = a[0].abstract
             if isinstance(ab, AArray):
-                return Constant(ab.dtype)
+                return Constant(ab.dtype), "dtype_const"
         if p in (P.unbroadcast, P.broadcast_to) and len(a) == 2 and isinstance(a[1], Constant):
             ab = a[0].abstract
             if isinstance(ab, AArray) and tuple(ab.shape) == tuple(a[1].value):
-                return a[0]
+                return a[0], "broadcast_noop"
             if (
                 isinstance(ab, AScalar)
                 and ab.kind in ("int", "float")
                 and tuple(a[1].value) == ()
             ):
-                return a[0]
+                return a[0], "broadcast_noop"
         if p is P.cast and len(a) == 2 and isinstance(a[1], Constant):
             ab = a[0].abstract
             if isinstance(ab, AArray) and ab.dtype == np.dtype(a[1].value):
-                return a[0]
+                return a[0], "cast_noop"
         if p is P.reshape and len(a) == 2 and isinstance(a[1], Constant):
             ab = a[0].abstract
             if isinstance(ab, AArray) and tuple(ab.shape) == tuple(a[1].value):
-                return a[0]
+                return a[0], "reshape_noop"
 
         # constant folding (pure, cheap prims on python scalars/tuples;
         # results may be tiny arrays, e.g. cast(1.0, f32))
@@ -310,7 +461,7 @@ class _Rewriter:
                 except Exception:
                     return None
                 if _foldable_value(res) or _tiny_array(res):
-                    return Constant(res)
+                    return Constant(res), "const_fold"
         return None
 
 
@@ -384,14 +535,26 @@ def optimize(
     inline: bool = True,
     max_inline_size: int | None = None,
     max_iterations: int = 50,
+    engine: str = "worklist",
+    stats: OptStats | None = None,
 ) -> Graph:
-    """Optimize ``graph`` in place (and return it)."""
-    rw = _Rewriter(graph, max_inline_size)
+    """Optimize ``graph`` in place (and return it).
+
+    ``engine`` selects the local-rule driver: ``"worklist"`` (near-linear,
+    the default) or ``"sweep"`` (the reference fixed-point sweep — both
+    reach the same normal form; see the module docstring).  Pass an
+    :class:`OptStats` as ``stats`` to collect per-rule hit counters.
+    """
+    rw = _Rewriter(graph, max_inline_size, stats)
     for _ in range(max_iterations):
         changed = False
         if inline:
             changed |= rw.inline_pass()
-        changed |= rw.rules_pass()
+        changed |= rw.rules_pass(engine)
+        rw.stats.iterations += 1
         if not changed:
             break
+        # rewrites may have cut graph references (e.g. switch-of-constant
+        # dropping a branch): refresh recursion facts before re-inlining
+        rw.fam.invalidate_rewrites()
     return graph

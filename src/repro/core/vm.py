@@ -10,11 +10,14 @@ Demand-driven, explicit-stack evaluation:
 * the work stack lives on the heap: arbitrarily deep recursion (loops are
   tail calls in this IR) cannot blow the Python C stack.
 
-The same evaluator doubles as the JAX backend's executor: all array
-primitives are implemented with ``jnp``, so ``jax.jit`` can *trace through*
-the VM — the interpreter overhead is paid once at trace time, and XLA
-compiles the traced straight-line program (our analogue of the paper's
-"compile the straight-line parts with TVM").
+The same evaluator doubles as the JAX backend's *fallback* executor: all
+array primitives are implemented with ``jnp``, so ``jax.jit`` can *trace
+through* the VM — the interpreter overhead is paid once at trace time, and
+XLA compiles the traced straight-line program (our analogue of the paper's
+"compile the straight-line parts with TVM").  Optimized first-order graphs
+skip the VM entirely: ``repro.core.lowering`` emits them as straight-line
+Python callables, and the VM only serves graphs with residual graph values
+(recursion, higher-order calls) — see ``docs/pipeline.md``.
 """
 
 from __future__ import annotations
@@ -87,7 +90,11 @@ class VM:
                     tasks.append(("apply", node, frame, d))
                     owner = frame if node.graph is frame.graph else frame.lookup_frame(node)
                     for inp in node.inputs:
-                        tasks.append(("eval", inp, owner, None))
+                        # constants need no eval task: _quick_value resolves
+                        # them at apply time (also avoids creating every
+                        # graph-constant Closure twice)
+                        if not isinstance(inp, Constant):
+                            tasks.append(("eval", inp, owner, None))
                 else:  # pragma: no cover - parameters are always bound
                     raise RuntimeError(f"unbound node {node!r}")
 
