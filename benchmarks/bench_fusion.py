@@ -1,0 +1,110 @@
+"""Fusion subsystem benchmark (paper §3–4: kernels as the compilation
+target of ST adjoints).
+
+For the MLP adjoint (the paper's running example) and a forward reduction
+chain, report
+
+* the **partition**: cluster count, fused nodes, average nodes per
+  cluster (acceptance: ≥3 on the MLP adjoint) and kernel-launch
+  reduction (apply nodes emitted before/after fusion),
+* **wall clock**: median jitted step time of the unfused straight-line
+  lowering vs. the fused lowering in ``ref`` mode (cluster oracles —
+  the CPU production path; parity or better expected, XLA sees an
+  equivalent program with fewer call sites) and in ``pallas_interpret``
+  mode (the Pallas interpreter is a correctness simulator, its time is
+  reported for completeness, not compared).
+
+Rows land in ``BENCH_fusion.json`` via ``benchmarks/run.py`` so
+successive PRs leave a trajectory.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import P, build_grad_graph, parse_function
+from repro.core.api import compile_pipeline
+from repro.core.infer import abstract_of_value
+from repro.core.lowering import lower_graph
+from repro.kernels import get_kernel_mode, set_kernel_mode
+
+
+def _two_layer(w1, w2, x):
+    h = P.tanh(x @ w1)
+    return P.reduce_sum(P.tanh(h @ w2), (0, 1), False)
+
+
+def _reduce_chain(x):
+    return P.reduce_sum(P.tanh(x) * P.sigmoid(x) + 1.0, (0, 1), False)
+
+
+def _median_us(fn, args, reps: int) -> float:
+    ts = []
+    r = fn(*args)
+    jax.block_until_ready(r)  # compile outside the timer
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def _bench_graph(name: str, graph, args, reps: int) -> dict:
+    g = compile_pipeline(graph, tuple(abstract_of_value(a) for a in args))
+    unfused = jax.jit(lower_graph(g))
+    fused_fn = lower_graph(g, fuse=True)
+    # the attached plan counts only clusters that actually emitted kernels
+    plan = fused_fn.__fusion_plan__
+    fused = jax.jit(fused_fn)
+
+    prev = get_kernel_mode()
+    try:
+        set_kernel_mode("ref")
+        unfused_us = _median_us(unfused, args, reps)
+        fused_ref_us = _median_us(fused, args, reps)
+        set_kernel_mode("pallas_interpret")
+        fused_interp = jax.jit(lower_graph(g, fuse=True))
+        fused_interp_us = _median_us(fused_interp, args, reps)
+    finally:
+        set_kernel_mode(prev)
+
+    stats = plan.stats()
+    emitted = len(fused_fn.__fused_kernels__)
+    return {
+        "workload": name,
+        "n_clusters": stats["n_clusters"],
+        "kernels_emitted": emitted,
+        "nodes_per_cluster": stats["nodes_per_cluster"],
+        "launches_before": stats["launches_before"],
+        "launches_after": stats["launches_after"],
+        "unfused_us": round(unfused_us, 1),
+        "fused_ref_us": round(fused_ref_us, 1),
+        "fused_over_unfused": round(fused_ref_us / unfused_us, 3),
+        "fused_interpret_us": round(fused_interp_us, 1),
+    }
+
+
+def run(reps: int = 50) -> list[dict]:
+    rows = []
+    for size in (64, 256):
+        k = jax.random.PRNGKey(0)
+        w1 = jax.random.normal(k, (size, size)) * 0.1
+        w2 = jax.random.normal(jax.random.PRNGKey(1), (size, size)) * 0.1
+        x = jax.random.normal(jax.random.PRNGKey(2), (32, size))
+        g = build_grad_graph(parse_function(_two_layer), (0, 1))
+        rows.append(_bench_graph(f"mlp_adjoint_{size}", g, (w1, w2, x), reps))
+    x = jax.random.normal(jax.random.PRNGKey(3), (256, 512))
+    rows.append(
+        _bench_graph("reduce_chain_fwd", parse_function(_reduce_chain), (x,), reps)
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -21,6 +21,7 @@ import os
 TRAJECTORY = {
     "compile_time": "BENCH_compile.json",
     "ad_overhead": "BENCH_ad_overhead.json",
+    "fusion": "BENCH_fusion.json",
 }
 
 
@@ -34,12 +35,19 @@ def main(argv=None) -> int:
     )
     args = ap.parse_args(argv)
 
-    from . import bench_ad_overhead, bench_compile_time, bench_kernels, bench_opt_effectiveness
+    from . import (
+        bench_ad_overhead,
+        bench_compile_time,
+        bench_fusion,
+        bench_kernels,
+        bench_opt_effectiveness,
+    )
 
     benches = {
         "ad_overhead": lambda: bench_ad_overhead.run(reps=5 if args.quick else 30),
         "opt_effectiveness": bench_opt_effectiveness.run,
         "compile_time": lambda: bench_compile_time.run(reps=10 if args.quick else 50),
+        "fusion": lambda: bench_fusion.run(reps=10 if args.quick else 50),
         "kernels": bench_kernels.run,
     }
     if args.quick and not args.only:

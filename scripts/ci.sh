@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 test suite + quick benchmark refresh.
+#
+#   scripts/ci.sh            # everything
+#   SKIP_BENCH=1 scripts/ci.sh   # tests only
+#
+# The quick benchmark run rewrites the repo-root BENCH_*.json trajectory
+# files (compile time, AD overhead, fusion), so every CI pass leaves a
+# perf data point for the next PR to diff against.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+if [ "${SKIP_BENCH:-0}" != "1" ]; then
+  echo "== quick benchmarks (BENCH_*.json trajectories) =="
+  python -m benchmarks.run --quick
+fi

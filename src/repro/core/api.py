@@ -78,11 +78,16 @@ def compile_pipeline(
     infer_types: bool = True,
     engine: str = "worklist",
     stats: OptStats | None = None,
+    patterns: bool = False,
 ) -> Graph:
     """inline → infer → optimize, on a private clone of ``graph``.
 
     ``engine`` / ``stats`` are forwarded to :func:`repro.core.opt.optimize`
-    (both optimize calls share the one stats object).
+    (both optimize calls share the one stats object).  ``patterns=True``
+    additionally enables the kernel-pattern rules of the fusion tier
+    (rmsnorm / softmax-attention subgraphs rewritten to the hand-written
+    Pallas primitives registered in ``repro.kernels.ops``) in the
+    shape-directed pass.
     """
     g = clone_graph(graph)
     if not opt:
@@ -93,7 +98,8 @@ def compile_pipeline(
             infer(g, *example_args)
         except InferenceError:
             pass  # dynamic program: shape-directed rules simply won't fire
-        optimize(g, engine=engine, stats=stats)  # shape-directed pass
+        # shape-directed pass (kernel patterns need inferred shapes)
+        optimize(g, engine=engine, stats=stats, patterns=patterns)
     return g
 
 
@@ -108,6 +114,8 @@ class MyiaFunction:
         *,
         backend: str = "jax",
         opt: bool = True,
+        fuse: bool = False,
+        patterns: bool = False,
         name: str | None = None,
     ) -> None:
         if fn is None and graph is None:
@@ -116,6 +124,11 @@ class MyiaFunction:
         self._graph = graph
         self.backend = backend
         self.opt = opt
+        #: fusion tier: cluster the optimized graph and execute regions as
+        #: generated Pallas kernels (see docs/fusion.md)
+        self.fuse = fuse
+        #: kernel-pattern rewrites (rmsnorm / attention → Pallas prims)
+        self.patterns = patterns
         self._specializations: dict[tuple, Callable] = {}
         self.__name__ = name or (fn.__name__ if fn is not None else graph.name)
         if fn is not None:
@@ -152,7 +165,16 @@ class MyiaFunction:
         return tuple(out)
 
     def specialize(self, args: tuple) -> Callable:
-        key = (self.backend, self._sigkey(args))
+        if self.fuse:
+            # fused runners bake the kernel mode in at trace time (the
+            # FusedKernel dispatch runs under jit), so a mode switch must
+            # select a different specialization, not reuse a stale trace
+            from repro.kernels.ops import get_kernel_mode
+
+            mode = get_kernel_mode()
+        else:
+            mode = None
+        key = (self.backend, self.fuse, self.patterns, mode, self._sigkey(args))
         hit = self._specializations.get(key)
         if hit is not None:
             return hit
@@ -160,7 +182,7 @@ class MyiaFunction:
             example = tuple(abstract_of_value(a) for a in args)
         except InferenceError:
             example = None  # e.g. a list static: skip inference, VM handles it
-        g = compile_pipeline(self.graph, example, opt=self.opt)
+        g = compile_pipeline(self.graph, example, opt=self.opt, patterns=self.patterns)
         runner = self._make_runner(g, args)
         self._specializations[key] = runner
         return runner
@@ -175,7 +197,7 @@ class MyiaFunction:
         # jax backend: arrays are dynamic (traced), everything else static.
         dyn_idx = [i for i, a in enumerate(example_args) if is_array_like(a)]
         static = {i: a for i, a in enumerate(example_args) if i not in set(dyn_idx)}
-        lowered = try_lower(g)
+        lowered = try_lower(g, fuse=self.fuse)
 
         def assemble(arrs) -> tuple:
             full: list[Any] = [None] * (len(arrs) + len(static))
@@ -236,7 +258,10 @@ class MyiaFunction:
     # -- introspection (benchmarks / tests) --------------------------------
     def optimized_graph(self, *args: Any) -> Graph:
         return compile_pipeline(
-            self.graph, tuple(abstract_of_value(a) for a in args), opt=self.opt
+            self.graph,
+            tuple(abstract_of_value(a) for a in args),
+            opt=self.opt,
+            patterns=self.patterns,
         )
 
     def node_count(self, *args: Any, optimized: bool = True) -> int:
@@ -244,11 +269,25 @@ class MyiaFunction:
         return count_nodes(g)
 
 
-def myia(fn: Callable | None = None, *, backend: str = "jax", opt: bool = True):
-    """Decorator: compile ``fn`` (pure Python subset) through the pipeline."""
+def myia(
+    fn: Callable | None = None,
+    *,
+    backend: str = "jax",
+    opt: bool = True,
+    fuse: bool = False,
+    patterns: bool = False,
+):
+    """Decorator: compile ``fn`` (pure Python subset) through the pipeline.
+
+    ``fuse=True`` turns on the fusion tier (clustered regions run as
+    generated Pallas kernels); ``patterns=True`` additionally rewrites
+    kernel-shaped subgraphs (rmsnorm, softmax-attention core) to the
+    hand-written Pallas primitives.  Both default off: the unfused
+    straight-line lowering remains the bit-exact reference.
+    """
 
     def wrap(f: Callable) -> MyiaFunction:
-        return MyiaFunction(f, backend=backend, opt=opt)
+        return MyiaFunction(f, backend=backend, opt=opt, fuse=fuse, patterns=patterns)
 
     return wrap(fn) if fn is not None else wrap
 
@@ -293,22 +332,49 @@ def _macro_expand_vag(parser, block, ast_args):
     return Constant(build_value_and_grad_graph(fn_node.value))
 
 
-def grad(fn: Any, wrt: int | tuple[int, ...] = 0, *, backend: str = "jax", opt: bool = True):
+def grad(
+    fn: Any,
+    wrt: int | tuple[int, ...] = 0,
+    *,
+    backend: str = "jax",
+    opt: bool = True,
+    fuse: bool = False,
+    patterns: bool = False,
+):
     """Reverse-mode gradient of a scalar-output function (paper §3.2)."""
     g = build_grad_graph(_as_graph(fn), wrt)
-    return MyiaFunction(graph=g, backend=backend, opt=opt, name=g.name)
+    return MyiaFunction(
+        graph=g, backend=backend, opt=opt, fuse=fuse, patterns=patterns, name=g.name
+    )
 
 
 def value_and_grad(
-    fn: Any, wrt: int | tuple[int, ...] = 0, *, backend: str = "jax", opt: bool = True
+    fn: Any,
+    wrt: int | tuple[int, ...] = 0,
+    *,
+    backend: str = "jax",
+    opt: bool = True,
+    fuse: bool = False,
+    patterns: bool = False,
 ):
     g = build_value_and_grad_graph(_as_graph(fn), wrt)
-    return MyiaFunction(graph=g, backend=backend, opt=opt, name=g.name)
+    return MyiaFunction(
+        graph=g, backend=backend, opt=opt, fuse=fuse, patterns=patterns, name=g.name
+    )
 
 
-def vjp(fn: Any, *, backend: str = "jax", opt: bool = True):
+def vjp(
+    fn: Any,
+    *,
+    backend: str = "jax",
+    opt: bool = True,
+    fuse: bool = False,
+    patterns: bool = False,
+):
     g = build_vjp_graph(_as_graph(fn))
-    return MyiaFunction(graph=g, backend=backend, opt=opt, name=g.name)
+    return MyiaFunction(
+        graph=g, backend=backend, opt=opt, fuse=fuse, patterns=patterns, name=g.name
+    )
 
 
 grad.__is_myia_macro__ = True

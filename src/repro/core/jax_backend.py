@@ -54,22 +54,45 @@ def compile_graph(
     jit: bool = True,
     donate_argnums=(),
     lower: bool = True,
+    fuse: bool = False,
 ) -> Callable:
     """Compile ``graph`` to a callable.
 
     Straight-line first-order graphs are lowered directly (no VM in the
     trace); anything with residual graph values falls back to tracing the
-    VM.  The returned callable carries ``.lowered`` (bool) and ``.fn`` (the
+    VM.  ``fuse=True`` selects the fusion tier: clustered regions execute
+    as generated Pallas kernels (``repro.core.fusion`` +
+    ``repro.kernels.codegen``), mode-selected by ``set_kernel_mode``.  The
+    returned callable carries ``.lowered`` (bool) and ``.fn`` (the
     un-jitted callable) for introspection.
     """
-    fn = try_lower(graph) if lower else None
+    fn = try_lower(graph, fuse=fuse) if lower else None
     lowered = fn is not None
     if fn is None:
         fn = trace_graph(graph)
-    out = jax.jit(fn, donate_argnums=donate_argnums) if jit else fn
 
-    def runner(*args: Any) -> Any:
-        return out(*args)
+    if jit and fuse and lowered:
+        # FusedKernel dispatch reads set_kernel_mode at TRACE time, so one
+        # jit executable pins one mode — keep one jit per mode observed,
+        # and the documented flip-and-rerun flow retraces instead of
+        # silently replaying the old mode's executable.
+        by_mode: dict[str, Callable] = {}
+
+        def runner(*args: Any) -> Any:
+            from repro.kernels.ops import get_kernel_mode
+
+            mode = get_kernel_mode()
+            jitted = by_mode.get(mode)
+            if jitted is None:
+                jitted = by_mode[mode] = jax.jit(fn, donate_argnums=donate_argnums)
+            return jitted(*args)
+
+        out = None
+    else:
+        out = jax.jit(fn, donate_argnums=donate_argnums) if jit else fn
+
+        def runner(*args: Any) -> Any:
+            return out(*args)
 
     runner.__name__ = f"myia_{graph.name}"
     runner.lowered = lowered

@@ -55,30 +55,35 @@ class LoweringError(Exception):
 
 
 def lowering_blockers(graph: Graph) -> list[str]:
-    """Reasons ``graph`` cannot be lowered (empty list: lowerable)."""
-    blockers: list[str] = []
+    """Reasons ``graph`` cannot be lowered (empty list: lowerable).
+
+    Messages are de-duplicated (first occurrence wins): a residually
+    recursive family repeats the same graph-valued constant at every call
+    site, and callers log/assert on the list — N copies of one message
+    carry no extra information."""
     if graph.return_ is None:
         return ["graph has no return node"]
+    blockers: dict[str, None] = {}
     for n in dfs_nodes(graph.return_):
         if is_constant_graph(n):
-            blockers.append(
+            blockers.setdefault(
                 f"graph-valued constant {n.value.name!r} survived optimization "
                 "(residual recursion or closure value)"
             )
         elif isinstance(n, Apply):
             if n.graph is not graph:
-                blockers.append(
+                blockers.setdefault(
                     f"free variable: apply node owned by nested graph "
                     f"{n.graph and n.graph.name!r}"
                 )
             fn = n.fn
             if not (isinstance(fn, Constant) and isinstance(fn.value, Primitive)):
-                blockers.append(
+                blockers.setdefault(
                     f"non-primitive callee {fn!r} (higher-order or graph call)"
                 )
         elif isinstance(n, Parameter) and n.graph is not graph:
-            blockers.append(f"free parameter {n!r} of graph {n.graph.name!r}")
-    return blockers
+            blockers.setdefault(f"free parameter {n!r} of graph {n.graph.name!r}")
+    return list(blockers)
 
 
 def _literal(value: Any) -> str | None:
@@ -105,7 +110,7 @@ def _literal(value: Any) -> str | None:
     return None
 
 
-def lower_graph(graph: Graph) -> Callable:
+def lower_graph(graph: Graph, *, fuse: bool = False) -> Callable:
     """Compile a first-order straight-line graph to a Python callable.
 
     The generated source (kept on the result as ``fn.__lowered_source__``)
@@ -113,10 +118,40 @@ def lower_graph(graph: Graph) -> Callable:
     implementations and non-literal constants are bound in the closure
     namespace.  Raises :class:`LoweringError` if the graph has residual
     graph values / higher-order calls / free variables.
+
+    With ``fuse=True`` the graph is first partitioned into fusion regions
+    (``repro.core.fusion``); every cluster the code generator accepts is
+    emitted as ONE call to its generated Pallas kernel (mode-dispatched:
+    jnp oracle / Pallas interpret / compiled — see
+    ``repro.kernels.codegen``), and its interior nodes disappear from the
+    emitted source.  Clusters the generator declines fall back to the
+    per-node jnp path — fusion never changes *whether* a graph lowers.
+    The fusion plan and kernels ride on the result as
+    ``fn.__fusion_plan__`` / ``fn.__fused_kernels__``.
     """
     blockers = lowering_blockers(graph)
     if blockers:
         raise LoweringError("; ".join(blockers))
+
+    plan = None
+    fused: dict[int, Any] = {}  # root node id -> FusedKernel
+    skip: set[int] = set()  # interior member ids of emitted clusters
+    cluster_of_root: dict[int, Any] = {}
+    if fuse:
+        from .fusion import partition_graph
+        from repro.kernels.codegen import emit_cluster
+
+        plan = partition_graph(graph)
+        for cluster in plan.clusters:
+            kernel = emit_cluster(cluster)
+            if kernel is None:
+                continue  # declined: this cluster stays on the jnp path
+            fused[cluster.root._id] = kernel
+            cluster_of_root[cluster.root._id] = cluster
+            skip |= cluster.members - {cluster.root._id}
+        # the attached plan must account only for clusters that actually
+        # emitted — declined ones save no launches
+        plan.clusters = [c for c in plan.clusters if c.root._id in fused]
 
     env: dict[str, Any] = {}
     prim_names: dict[int, str] = {}  # id(prim) -> bound name
@@ -150,13 +185,23 @@ def lower_graph(graph: Graph) -> Callable:
     lines = [f"def _lowered({', '.join(params)}):"]
     seq = 0
     for n in toposort(graph):
-        if not isinstance(n, Apply):
+        if not isinstance(n, Apply) or n._id in skip:
             continue
-        prim = n.fn.value
-        args = ", ".join(ref(a) for a in n.args)
         name = f"v{seq}"
         seq += 1
         names[n._id] = name
+        kernel = fused.get(n._id)
+        if kernel is not None:
+            cluster = cluster_of_root[n._id]
+            kname = f"_fused_{len(env)}"
+            env[kname] = kernel
+            args = ", ".join(ref(a) for a in cluster.inputs)
+            lines.append(
+                f"    {name} = {kname}({args})  # fused[{kernel.n_nodes}] {kernel.name}"
+            )
+            continue
+        prim = n.fn.value
+        args = ", ".join(ref(a) for a in n.args)
         lines.append(f"    {name} = {bind_prim(prim)}({args})  # {prim.name}")
     lines.append(f"    return {ref(graph.return_)}")
     source = "\n".join(lines) + "\n"
@@ -167,12 +212,33 @@ def lower_graph(graph: Graph) -> Callable:
     fn.__name__ = f"lowered_{graph.name}"
     fn.__lowered_source__ = source
     fn.__lowered_env__ = env
+    fn.__fusion_plan__ = plan
+    fn.__fused_kernels__ = list(fused.values())
     return fn
 
 
-def try_lower(graph: Graph) -> Callable | None:
-    """``lower_graph`` if possible, else None (caller falls back to the VM)."""
+def try_lower(graph: Graph, *, fuse: bool = False) -> Callable | None:
+    """``lower_graph`` if possible, else None (caller falls back to the VM).
+
+    The result is cached on the graph (``graph.flags``), keyed by the fuse
+    tier: ``MyiaFunction.specialize`` and ``compile_graph`` both probe the
+    same optimized clone, and each probe used to re-walk the whole graph
+    (blockers scan + emission).  The entry records which graph it belongs
+    to — ``clone_graph`` shallow-copies ``flags``, and a clone (which the
+    pipeline then optimizes further) must NOT inherit the original's
+    verdict.  The cache is only correct for graphs that are no longer
+    being rewritten — which is the only time callers lower.
+    """
+    entry = graph.flags.get("_lower_cache")
+    if entry is None or entry[0] is not graph:
+        entry = (graph, {})
+        graph.flags["_lower_cache"] = entry
+    cache = entry[1]
+    if fuse in cache:
+        return cache[fuse]
     try:
-        return lower_graph(graph)
+        fn = lower_graph(graph, fuse=fuse)
     except LoweringError:
-        return None
+        fn = None
+    cache[fuse] = fn
+    return fn

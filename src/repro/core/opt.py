@@ -136,10 +136,12 @@ class _Rewriter:
         root: Graph,
         max_inline_size: int | None,
         stats: OptStats | None = None,
+        patterns: bool = False,
     ) -> None:
         self.root = root
         self.max_inline_size = max_inline_size
         self.changed = False
+        self.patterns = patterns
         self.stats = stats if stats is not None else OptStats()
         self.fam = FamilyIndex(root)
         #: enqueue hook, live only while the worklist engine drains
@@ -462,6 +464,13 @@ class _Rewriter:
                     return None
                 if _foldable_value(res) or _tiny_array(res):
                     return Constant(res), "const_fold"
+
+        # kernel-pattern rules (fusion tier only): rewrite kernel-shaped
+        # subgraphs to the hand-written Pallas primitives
+        if self.patterns:
+            hit = _try_kernel_patterns(n, p)
+            if hit is not None:
+                return hit
         return None
 
 
@@ -525,6 +534,151 @@ _FOLDABLE = {
 
 
 # ---------------------------------------------------------------------------
+# Kernel-pattern rules (fusion tier, paper §3: "write efficient low-level
+# kernels … and expose them to Myia as primitives").  These recognize the
+# canonical user-level spellings of rmsnorm and the softmax-attention core
+# and rewrite the whole subgraph to ONE call of the corresponding
+# hand-written Pallas primitive from ``repro.kernels.ops`` — which carries
+# its own backpropagator, so ``grad`` of a rewritten graph runs the
+# kernel's backward instead of the unrolled adjoint chain.
+# ---------------------------------------------------------------------------
+
+
+def _ashape(node: Node) -> tuple[int, ...] | None:
+    ab = node.abstract
+    return ab.shape if isinstance(ab, AArray) else None
+
+
+def _scalar_const_value(node: Node) -> float | None:
+    if isinstance(node, Constant) and isinstance(node.value, (int, float)) \
+            and not isinstance(node.value, bool):
+        return float(node.value)
+    return None
+
+
+def _is_last_axis_reduce(n: Apply, prim: Primitive) -> Node | None:
+    """``prim(x, (last_axis,), True)`` → x, else None."""
+    if not is_apply(n, prim) or len(n.args) != 3:
+        return None
+    x, axes, keep = n.args
+    nd_shape = _ashape(x)
+    if nd_shape is None or not isinstance(axes, Constant) or not isinstance(keep, Constant):
+        return None
+    if keep.value is not True:
+        return None
+    ax = axes.value
+    if isinstance(ax, int):
+        ax = (ax,)
+    if not isinstance(ax, tuple):
+        return None
+    nd = len(nd_shape)
+    if tuple(a % nd for a in ax) != (nd - 1,):
+        return None
+    return x
+
+
+def _commuted(n: Node, prim: Primitive):
+    """Yield both operand orders of a binary apply of ``prim``."""
+    if is_apply(n, prim) and len(n.args) == 2:
+        a, b = n.args
+        yield a, b
+        yield b, a
+
+
+def _match_rmsnorm(n: Apply):
+    """``mul(mul(x, rsqrt(mean(x²) + eps)), w)`` (any commutation; mean
+    spelled ``reduce_sum(x*x, (last,), True) / D``) → ``rmsnorm(x, w, eps)``."""
+    for u, w in _commuted(n, P.mul):
+        w_shape = _ashape(w)
+        if w_shape is None or len(w_shape) != 1:
+            continue
+        for x, r in _commuted(u, P.mul):
+            x_shape = _ashape(x)
+            if x_shape is None or len(x_shape) < 2 or x_shape[-1] != w_shape[0]:
+                continue
+            if not (is_apply(r, P.rsqrt) and len(r.args) == 1):
+                continue
+            for m, eps_n in _commuted(r.args[0], P.add):
+                eps = _scalar_const_value(eps_n)
+                if eps is None:
+                    continue
+                if not (is_apply(m, P.div) and len(m.args) == 2):
+                    continue
+                rs, d = m.args
+                dv = _scalar_const_value(d)
+                if dv is None or dv != float(x_shape[-1]):
+                    continue
+                sq = _is_last_axis_reduce(rs, P.reduce_sum)
+                if sq is None:
+                    continue
+                if is_apply(sq, P.square) and sq.args[0] is x:
+                    pass
+                elif is_apply(sq, P.mul) and sq.args[0] is x and sq.args[1] is x:
+                    pass
+                else:
+                    continue
+                from repro.kernels.ops import rmsnorm_prim
+
+                return n.graph.apply(rmsnorm_prim, x, w, eps), "pattern_rmsnorm"
+    return None
+
+
+def _match_attention_core(n: Apply):
+    """``softmax(q @ kᵀ · scale) @ v`` with softmax spelled
+    ``exp(s − max(s)) / Σ exp(s − max(s))`` (stable, last-axis) →
+    ``flash_attention(q, k, v, False, None, scale)``.  Fires only on
+    4-D (B, H, S, D) operands — the kernel's layout."""
+    if not (is_apply(n, P.matmul) and len(n.args) == 2):
+        return None
+    prob, v = n.args
+    if not (is_apply(prob, P.div) and len(prob.args) == 2):
+        return None
+    e, z = prob.args
+    if _is_last_axis_reduce(z, P.reduce_sum) is not e:
+        return None
+    if not (is_apply(e, P.exp) and len(e.args) == 1):
+        return None
+    d = e.args[0]
+    if not (is_apply(d, P.sub) and len(d.args) == 2):
+        return None
+    s, m = d.args
+    if _is_last_axis_reduce(m, P.reduce_max) is not s:
+        return None
+    scale = 1.0
+    t = s
+    for cand, c in _commuted(s, P.mul):
+        cv = _scalar_const_value(c)
+        if cv is not None:
+            t, scale = cand, cv
+            break
+    if not (is_apply(t, P.matmul) and len(t.args) == 2):
+        return None
+    q, kt = t.args
+    if not (is_apply(kt, P.mT) and len(kt.args) == 1):
+        return None
+    k = kt.args[0]
+    qs, ks, vs = _ashape(q), _ashape(k), _ashape(v)
+    if not (qs and ks and vs) or not (len(qs) == len(ks) == len(vs) == 4):
+        return None
+    if ks != vs or qs[-1] != ks[-1] or qs[0] != ks[0] or qs[1] % ks[1] != 0:
+        return None
+    from repro.kernels.ops import flash_attention_prim
+
+    return (
+        n.graph.apply(flash_attention_prim, q, k, v, False, None, scale),
+        "pattern_flash_attention",
+    )
+
+
+def _try_kernel_patterns(n: Apply, p: Primitive):
+    if p is P.mul:
+        return _match_rmsnorm(n)
+    if p is P.matmul:
+        return _match_attention_core(n)
+    return None
+
+
+# ---------------------------------------------------------------------------
 # Entry point
 # ---------------------------------------------------------------------------
 
@@ -537,6 +691,7 @@ def optimize(
     max_iterations: int = 50,
     engine: str = "worklist",
     stats: OptStats | None = None,
+    patterns: bool = False,
 ) -> Graph:
     """Optimize ``graph`` in place (and return it).
 
@@ -544,8 +699,12 @@ def optimize(
     the default) or ``"sweep"`` (the reference fixed-point sweep — both
     reach the same normal form; see the module docstring).  Pass an
     :class:`OptStats` as ``stats`` to collect per-rule hit counters.
+    ``patterns=True`` (the fusion tier) additionally recognizes
+    kernel-shaped subgraphs — rmsnorm, the softmax-attention core — and
+    rewrites them to the hand-written Pallas primitives registered in
+    ``repro.kernels.ops`` (shape-directed: requires inferred abstracts).
     """
-    rw = _Rewriter(graph, max_inline_size, stats)
+    rw = _Rewriter(graph, max_inline_size, stats, patterns=patterns)
     for _ in range(max_iterations):
         changed = False
         if inline:

@@ -8,6 +8,7 @@ expose them to Myia as primitives").
 """
 
 from . import ref
+from .codegen import FusedKernel, emit_cluster
 from .ops import (
     flash_attention,
     get_kernel_mode,
@@ -25,4 +26,6 @@ __all__ = [
     "ssd_step",
     "set_kernel_mode",
     "get_kernel_mode",
+    "FusedKernel",
+    "emit_cluster",
 ]

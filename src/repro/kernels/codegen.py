@@ -1,0 +1,384 @@
+"""Pallas kernel code generation for fusion clusters.
+
+The partitioner (``repro.core.fusion``) hands this module legal clusters;
+``emit_cluster`` turns each one into a :class:`FusedKernel` — a callable
+with three interchangeable execution paths, selected by the *same*
+``set_kernel_mode`` switch the hand-written kernels use:
+
+* ``"ref"`` / ``"chunked"``  — the **pure-jnp oracle**: exactly the same
+  primitive ``impl`` calls, in the same order, as the unfused lowering
+  would emit.  This path is bit-identical to the unfused program by
+  construction and is what CPU test/serving traffic executes.
+* ``"pallas_interpret"``     — the generated Pallas kernel run by the
+  Pallas interpreter (correctness validation on CPU; every op inside the
+  kernel is the same jnp call the oracle makes, so blocked map kernels
+  remain bit-identical).
+* ``"pallas"``               — the compiled Pallas TPU kernel.
+
+Kernel shape strategy:
+
+* **map clusters** (elementwise root): the body shape ``S`` is collapsed
+  to 2-D ``(R, C) = (prod(S[:-1]), S[-1])`` and the grid blocks rows —
+  ``grid=(R/br,)`` with ``BlockSpec((br, C))`` per operand, ``br`` the
+  largest power-of-two row divisor that keeps a block within the VMEM
+  budget.  Every operand is materialized *at* ``S`` by the wrapper
+  (broadcast members run there; smaller external inputs are
+  ``broadcast_to``-ed), so the kernel body is pure per-block elementwise
+  code.
+* **reduce clusters** (reduction root): one whole-array block (no grid) —
+  the kernel computes the elementwise body and applies the reduction
+  primitive with its static axes, so the floating-point reduction order
+  is identical to the unfused lowering's.  Rank-0/1 results are staged
+  through a 2-D output block and reshaped by the wrapper.
+
+``emit_cluster`` *declines* (returns None) clusters it cannot express —
+non-array external inputs, rank-0 bodies — and the lowering falls back to
+the per-node jnp path for exactly that cluster, never the whole graph.
+
+Generated source (kernel + wrapper + oracle) is kept on the result as
+``FusedKernel.source`` — tests exec it and ``docs/fusion.md`` shows one.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.fusion import Cluster, classify
+from repro.core.infer import AArray
+from repro.core.ir import Apply, Constant, Node
+from .ops import get_kernel_mode
+
+__all__ = ["FusedKernel", "emit_cluster"]
+
+#: soft cap on elements per VMEM block for generated map kernels
+_BLOCK_ELEMS = 128 * 1024
+
+_counter = [0]
+
+
+class FusedKernel:
+    """One generated kernel: callable (mode-dispatching), with the oracle
+    and both Pallas variants exposed for differential testing."""
+
+    __slots__ = (
+        "name",
+        "source",
+        "n_nodes",
+        "kind",
+        "body_shape",
+        "out_shape",
+        "oracle",
+        "pallas_interpret",
+        "pallas_compiled",
+    )
+
+    def __init__(
+        self,
+        name: str,
+        source: str,
+        n_nodes: int,
+        kind: str,
+        body_shape: tuple,
+        out_shape: tuple,
+        oracle: Callable,
+        pallas_interpret: Callable,
+        pallas_compiled: Callable,
+    ) -> None:
+        self.name = name
+        self.source = source
+        self.n_nodes = n_nodes
+        self.kind = kind
+        self.body_shape = body_shape
+        self.out_shape = out_shape
+        self.oracle = oracle
+        self.pallas_interpret = pallas_interpret
+        self.pallas_compiled = pallas_compiled
+
+    def __call__(self, *args: Any) -> Any:
+        mode = get_kernel_mode()
+        if mode == "pallas_interpret":
+            return self.pallas_interpret(*args)
+        if mode == "pallas":
+            return self.pallas_compiled(*args)
+        return self.oracle(*args)  # "ref" / "chunked"
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<FusedKernel {self.name} {self.kind} n={self.n_nodes}>"
+
+
+def _literal(value: Any) -> str | None:
+    """Source literal for embeddable static values (mirrors
+    ``lowering._literal``: exact types only, so numpy scalars stay
+    closure-bound and dtype promotion is untouched)."""
+    if value is None:
+        return "None"
+    t = type(value)
+    if t is bool or t is str or t is int:
+        return repr(value)
+    if t is float:
+        return repr(value) if math.isfinite(value) else None
+    if t is tuple:
+        elts = [_literal(v) for v in value]
+        if any(e is None for e in elts):
+            return None
+        inner = ", ".join(elts)
+        return f"({inner},)" if len(elts) == 1 else f"({inner})"
+    return None
+
+
+def _const_shape(value: Any) -> tuple | None:
+    try:
+        return tuple(int(d) for d in np.shape(value))
+    except Exception:
+        return None
+
+
+def _block_rows(R: int, C: int) -> int:
+    """Largest power-of-two divisor of R whose block stays under the VMEM
+    budget (falls back to R itself when R is odd — correctness first)."""
+    br = R
+    while br > 1 and br % 2 == 0 and br * max(C, 1) > _BLOCK_ELEMS:
+        br //= 2
+    return br
+
+
+def emit_cluster(cluster: Cluster) -> FusedKernel | None:
+    """Generate the fused kernel for ``cluster`` or decline with None."""
+    body_shape = tuple(cluster.body_shape)
+    out_shape = tuple(cluster.out_shape)
+    out_dtype = cluster.out_dtype
+    if out_dtype is None or len(body_shape) == 0:
+        return None
+
+    # -- name & classify members ------------------------------------------
+    members = {n._id for n in cluster.order}
+    pre: list[Apply] = []  # broadcast members: run in the wrapper
+    body: list[Apply] = []  # elementwise members (+ reduction root)
+    for n in cluster.order:
+        (pre if classify(n) == "broadcast" else body).append(n)
+    if not body or body[-1] is not cluster.root:
+        return None  # root must be the last body node (single output)
+
+    env: dict[str, Any] = {"jnp": jnp, "jax": jax, "pl": pl}
+    prim_names: dict[int, str] = {}
+
+    def bind_prim(prim) -> str:
+        name = prim_names.get(id(prim))
+        if name is None:
+            name = f"_prim_{prim.name}_{len(prim_names)}"
+            prim_names[id(prim)] = name
+            env[name] = prim.impl
+        return name
+
+    # -- operand discovery -------------------------------------------------
+    # names for: cluster inputs (a{i}), bound constants (_const_{k}),
+    # pre-member results (p{k}), body values (v{k})
+    input_name: dict[int, str] = {}
+    for i, node in enumerate(cluster.inputs):
+        if not isinstance(node.abstract, AArray):
+            return None  # non-array input: the jnp path keeps this cluster
+        input_name[node._id] = f"a{i}"
+
+    def ext_ref(node: Node) -> str | None:
+        """Name/literal for a non-member node, or None if unsupported."""
+        got = input_name.get(node._id)
+        if got is not None:
+            return got
+        if isinstance(node, Constant):
+            lit = _literal(node.value)
+            if lit is not None:
+                return lit
+            name = f"_const_{len(env)}"
+            env[name] = node.value
+            input_name[node._id] = name
+            return name
+        return None
+
+    def ext_shape(node: Node) -> tuple | None:
+        if isinstance(node.abstract, AArray):
+            return node.abstract.shape
+        if isinstance(node, Constant):
+            return _const_shape(node.value)
+        return None
+
+    pre_name: dict[int, str] = {}
+    pre_lines: list[str] = []
+    for k, n in enumerate(pre):
+        args = []
+        for a in n.args:
+            if a._id in members:
+                return None  # broadcast member fed by the kernel body: decline
+            r = ext_ref(a)
+            if r is None:
+                return None
+            args.append(r)
+        pre_name[n._id] = f"p{k}"
+        pre_lines.append(
+            f"    p{k} = {bind_prim(n.fn.value)}({', '.join(args)})  # {n.fn.value.name} (pre)"
+        )
+
+    # kernel operands: every value entering the elementwise body
+    operands: list[tuple[str, str, tuple | None]] = []  # (slot, wrapper expr, shape)
+    operand_slot: dict[int, str] = {}
+
+    def operand_for(a: Node) -> str | None:
+        slot = operand_slot.get(a._id)
+        if slot is not None:
+            return slot
+        if a._id in pre_name:
+            expr, shape = pre_name[a._id], body_shape
+        else:
+            r = ext_ref(a)
+            if r is None or r[0] not in "a_":  # literal: embedded, not an operand
+                return r
+            shape = ext_shape(a)
+            if shape is None:
+                return None
+            expr = r
+        slot = f"x{len(operands)}"
+        operand_slot[a._id] = slot
+        operands.append((slot, expr, shape))
+        return slot
+
+    body_lines: list[str] = []
+    vname: dict[int, str] = {}
+    red_root = cluster.kind == "reduce"
+    for k, n in enumerate(body):
+        rendered = []
+        is_root_reduction = red_root and n is cluster.root
+        for j, a in enumerate(n.args):
+            if a._id in vname:
+                rendered.append(vname[a._id])
+                continue
+            if is_root_reduction and j > 0:
+                # static reduction config (axes / shape / keepdims)
+                assert isinstance(a, Constant)
+                r = ext_ref(a)
+            else:
+                r = operand_for(a)
+            if r is None:
+                return None
+            rendered.append(r)
+        vname[n._id] = f"v{k}"
+        body_lines.append(
+            f"v{k} = {bind_prim(n.fn.value)}({', '.join(rendered)})  # {n.fn.value.name}"
+        )
+    root_v = vname[cluster.root._id]
+
+    # -- shapes ------------------------------------------------------------
+    C = body_shape[-1]
+    R = int(np.prod(body_shape[:-1])) if len(body_shape) > 1 else 1
+    br = _block_rows(R, C)
+    out2 = (1, max(int(np.prod(out_shape)), 1)) if len(out_shape) < 2 else None
+
+    _counter[0] += 1
+    name = f"fused_{cluster.kind}{_counter[0]}_" + "_".join(
+        dict.fromkeys(n.fn.value.name for n in cluster.order)
+    )
+    env["_out_dtype"] = np.dtype(out_dtype)
+
+    # -- source ------------------------------------------------------------
+    nargs = ", ".join(f"a{i}" for i in range(len(cluster.inputs)))
+    krefs = ", ".join(f"{slot}_ref" for slot, _, _ in operands)
+    lines = [f"def _kernel({krefs}{', ' if krefs else ''}o_ref):"]
+    for slot, _, _ in operands:
+        lines.append(f"    {slot} = {slot}_ref[...]")
+    if cluster.kind == "map":
+        lines += [f"    {l}" for l in body_lines]
+        lines.append(f"    o_ref[...] = {root_v}")
+    else:
+        # whole-array block: operands arrive at body_shape already; the
+        # reduction's static axes were rendered into the body line itself
+        lines += [f"    {l}" for l in body_lines]
+        lines.append(f"    o_ref[...] = jnp.reshape({root_v}, {out2 or out_shape})")
+    lines.append("")
+
+    # wrapper: prepare operands at body shape, call pallas, restore shape
+    lines.append("def _make(interpret):")
+    lines.append(f"    def {name}({nargs}):")
+    for pl_line in pre_lines:
+        lines.append("    " + pl_line)
+    call_args = []
+    for slot, expr, shape in operands:
+        e = expr
+        if shape != body_shape:
+            e = f"jnp.broadcast_to({e}, {body_shape})"
+        if cluster.kind == "map" and (len(body_shape) != 2):
+            e = f"jnp.reshape({e}, ({R}, {C}))"
+        elif cluster.kind == "map":
+            pass  # already (R, C)
+        lines.append(f"        {slot} = {e}")
+        call_args.append(slot)
+    if cluster.kind == "map":
+        lines += [
+            "        out = pl.pallas_call(",
+            "            _kernel,",
+            f"            grid=({R // br},),",
+            "            in_specs=[" + ", ".join(
+                f"pl.BlockSpec(({br}, {C}), lambda i: (i, 0))" for _ in operands
+            ) + "],",
+            f"            out_specs=pl.BlockSpec(({br}, {C}), lambda i: (i, 0)),",
+            f"            out_shape=jax.ShapeDtypeStruct(({R}, {C}), _out_dtype),",
+            "            interpret=interpret,",
+            f"            name={name!r},",
+            f"        )({', '.join(call_args)})",
+            f"        return jnp.reshape(out, {out_shape})",
+        ]
+    else:
+        lines += [
+            "        out = pl.pallas_call(",
+            "            _kernel,",
+            f"            out_shape=jax.ShapeDtypeStruct({out2 or out_shape}, _out_dtype),",
+            "            interpret=interpret,",
+            f"            name={name!r},",
+            f"        )({', '.join(call_args)})",
+            f"        return jnp.reshape(out, {out_shape})",
+        ]
+    lines.append(f"    return {name}")
+    lines.append("")
+
+    # oracle: the exact unfused computation (impl call per member, original
+    # shapes, no broadcasts inserted) — bit-identical to direct lowering
+    lines.append(f"def _oracle({nargs}):")
+    ovname: dict[int, str] = {}
+    for n in cluster.order:
+        rendered = []
+        for a in n.args:
+            if a._id in ovname:
+                rendered.append(ovname[a._id])
+            else:
+                rendered.append(ext_ref(a))
+        ovname[n._id] = f"w{len(ovname)}"
+        lines.append(
+            f"    {ovname[n._id]} = {bind_prim(n.fn.value)}({', '.join(rendered)})  # {n.fn.value.name}"
+        )
+    lines.append(f"    return {ovname[cluster.root._id]}")
+    source = "\n".join(lines) + "\n"
+
+    namespace = dict(env)
+    try:
+        exec(compile(source, f"<myia-fused:{name}>", "exec"), namespace)
+    except SyntaxError:  # pragma: no cover - codegen bug guard
+        return None
+    oracle = namespace["_oracle"]
+    interp = namespace["_make"](True)
+    compiled = namespace["_make"](False)
+    for fn in (oracle, interp, compiled):
+        fn.__fused_source__ = source
+    return FusedKernel(
+        name=name,
+        source=source,
+        n_nodes=len(cluster.order),
+        kind=cluster.kind,
+        body_shape=body_shape,
+        out_shape=out_shape,
+        oracle=oracle,
+        pallas_interpret=interp,
+        pallas_compiled=compiled,
+    )

@@ -164,7 +164,7 @@ def run_cell(arch: str, cell, mesh, mesh_name: str, out_dir: str) -> dict:
             "temp_size_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
             "generated_code_size_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
         }
-        cost = compiled.cost_analysis() or {}
+        cost = _cost_dict(compiled.cost_analysis())
         record["cost"] = {
             "flops": float(cost.get("flops", 0.0)),
             "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
@@ -183,6 +183,14 @@ def run_cell(arch: str, cell, mesh, mesh_name: str, out_dir: str) -> dict:
 
 def _param_count(params_sds) -> float:
     return float(sum(np.prod(l.shape) for l in jax.tree.leaves(params_sds)))
+
+
+def _cost_dict(cost) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across jax versions: older
+    returns a per-device LIST of dicts, newer a single dict."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
 
 
 # ---------------------------------------------------------------------------
@@ -246,7 +254,7 @@ def _cost_of(cfg: ModelConfig, cell, kind: str) -> tuple[float, float]:
         lowered = jax.jit(decode_fn, donate_argnums=(1,)).lower(
             params_sds, cache_sds, in_sds["token"], in_sds["pos"]
         )
-    c = lowered.compile().cost_analysis() or {}
+    c = _cost_dict(lowered.compile().cost_analysis())
     return float(c.get("flops", 0.0)), float(c.get("bytes accessed", 0.0))
 
 
