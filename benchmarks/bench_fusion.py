@@ -23,7 +23,6 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import P, build_grad_graph, parse_function
 from repro.core.api import compile_pipeline

@@ -13,7 +13,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import flash_attention, ref, rmsnorm, ssd_scan
 
@@ -49,7 +48,9 @@ def run() -> list[dict]:
             "max_err_vs_ref": err,
             "flops_per_byte": round(flops / bytes_, 1),
             "regime_v5e": "compute-bound" if flops / bytes_ > 240 else "memory-bound",
-            "ref_ms_cpu": round(_time(lambda: ref.flash_attention_ref(q, kk, v, causal=True)) * 1e3, 2),
+            "ref_ms_cpu": round(
+                _time(lambda: ref.flash_attention_ref(q, kk, v, causal=True)) * 1e3, 2
+            ),
         }
     )
 

@@ -13,7 +13,6 @@ the optimized graph lowers to a straight-line callable.
 
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro.core import api as myia
 from repro.core.infer import abstract_of_value

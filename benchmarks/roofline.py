@@ -61,7 +61,9 @@ def active_params_per_token(cfg) -> float:
             else:
                 total += 3 * D * F
     if cfg.enc_dec:  # encoder layers (dense attn + mlp)
-        total += cfg.n_enc_layers * (D * cfg.n_heads * hd * 2 + D * cfg.n_kv_heads * hd * 2 + 3 * D * cfg.d_ff)
+        total += cfg.n_enc_layers * (
+            D * cfg.n_heads * hd * 2 + D * cfg.n_kv_heads * hd * 2 + 3 * D * cfg.d_ff
+        )
     total += D * cfg.vocab  # logits matmul
     return total
 

@@ -16,12 +16,16 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import random
+
+import numpy as np
 
 #: repo-root trajectory files: bench name -> filename
 TRAJECTORY = {
     "compile_time": "BENCH_compile.json",
     "ad_overhead": "BENCH_ad_overhead.json",
     "fusion": "BENCH_fusion.json",
+    "spmd": "BENCH_spmd.json",
 }
 
 
@@ -41,6 +45,7 @@ def main(argv=None) -> int:
         bench_fusion,
         bench_kernels,
         bench_opt_effectiveness,
+        bench_spmd,
     )
 
     benches = {
@@ -48,6 +53,7 @@ def main(argv=None) -> int:
         "opt_effectiveness": bench_opt_effectiveness.run,
         "compile_time": lambda: bench_compile_time.run(reps=10 if args.quick else 50),
         "fusion": lambda: bench_fusion.run(reps=10 if args.quick else 50),
+        "spmd": lambda: bench_spmd.run(reps=10 if args.quick else 30),
         "kernels": bench_kernels.run,
     }
     if args.quick and not args.only:
@@ -58,6 +64,12 @@ def main(argv=None) -> int:
         if args.only and name != args.only:
             continue
         print(f"\n=== {name} ===")
+        # Reseed the global RNGs per benchmark: trajectory diffs must be a
+        # function of the code, not of which benches ran before this one
+        # (--only vs the full sweep used to leave different global RNG
+        # state, making BENCH json diffs ordering-dependent).
+        random.seed(0)
+        np.random.seed(0)
         rows = fn()
         for row in rows:
             print("  ", row)

@@ -1,0 +1,135 @@
+#!/usr/bin/env python
+"""CI bench gate: diff fresh BENCH_*.json against the committed trajectory.
+
+``benchmarks/run.py --quick`` rewrites the repo-root trajectory files;
+this script compares them with the versions committed at HEAD
+(``git show HEAD:<file>``) and fails CI when a guarded metric regressed
+by more than ``--tol`` (default 25%).
+
+Guarded metrics (rows matched by workload/signature/mesh key):
+
+* ``BENCH_compile.json``   — ``compile_call_ms`` (compile time; lower is
+  better, with a small absolute floor so sub-noise wiggle never trips),
+* ``BENCH_ad_overhead.json`` — ``st_over_jax`` (the AD overhead ratio),
+* ``BENCH_fusion.json``    — ``launches_after`` (fused launch counts;
+  deterministic, any >tol increase is a real partitioner regression),
+* ``BENCH_spmd.json``      — ``launches_fused`` and the collective count
+  ``n_psum`` + ``n_all_gather`` (a propagation regression shows up as
+  extra communication before it shows up on a wall clock).
+
+Rows present only in the fresh file (new benchmarks) pass; rows present
+only at HEAD (removed benchmarks) fail — deleting a regressing benchmark
+must not green the gate.  Override the tolerance with ``--tol`` or
+``CHECK_BENCH_TOL``.
+
+Caveat: timing rows compare against a baseline committed from whatever
+machine last refreshed it, so a systematically slower CI runner can trip
+them without a code regression (launch/collective counts are immune —
+they are the noise-free part of the gate).  When first arming this gate
+on a new runner class, refresh the committed BENCH_*.json from that
+runner's artifact (the full CI job uploads them), or raise
+``CHECK_BENCH_TOL`` for the transition.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+#: file -> (row-key fields, [(metric, absolute floor)]).
+#: Launch/collective counts are deterministic — floor 0, the noise-free
+#: teeth of the gate.  The timing floors are calibrated to observed
+#: run-to-run variance on loaded CI boxes (compile_call_ms swings
+#: ±15 ms at the ~25 ms scale; st_over_jax, a ratio of two µs-scale
+#: medians, was observed swinging 0.58↔1.53 across consecutive runs):
+#: a regression must clear BOTH the relative tolerance and the floor,
+#: so load spikes don't fail builds while a genuine multi-× regression
+#: still does.
+GUARDS: dict[str, tuple[tuple[str, ...], list[tuple[str, float]]]] = {
+    "BENCH_compile.json": (("signature",), [("compile_call_ms", 15.0)]),
+    "BENCH_ad_overhead.json": (("workload",), [("st_over_jax", 1.0)]),
+    "BENCH_fusion.json": (("workload",), [("launches_after", 0.0)]),
+    "BENCH_spmd.json": (
+        ("workload", "mesh"),
+        [("launches_fused", 0.0), ("n_psum", 0.0), ("n_all_gather", 0.0)],
+    ),
+}
+
+
+def _baseline(fname: str) -> list[dict] | None:
+    res = subprocess.run(
+        ["git", "show", f"HEAD:{fname}"], capture_output=True, text=True
+    )
+    if res.returncode != 0:
+        return None  # file not committed yet: nothing to gate against
+    try:
+        return json.loads(res.stdout)
+    except json.JSONDecodeError:
+        return None
+
+
+def _rows_by_key(rows: list[dict], key_fields: tuple[str, ...]) -> dict[tuple, dict]:
+    return {tuple(str(r.get(k)) for k in key_fields): r for r in rows}
+
+
+def check_file(fname: str, tol: float) -> list[str]:
+    key_fields, metrics = GUARDS[fname]
+    if not os.path.exists(fname):
+        return [f"{fname}: fresh file missing (did benchmarks/run.py run?)"]
+    with open(fname) as f:
+        fresh = _rows_by_key(json.load(f), key_fields)
+    base_rows = _baseline(fname)
+    if base_rows is None:
+        print(f"  {fname}: no committed baseline — skipping")
+        return []
+    base = _rows_by_key(base_rows, key_fields)
+    failures: list[str] = []
+    for key, brow in base.items():
+        frow = fresh.get(key)
+        if frow is None:
+            failures.append(f"{fname}: row {key} present at HEAD but missing now")
+            continue
+        for metric, floor in metrics:
+            old, new = brow.get(metric), frow.get(metric)
+            if old is None or new is None:
+                continue
+            old, new = float(old), float(new)
+            if new <= old * (1.0 + tol):
+                continue
+            if abs(new - old) <= floor:
+                continue  # within measurement-noise floor
+            failures.append(
+                f"{fname}: {metric} regressed for {key}: "
+                f"{old:g} -> {new:g} (+{100 * (new - old) / max(old, 1e-12):.1f}%, "
+                f"tol {100 * tol:.0f}%)"
+            )
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--tol",
+        type=float,
+        default=float(os.environ.get("CHECK_BENCH_TOL", "0.25")),
+        help="allowed relative regression (default 0.25 = 25%%)",
+    )
+    args = ap.parse_args()
+    os.chdir(os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
+    failures: list[str] = []
+    for fname in GUARDS:
+        failures.extend(check_file(fname, args.tol))
+    if failures:
+        print("\nBENCH GATE FAILED:")
+        for f in failures:
+            print("  " + f)
+        return 1
+    print(f"bench gate passed ({len(GUARDS)} trajectories, tol {args.tol:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,20 +1,31 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 test suite + quick benchmark refresh.
+# CI entry point: lint → tier-1 tests → quick benchmarks → bench gate.
 #
-#   scripts/ci.sh            # everything
-#   SKIP_BENCH=1 scripts/ci.sh   # tests only
+#   scripts/ci.sh                 # everything (the CI "full" job)
+#   SKIP_SLOW=1 SKIP_BENCH=1 scripts/ci.sh   # the CI "fast" job (minutes)
 #
 # The quick benchmark run rewrites the repo-root BENCH_*.json trajectory
-# files (compile time, AD overhead, fusion), so every CI pass leaves a
-# perf data point for the next PR to diff against.
+# files (compile time, AD overhead, fusion, spmd) and scripts/check_bench.py
+# diffs them against the committed trajectory — >25% regression in compile
+# time, AD overhead ratio, or fused/sharded launch counts fails the build.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 tests =="
-python -m pytest -x -q
+echo "== lint (ruff via pyproject; in-repo fallback when unavailable) =="
+python scripts/lint.py
+
+echo "== tier-1 tests (fast suite) =="
+python -m pytest -x -q -m "not slow"
+
+if [ "${SKIP_SLOW:-0}" != "1" ]; then
+  echo "== slow suite (multi-device subprocess corpus) =="
+  python -m pytest -x -q -m slow
+fi
 
 if [ "${SKIP_BENCH:-0}" != "1" ]; then
   echo "== quick benchmarks (BENCH_*.json trajectories) =="
   python -m benchmarks.run --quick
+  echo "== bench regression gate =="
+  python scripts/check_bench.py
 fi

@@ -1,0 +1,126 @@
+#!/usr/bin/env python
+"""Lint gate for scripts/ci.sh.
+
+Runs ``ruff check`` (configured in pyproject.toml) when ruff is
+installed.  This container does not ship ruff and nothing may be pip
+installed, so a minimal in-repo fallback enforces the mechanical subset
+of the same config — syntax, unused imports (F401), line length (E501,
+100 cols), tabs and trailing whitespace — on the same file set.  CI
+(ubuntu runners, see .github/workflows/ci.yml) installs ruff and gets
+the full rule set; the fallback keeps the gate meaningful locally.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import shutil
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+TARGETS = ["src", "benchmarks", "scripts", "tests"]
+LINE_LENGTH = 100
+
+
+def _ruff() -> int | None:
+    exe = shutil.which("ruff")
+    cmd = [exe, "check"] if exe else None
+    if cmd is None:
+        probe = subprocess.run(
+            [sys.executable, "-m", "ruff", "--version"], capture_output=True
+        )
+        if probe.returncode == 0:
+            cmd = [sys.executable, "-m", "ruff", "check"]
+    if cmd is None:
+        return None
+    return subprocess.run(cmd + TARGETS, cwd=ROOT).returncode
+
+
+class _ImportCollector(ast.NodeVisitor):
+    def __init__(self) -> None:
+        self.imported: dict[str, int] = {}  # bound name -> lineno
+        self.used: set[str] = set()
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for a in node.names:
+            name = a.asname or a.name.split(".")[0]
+            self.imported.setdefault(name, node.lineno)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.module == "__future__":
+            return  # __future__ imports are directives, never "unused"
+        for a in node.names:
+            if a.name == "*":
+                continue
+            self.imported.setdefault(a.asname or a.name, node.lineno)
+
+    def visit_Name(self, node: ast.Name) -> None:
+        if isinstance(node.ctx, ast.Load):
+            self.used.add(node.id)
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        self.generic_visit(node)
+
+
+def _noqa_lines(src: str) -> set[int]:
+    return {
+        i for i, line in enumerate(src.splitlines(), 1) if "# noqa" in line
+    }
+
+
+def _check_file(path: pathlib.Path) -> list[str]:
+    rel = path.relative_to(ROOT)
+    src = path.read_text()
+    problems: list[str] = []
+    try:
+        tree = ast.parse(src, filename=str(rel))
+    except SyntaxError as e:
+        return [f"{rel}:{e.lineno}: E999 syntax error: {e.msg}"]
+    noqa = _noqa_lines(src)
+    coll = _ImportCollector()
+    coll.visit(tree)
+    # names used in docstring-level __all__ count as used
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            coll.used.add(node.value)
+    for name, lineno in coll.imported.items():
+        if name not in coll.used and lineno not in noqa:
+            problems.append(f"{rel}:{lineno}: F401 unused import {name!r}")
+    for i, line in enumerate(src.splitlines(), 1):
+        if i in noqa:
+            continue
+        if len(line) > LINE_LENGTH:
+            problems.append(f"{rel}:{i}: E501 line too long ({len(line)} > {LINE_LENGTH})")
+        if "\t" in line:
+            problems.append(f"{rel}:{i}: W191 tab in indentation/content")
+        if line != line.rstrip():
+            problems.append(f"{rel}:{i}: W291 trailing whitespace")
+    return problems
+
+
+def _fallback() -> int:
+    problems: list[str] = []
+    for target in TARGETS:
+        for path in sorted((ROOT / target).rglob("*.py")):
+            if "artifacts" in path.parts:
+                continue
+            problems.extend(_check_file(path))
+    for p in problems:
+        print(p)
+    print(
+        f"fallback lint (ruff unavailable): {len(problems)} problem(s) over "
+        f"{TARGETS} [F401/E501/W191/W291 + syntax]"
+    )
+    return 1 if problems else 0
+
+
+def main() -> int:
+    rc = _ruff()
+    if rc is not None:
+        return rc
+    return _fallback()
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -10,8 +10,9 @@ from .api import MyiaFunction, grad, myia, value_and_grad, vjp  # noqa: F401
 from .fusion import Cluster, FusionPlan, partition_graph  # noqa: F401
 from .infer import InferenceError, infer  # noqa: F401
 from .ir import Apply, Constant, Graph, Node, Parameter, clone_graph  # noqa: F401
-from .jax_backend import compile_graph, trace_graph  # noqa: F401
+from .jax_backend import compile_graph, compile_graph_spmd, trace_graph  # noqa: F401
 from .lowering import LoweringError, lower_graph, lowering_blockers, try_lower  # noqa: F401
+from .spmd import SpmdError, SpmdPlan, propagate, shard_graph  # noqa: F401
 from .oo_tape import oo_grad, oo_value_and_grad  # noqa: F401
 from .opt import OptStats, count_nodes, optimize  # noqa: F401
 from .parser import MyiaSyntaxError, parse_function  # noqa: F401

@@ -24,7 +24,6 @@ argument for ST over operator overloading.
 from __future__ import annotations
 
 import inspect
-from typing import Any
 
 from . import primitives as P
 from .ir import (

@@ -116,6 +116,7 @@ class MyiaFunction:
         opt: bool = True,
         fuse: bool = False,
         patterns: bool = False,
+        in_specs: tuple | None = None,
         name: str | None = None,
     ) -> None:
         if fn is None and graph is None:
@@ -129,6 +130,13 @@ class MyiaFunction:
         self.fuse = fuse
         #: kernel-pattern rewrites (rmsnorm / attention → Pallas prims)
         self.patterns = patterns
+        #: SPMD tier: per-argument sharding specs (PartitionSpec / tuple of
+        #: axis names / None).  When set AND a concrete mesh context is
+        #: active (``repro.parallel.mesh_context``), specialization compiles
+        #: the sharded tier — the same optimized+fused graph, partitioned
+        #: by ``repro.core.spmd`` and run under ``shard_map``.  With no
+        #: active mesh this is inert: the single-device tiers run unchanged.
+        self.in_specs = in_specs
         self._specializations: dict[tuple, Callable] = {}
         self.__name__ = name or (fn.__name__ if fn is not None else graph.name)
         if fn is not None:
@@ -164,6 +172,22 @@ class MyiaFunction:
                     out.append(("val", type(a).__name__, a))
         return tuple(out)
 
+    def _active_mesh(self):
+        """The concrete mesh the SPMD tier should target, or None.
+
+        None when no ``in_specs`` were configured, no mesh context is
+        active, or the context's mesh is abstract (spec-resolution tests).
+        A trivial 1×1 mesh still takes the spmd path — that identity with
+        the single-device tier is pinned by tests."""
+        if self.in_specs is None or self.backend != "jax":
+            return None
+        from repro.parallel import current_mesh_context
+
+        ctx = current_mesh_context()
+        if ctx is None or not isinstance(ctx.mesh, jax.sharding.Mesh):
+            return None
+        return ctx.mesh
+
     def specialize(self, args: tuple) -> Callable:
         if self.fuse:
             # fused runners bake the kernel mode in at trace time (the
@@ -174,7 +198,18 @@ class MyiaFunction:
             mode = get_kernel_mode()
         else:
             mode = None
-        key = (self.backend, self.fuse, self.patterns, mode, self._sigkey(args))
+        mesh = self._active_mesh()
+        # key by shape AND device identity: a same-shape mesh over different
+        # devices must not reuse a runner closed over the old mesh
+        meshkey = (
+            None
+            if mesh is None
+            else (
+                tuple(sorted(mesh.shape.items())),
+                tuple(d.id for d in mesh.devices.flat),
+            )
+        )
+        key = (self.backend, self.fuse, self.patterns, mode, meshkey, self._sigkey(args))
         hit = self._specializations.get(key)
         if hit is not None:
             return hit
@@ -183,9 +218,26 @@ class MyiaFunction:
         except InferenceError:
             example = None  # e.g. a list static: skip inference, VM handles it
         g = compile_pipeline(self.graph, example, opt=self.opt, patterns=self.patterns)
-        runner = self._make_runner(g, args)
+        runner = None
+        if mesh is not None:
+            runner = self._make_spmd_runner(g, args, mesh)
+        if runner is None:
+            runner = self._make_runner(g, args)
         self._specializations[key] = runner
         return runner
+
+    def _make_spmd_runner(self, g: Graph, example_args: tuple, mesh) -> Callable | None:
+        """Sharded runner, or None → automatic single-device fallback (graph
+        not first-order / non-array arguments / propagation failure)."""
+        from .jax_backend import compile_graph_spmd
+        from .spmd import SpmdError
+
+        if not all(is_array_like(a) for a in example_args):
+            return None
+        try:
+            return compile_graph_spmd(g, mesh, self.in_specs, fuse=self.fuse)
+        except SpmdError:
+            return None
 
     def _make_runner(self, g: Graph, example_args: tuple) -> Callable:
         if self.backend == "vm":
@@ -276,6 +328,7 @@ def myia(
     opt: bool = True,
     fuse: bool = False,
     patterns: bool = False,
+    in_specs: tuple | None = None,
 ):
     """Decorator: compile ``fn`` (pure Python subset) through the pipeline.
 
@@ -284,10 +337,17 @@ def myia(
     kernel-shaped subgraphs (rmsnorm, softmax-attention core) to the
     hand-written Pallas primitives.  Both default off: the unfused
     straight-line lowering remains the bit-exact reference.
+
+    ``in_specs`` (one sharding spec per argument) arms the SPMD tier:
+    under an active concrete mesh context the optimized+fused graph is
+    partitioned per-shard and executed under ``shard_map``; with no mesh
+    active the single-device tiers run unchanged (see docs/pipeline.md).
     """
 
     def wrap(f: Callable) -> MyiaFunction:
-        return MyiaFunction(f, backend=backend, opt=opt, fuse=fuse, patterns=patterns)
+        return MyiaFunction(
+            f, backend=backend, opt=opt, fuse=fuse, patterns=patterns, in_specs=in_specs
+        )
 
     return wrap(fn) if fn is not None else wrap
 
@@ -340,11 +400,16 @@ def grad(
     opt: bool = True,
     fuse: bool = False,
     patterns: bool = False,
+    in_specs: tuple | None = None,
 ):
-    """Reverse-mode gradient of a scalar-output function (paper §3.2)."""
+    """Reverse-mode gradient of a scalar-output function (paper §3.2).
+
+    The adjoint takes the same arguments as ``fn``, so ``in_specs``
+    (the SPMD tier) carries over unchanged."""
     g = build_grad_graph(_as_graph(fn), wrt)
     return MyiaFunction(
-        graph=g, backend=backend, opt=opt, fuse=fuse, patterns=patterns, name=g.name
+        graph=g, backend=backend, opt=opt, fuse=fuse, patterns=patterns,
+        in_specs=in_specs, name=g.name,
     )
 
 
@@ -356,10 +421,12 @@ def value_and_grad(
     opt: bool = True,
     fuse: bool = False,
     patterns: bool = False,
+    in_specs: tuple | None = None,
 ):
     g = build_value_and_grad_graph(_as_graph(fn), wrt)
     return MyiaFunction(
-        graph=g, backend=backend, opt=opt, fuse=fuse, patterns=patterns, name=g.name
+        graph=g, backend=backend, opt=opt, fuse=fuse, patterns=patterns,
+        in_specs=in_specs, name=g.name,
     )
 
 

@@ -55,12 +55,13 @@ from typing import Any
 
 from .infer import AArray
 from .ir import Apply, Constant, Graph, Node, is_constant_graph, toposort
-from .primitives import Primitive
+from .primitives import COLLECTIVE_NAMES as COLLECTIVES, Primitive
 
 __all__ = [
     "ELEMENTWISE",
     "BROADCAST",
     "REDUCTION",
+    "COLLECTIVES",
     "classify",
     "Cluster",
     "FusionPlan",
@@ -114,8 +115,16 @@ def classify(node: Node) -> str:
     as such when the node actually produced an array (scalar arithmetic on
     loop counters stays opaque), and broadcast/reduction require their
     static arguments (shape / axes / keepdims) to be constants.
+
+    SPMD collectives (``psum_axes`` & co., inserted by ``repro.core.spmd``
+    at resharding points) are opaque *by fiat*, not by omission: a fusion
+    cluster must never span a resharding point — the values on either
+    side live at different shardings, so a single kernel body cannot
+    compute across one.
     """
     p = _prim_of(node)
+    if p is not None and p.name in COLLECTIVES:
+        return "opaque"
     if p is None or _shape_of(node) is None and p.name not in REDUCTION:
         return "opaque"
     if p.name in ELEMENTWISE:

@@ -267,7 +267,10 @@ def join(a: AbstractValue, b: AbstractValue) -> AbstractValue:
         return AFunction(tuple(seen.values()))
     if isinstance(a, AEnv) and isinstance(b, AEnv):
         return _AENV
-    if isinstance(a, AArray) and isinstance(b, AArray) and a.dtype == b.dtype and a.shape == b.shape:
+    if (
+        isinstance(a, AArray) and isinstance(b, AArray)
+        and a.dtype == b.dtype and a.shape == b.shape
+    ):
         return a
     # scalar/0-d array mixing (jnp promotes python scalars to weak arrays)
     if isinstance(a, AArray) and isinstance(b, AScalar) and b.kind in ("int", "float", "bool"):
@@ -707,6 +710,45 @@ def _r_stop_gradient(inf: Inferencer, args: tuple, frame) -> AbstractValue:
     return args[0]
 
 
+def _widen_value(a: AbstractValue) -> AbstractValue:
+    """Collectives preserve shape/dtype but NOT the value (psum of a known
+    scalar is value × devices) — drop known scalar values so constant
+    propagation can never fold across a resharding point."""
+    if isinstance(a, AArray):
+        return a
+    if isinstance(a, AScalar):
+        return AScalar(a.kind)
+    raise InferenceError(f"collective on non-numeric {a!r}")
+
+
+def _r_psum_axes(inf: Inferencer, args: tuple, frame) -> AbstractValue:
+    return _widen_value(args[0])
+
+
+def _r_all_gather_axes(inf: Inferencer, args: tuple, frame) -> AbstractValue:
+    x, _axes, dim, sizes = args
+    if not (isinstance(x, AArray) and _is_concrete(dim) and _is_concrete(sizes)):
+        raise InferenceError(f"all_gather_axes needs an array and static config: {args!r}")
+    d = _concrete(dim)
+    factor = int(np.prod(_concrete(sizes)))
+    shp = list(x.shape)
+    shp[d] = shp[d] * factor
+    return AArray(x.dtype, tuple(shp))
+
+
+def _r_shard_slice(inf: Inferencer, args: tuple, frame) -> AbstractValue:
+    x, _axes, dim, sizes = args
+    if not (isinstance(x, AArray) and _is_concrete(dim) and _is_concrete(sizes)):
+        raise InferenceError(f"shard_slice needs an array and static config: {args!r}")
+    d = _concrete(dim)
+    factor = int(np.prod(_concrete(sizes)))
+    shp = list(x.shape)
+    if shp[d] % factor != 0:
+        raise InferenceError(f"shard_slice: dim {d} of {x!r} not divisible by {factor}")
+    shp[d] = shp[d] // factor
+    return AArray(x.dtype, tuple(shp))
+
+
 def _r_cast(inf: Inferencer, args: tuple, frame) -> AbstractValue:
     x, dt = args
     if isinstance(dt, AScalar) and dt.known():
@@ -732,6 +774,12 @@ _STRUCTURAL_RULES = {
     "env_getitem": _r_env_getitem,
     "stop_gradient": _r_stop_gradient,
     "cast": _r_cast,
+    # SPMD collectives: axis names are unbound outside shard_map, so the
+    # eval_shape default would fail — shapes are derived structurally
+    "psum_axes": _r_psum_axes,
+    "pmax_axes": _r_psum_axes,
+    "all_gather_axes": _r_all_gather_axes,
+    "shard_slice": _r_shard_slice,
 }
 
 

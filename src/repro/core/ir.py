@@ -20,7 +20,7 @@ of the paper §3 "Closure representation").
 from __future__ import annotations
 
 import itertools
-from typing import Any, Callable, Iterable, Iterator
+from typing import Any, Iterable, Iterator
 
 __all__ = [
     "Node",

@@ -27,15 +27,22 @@ performs; genuinely traced-value recursion must use the VM backend.
 
 from __future__ import annotations
 
-from typing import Any, Callable
+from typing import Any, Callable, Sequence
 
 import jax
 
 from .ir import Graph
 from .lowering import lower_graph, lowering_blockers, try_lower
+from .spmd import SpmdError, shard_graph
 from .vm import VM
 
-__all__ = ["compile_graph", "trace_graph", "lower_graph", "lowering_blockers"]
+__all__ = [
+    "compile_graph",
+    "compile_graph_spmd",
+    "trace_graph",
+    "lower_graph",
+    "lowering_blockers",
+]
 
 
 def trace_graph(graph: Graph) -> Callable:
@@ -98,4 +105,74 @@ def compile_graph(
     runner.lowered = lowered
     runner.fn = fn
     runner.jitted = out if jit else None
+    return runner
+
+
+def compile_graph_spmd(
+    graph: Graph,
+    mesh,
+    in_specs: Sequence[Any],
+    *,
+    jit: bool = True,
+    fuse: bool = False,
+) -> Callable:
+    """Compile ``graph`` to a sharded callable over ``mesh`` (SPMD tier).
+
+    The sharding propagation pass (``repro.core.spmd``) turns the
+    optimized global graph into a per-shard program — collectives at the
+    resharding points, shape constants localized — which lowers through
+    the ordinary straight-line path (optionally fused into generated
+    Pallas kernels; clusters never span a collective) and executes under
+    ``jax.shard_map``.  Inputs arrive as *global* arrays; shard_map
+    splits them per ``in_specs`` and reassembles global outputs.
+
+    Raises :class:`SpmdError` when the graph cannot be sharded (residual
+    recursion / higher-order calls, non-array parameters) — callers fall
+    back to the single-device tier.
+    """
+    from repro.parallel import shard_map
+
+    mesh_axes = dict(mesh.shape)
+    sharded = shard_graph(graph, in_specs, mesh_axes)
+    fn = try_lower(sharded.graph, fuse=fuse)
+    if fn is None:  # pragma: no cover - shard_graph already validated
+        raise SpmdError(f"per-shard program of {graph.name} failed to lower")
+
+    def wrap() -> Callable:
+        return shard_map(
+            fn,
+            mesh=mesh,
+            in_specs=sharded.in_partition,
+            out_specs=sharded.out_partition,
+            check_rep=False,
+        )
+
+    if jit and fuse:
+        # FusedKernel dispatch reads set_kernel_mode at TRACE time (see
+        # compile_graph): keep one jit executable per observed mode
+        by_mode: dict[str, Callable] = {}
+
+        def runner(*args: Any) -> Any:
+            from repro.kernels.ops import get_kernel_mode
+
+            mode = get_kernel_mode()
+            jitted = by_mode.get(mode)
+            if jitted is None:
+                jitted = by_mode[mode] = jax.jit(wrap())
+            return jitted(*args)
+
+        out = None
+    else:
+        out = jax.jit(wrap()) if jit else wrap()
+
+        def runner(*args: Any) -> Any:
+            return out(*args)
+
+    runner.__name__ = f"myia_spmd_{graph.name}"
+    runner.lowered = True
+    runner.spmd = True
+    runner.fn = fn
+    runner.jitted = out if jit else None
+    runner.sharded = sharded
+    runner.plan = sharded.plan
     return runner

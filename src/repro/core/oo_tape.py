@@ -23,7 +23,10 @@ import numpy as np
 
 from .primitives import _impl_unbroadcast
 
-__all__ = ["Box", "oo_grad", "oo_value_and_grad", "tanh", "exp", "log", "sigmoid", "relu", "reduce_sum", "matmul"]
+__all__ = [
+    "Box", "oo_grad", "oo_value_and_grad", "tanh", "exp", "log", "sigmoid",
+    "relu", "reduce_sum", "matmul",
+]
 
 
 class _Tape:
@@ -141,7 +144,8 @@ def reduce_sum(x, axes=None, keepdims=False):
     out = jnp.sum(x.value, axis=axes, keepdims=keepdims)
 
     def vjp(d, xv=x.value):
-        return (jnp.broadcast_to(jnp.reshape(d, np.shape(out) if keepdims else _kd_shape(xv, axes)), np.shape(xv)),)
+        shp = np.shape(out) if keepdims else _kd_shape(xv, axes)
+        return (jnp.broadcast_to(jnp.reshape(d, shp), np.shape(xv)),)
 
     return _record(x.tape, out, (x,), vjp)
 

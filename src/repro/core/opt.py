@@ -57,11 +57,10 @@ from .ir import (
     dfs_nodes,
     is_apply,
     is_constant_graph,
-    is_constant_prim,
 )
 from .infer import AArray, AScalar, ATuple  # noqa: F401 (ATuple used in folding)
-from .primitives import Primitive
-from .values import EnvInstance, SymbolicKey
+from .primitives import COLLECTIVE_NAMES, Primitive
+from .values import EnvInstance
 
 __all__ = ["optimize", "reachable_nodes", "count_nodes", "OptStats"]
 
@@ -349,6 +348,12 @@ class _Rewriter:
             return None
         p: Primitive = fn.value
         a = n.args
+
+        # sharding boundary: collectives communicate across shards — no
+        # local rule may fold, fold through, or eliminate one (their value
+        # is NOT a function of their per-shard inputs alone)
+        if p.name in COLLECTIVE_NAMES:
+            return None
 
         # partial evaluation: the inferencer proved the value (paper §4.2,
         # "It can infer types as well as values (constant propagation)").

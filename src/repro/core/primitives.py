@@ -25,9 +25,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .values import EnvInstance, gadd_values, newenv, zeros_like_value
+from .values import EnvInstance, gadd_values, zeros_like_value
 
-__all__ = ["Primitive", "PRIMITIVES", "register_primitive"]
+__all__ = ["Primitive", "PRIMITIVES", "register_primitive", "COLLECTIVE_NAMES"]
 
 _PY_NUM = (bool, int, float)
 
@@ -266,6 +266,51 @@ def _impl_one_hot(idx, num, dtype):
     return jax.nn.one_hot(idx, num, dtype=dtype)
 
 
+# ---------------------------------------------------------------------------
+# Collectives (SPMD tier).  These primitives only execute inside a
+# ``shard_map`` region: their axis names must be bound by the surrounding
+# mesh.  They are inserted by ``repro.core.spmd`` *after* AD and
+# optimization (resharding points of the propagated sharding), so they
+# carry no backpropagators — differentiating through one is a pipeline
+# ordering bug and must fail loudly, not return zeros.  ``axes`` is a
+# tuple of mesh axis names; ``sizes`` the matching mesh axis sizes
+# (baked in by the SPMD transform so shape inference needs no mesh).
+# ---------------------------------------------------------------------------
+
+
+def _impl_psum_axes(x, axes):
+    return jax.lax.psum(x, tuple(axes))
+
+
+def _impl_pmax_axes(x, axes):
+    return jax.lax.pmax(x, tuple(axes))
+
+
+def _impl_all_gather_axes(x, axes, dim, sizes):
+    out = x
+    # gather innermost axis first so the outermost axis ends up as the
+    # slowest-varying block — matching shard_slice's linearized index
+    for a in reversed(tuple(axes)):
+        out = jax.lax.all_gather(out, a, axis=dim, tiled=True)
+    return out
+
+
+def _impl_shard_slice(x, axes, dim, sizes):
+    idx = 0
+    for a, s in zip(tuple(axes), tuple(sizes)):
+        idx = idx * s + jax.lax.axis_index(a)
+    block = x.shape[dim] // int(np.prod(sizes))
+    return jax.lax.dynamic_slice_in_dim(x, idx * block, block, axis=dim)
+
+
+#: primitive names that communicate across shards (or re-partition a
+#: replicated value).  Fusion classifies these as opaque — a cluster can
+#: never span a resharding point — and the optimizer never folds them.
+COLLECTIVE_NAMES = frozenset(
+    {"psum_axes", "pmax_axes", "all_gather_axes", "shard_slice"}
+)
+
+
 # ===========================================================================
 # Registration.  bprop functions are defined at the end of this module and
 # attached afterwards (they reference the prim globals below).
@@ -295,7 +340,9 @@ tanh = register_primitive("tanh", lambda x: jnp.tanh(x))
 sigmoid = register_primitive("sigmoid", lambda x: jax.nn.sigmoid(x))
 relu = register_primitive("relu", lambda x: jnp.maximum(x, 0))
 sqrt = register_primitive("sqrt", lambda x: jnp.sqrt(x))
-rsqrt = register_primitive("rsqrt", lambda x: jax.lax.rsqrt(jnp.asarray(x, jnp.result_type(x, 1.0))))
+rsqrt = register_primitive(
+    "rsqrt", lambda x: jax.lax.rsqrt(jnp.asarray(x, jnp.result_type(x, 1.0)))
+)
 sin = register_primitive("sin", lambda x: jnp.sin(x))
 cos = register_primitive("cos", lambda x: jnp.cos(x))
 square = register_primitive("square", lambda x: jnp.square(x))
@@ -309,14 +356,20 @@ le = register_primitive("le", _cmp(lambda a, b: a <= b, jnp.less_equal), bprop="
 ge = register_primitive("ge", _cmp(lambda a, b: a >= b, jnp.greater_equal), bprop="zeros")
 eq = register_primitive("eq", _cmp(lambda a, b: a == b, jnp.equal), bprop="zeros")
 ne = register_primitive("ne", _cmp(lambda a, b: a != b, jnp.not_equal), bprop="zeros")
-bool_and = register_primitive("bool_and", _cmp(lambda a, b: a and b, jnp.logical_and), bprop="zeros")
+bool_and = register_primitive(
+    "bool_and", _cmp(lambda a, b: a and b, jnp.logical_and), bprop="zeros"
+)
 bool_or = register_primitive("bool_or", _cmp(lambda a, b: a or b, jnp.logical_or), bprop="zeros")
 bool_not = register_primitive(
     "bool_not", lambda x: (not x) if _all_py(x) else jnp.logical_not(x), bprop="zeros"
 )
 
-maximum = register_primitive("maximum", lambda x, y: max(x, y) if _all_py(x, y) else jnp.maximum(x, y))
-minimum = register_primitive("minimum", lambda x, y: min(x, y) if _all_py(x, y) else jnp.minimum(x, y))
+maximum = register_primitive(
+    "maximum", lambda x, y: max(x, y) if _all_py(x, y) else jnp.maximum(x, y)
+)
+minimum = register_primitive(
+    "minimum", lambda x, y: min(x, y) if _all_py(x, y) else jnp.minimum(x, y)
+)
 where = register_primitive("where", lambda c, a, b: jnp.where(c, a, b))
 
 matmul = register_primitive("matmul", lambda a, b: jnp.matmul(a, b))
@@ -332,7 +385,9 @@ unreduce = register_primitive("unreduce", _impl_unreduce)
 shape = register_primitive("shape", _impl_shape, bprop="zeros")
 axes_size = register_primitive("axes_size", _impl_axes_size, bprop="zeros")
 dtype_of = register_primitive("dtype_of", _impl_dtype_of, bprop="zeros")
-invert_permutation = register_primitive("invert_permutation", _impl_invert_permutation, bprop="zeros")
+invert_permutation = register_primitive(
+    "invert_permutation", _impl_invert_permutation, bprop="zeros"
+)
 cast = register_primitive("cast", _impl_cast)
 
 take = register_primitive("take", _impl_take)
@@ -342,6 +397,12 @@ pad_zeros_axis = register_primitive("pad_zeros_axis", _impl_pad_zeros_axis)
 concat_axis = register_primitive("concat_axis", _impl_concat_axis)
 concat_grad = register_primitive("concat_grad", _impl_concat_grad)
 one_hot = register_primitive("one_hot", _impl_one_hot, bprop="zeros")
+
+# collectives: bprop=None — AD through a resharding point must fail loudly
+psum_axes = register_primitive("psum_axes", _impl_psum_axes)
+pmax_axes = register_primitive("pmax_axes", _impl_pmax_axes)
+all_gather_axes = register_primitive("all_gather_axes", _impl_all_gather_axes)
+shard_slice = register_primitive("shard_slice", _impl_shard_slice)
 
 switch = register_primitive("switch", _impl_switch)
 stop_gradient = register_primitive("stop_gradient", _impl_stop_gradient)

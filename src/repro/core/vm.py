@@ -24,7 +24,7 @@ from __future__ import annotations
 
 from typing import Any
 
-from .ir import Apply, Constant, Graph, Node, Parameter
+from .ir import Apply, Constant, Graph, Node
 from .primitives import Primitive
 from .values import Closure
 

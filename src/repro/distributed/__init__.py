@@ -8,7 +8,6 @@ MeshContext and donate the state buffers.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -16,7 +15,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models import ModelConfig, decode_step, init_params, loss_fn, prefill
-from repro.optim import OptConfig, Optimizer, make_optimizer
+from repro.optim import Optimizer
 from repro.parallel import MeshContext
 from .sharding import batch_specs, make_rules, param_specs, tree_specs
 

@@ -19,8 +19,6 @@ host-device mesh (tests/distributed).
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -356,7 +356,8 @@ def emit_cluster(cluster: Cluster) -> FusedKernel | None:
                 rendered.append(ext_ref(a))
         ovname[n._id] = f"w{len(ovname)}"
         lines.append(
-            f"    {ovname[n._id]} = {bind_prim(n.fn.value)}({', '.join(rendered)})  # {n.fn.value.name}"
+            f"    {ovname[n._id]} = {bind_prim(n.fn.value)}"
+            f"({', '.join(rendered)})  # {n.fn.value.name}"
         )
     lines.append(f"    return {ovname[cluster.root._id]}")
     source = "\n".join(lines) + "\n"

@@ -20,10 +20,8 @@ and expose them to Myia as primitives" (§3, Myia's intended use case).
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.primitives import register_primitive, zeros_like
 from . import ref

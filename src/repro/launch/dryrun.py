@@ -98,8 +98,6 @@ def _np_floats(d):
 
 def run_cell(arch: str, cell, mesh, mesh_name: str, out_dir: str) -> dict:
     cfg = get_config(arch)
-    from repro.parallel import MeshContext
-
     rules = make_rules(cfg)
     record: dict = {
         "arch": arch,
@@ -129,7 +127,7 @@ def run_cell(arch: str, cell, mesh, mesh_name: str, out_dir: str) -> dict:
             max_len = cell.seq_len
             if extras:
                 from repro.distributed import make_serve_fns
-                from repro.distributed.sharding import batch_specs, param_specs
+                from repro.distributed.sharding import param_specs
                 from jax.sharding import NamedSharding
 
                 prefill_fn, _ = make_serve_fns(cfg, max_len)
@@ -213,7 +211,10 @@ def _probe_cfg(cfg: ModelConfig, n_periods: int) -> ModelConfig:
     period = len(cfg.layer_period or (None,))
     if cfg.cross_attn_period:
         period = cfg.cross_attn_period
-    enc = max(1, int(cfg.n_enc_layers * n_periods * period / max(cfg.n_layers, 1))) if cfg.enc_dec else 0
+    enc = (
+        max(1, int(cfg.n_enc_layers * n_periods * period / max(cfg.n_layers, 1)))
+        if cfg.enc_dec else 0
+    )
     return dataclasses.replace(
         cfg,
         n_layers=period * n_periods,

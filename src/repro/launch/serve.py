@@ -6,6 +6,13 @@
 Runs a continuous-batch of requests through prefill, then step-decodes
 with greedy sampling.  The same ``decode_step`` is what the decode_32k /
 long_500k dry-run cells lower at production shapes.
+
+``--compiler myia`` serves the Myia-compiled LM instead: logits come from
+the optimized+fused graph (``launch/myia_step.build_lm_logits``), and
+under ``--data-mesh``/``--model-mesh`` > 1 each forward runs as a
+per-shard program under ``shard_map`` (the SPMD tier).  Decode recomputes
+the full prefix per step (no KV cache in the Myia subset yet), so each
+generated length is its own specialization — keep ``--gen`` small.
 """
 
 from __future__ import annotations
@@ -28,9 +35,21 @@ def main(argv=None) -> int:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument(
+        "--compiler",
+        default="jax",
+        choices=("jax", "myia"),
+        help="jax: cached prefill/decode; myia: the optimized+fused graph, "
+        "sharded under a mesh (full-prefix recompute per step)",
+    )
+    ap.add_argument("--data-mesh", type=int, default=1)
+    ap.add_argument("--model-mesh", type=int, default=1)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
+
+    if args.compiler == "myia":
+        return _serve_myia(args, cfg)
     params = init_params(cfg, jax.random.PRNGKey(0))
     max_len = args.prompt_len + args.gen
 
@@ -79,6 +98,65 @@ def main(argv=None) -> int:
 
 def decode_step_jit_call(decode_jit, params, tok, pos, caches):
     return decode_jit(params, tok, jnp.int32(pos), caches)
+
+
+def _serve_myia(args, cfg) -> int:
+    """Greedy decode off the Myia-compiled LM forward (SPMD tier when a
+    mesh is active).  Batch stays data-parallel; the vocab projection is
+    model-parallel — the same specs the train step uses."""
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.myia_step import (
+        MyiaLMDims,
+        build_lm_logits,
+        init_lm_params,
+        lm_in_specs,
+    )
+    from repro.core import api
+    from repro.parallel import mesh_context
+
+    dims = MyiaLMDims.from_config(cfg)
+    params = init_lm_params(dims, jax.random.PRNGKey(0))
+    logits_fn = api.myia(
+        build_lm_logits(dims), fuse=True, in_specs=lm_in_specs(with_labels=False)
+    )
+
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(
+        rng.integers(0, dims.vocab, (args.batch, args.prompt_len)), jnp.int32
+    )
+    use_mesh = args.data_mesh * args.model_mesh > 1
+    mesh = make_local_mesh(args.data_mesh, args.model_mesh) if use_mesh else None
+
+    with mesh_context(mesh, {}):
+        t0 = time.monotonic()
+        logits = logits_fn(*params, tokens)
+        jax.block_until_ready(logits)
+        t_prefill = time.monotonic() - t0
+        out_tokens = []
+        t1 = time.monotonic()
+        for i in range(args.gen):
+            tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            out_tokens.append(tok)
+            if i + 1 == args.gen:
+                break  # the last sample needs no further forward pass
+            tokens = jnp.concatenate([tokens, tok[:, None]], axis=1)
+            logits = logits_fn(*params, tokens)
+        if out_tokens:
+            jax.block_until_ready(out_tokens[-1])
+        t_decode = time.monotonic() - t1
+
+    tier = "shard_map" if mesh is not None else "single-device"
+    print(f"[myia/{tier}] prefill: {args.batch}×{args.prompt_len} in {t_prefill:.3f}s")
+    print(
+        f"[myia/{tier}] decode: {args.gen} steps × batch {args.batch} in "
+        f"{t_decode:.3f}s (full-prefix recompute, one specialization per length)"
+    )
+    if out_tokens:
+        gen = np.stack([np.asarray(t) for t in out_tokens], axis=1)
+        print("sample generations (token ids):")
+        for row in gen[:2]:
+            print("  ", row[:16].tolist())
+    return 0
 
 
 if __name__ == "__main__":

@@ -17,7 +17,6 @@ checkpoint policy wraps the scan body.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -211,13 +210,17 @@ def stack_init(cfg: ModelConfig, key: jax.Array, segments=None) -> list[Params]:
         keys = jax.random.split(key, reps + 1)
         key = keys[0]
         per_rep = [
-            [layer_init(cfg, spec, k2) for spec, k2 in zip(pattern, jax.random.split(k, len(pattern)))]
+            [layer_init(cfg, spec, k2)
+             for spec, k2 in zip(pattern, jax.random.split(k, len(pattern)))]
             for k in keys[1:]
         ]
         if reps == 1:
             out.append({"layers": per_rep[0]})
         else:
-            out.append({"layers": [_stack_leaves([r[i] for r in per_rep]) for i in range(len(pattern))]})
+            out.append(
+                {"layers": [_stack_leaves([r[i] for r in per_rep])
+                            for i in range(len(pattern))]}
+            )
     return out
 
 
@@ -240,7 +243,10 @@ def stack_apply(
     for (pattern, reps), seg in zip(segments, segs):
         if reps == 1 or not cfg.scan_layers:
             lp_list = seg["layers"]
-            iters = [jax.tree.map(lambda l: l[i], lp_list) for i in range(reps)] if reps > 1 else [lp_list]
+            iters = (
+                [jax.tree.map(lambda l: l[i], lp_list) for i in range(reps)]
+                if reps > 1 else [lp_list]
+            )
             for lps in iters:
                 for spec, lp in zip(pattern, lps):
                     x, aux = layer_apply(
@@ -294,7 +300,11 @@ def stack_decode(
         if reps == 1 or not cfg.scan_layers:
             ncs = []
             layer_iter = (
-                [(jax.tree.map(lambda l: l[i], seg["layers"]), jax.tree.map(lambda c: c[i], seg_cache["layers"])) for i in range(reps)]
+                [
+                    (jax.tree.map(lambda l: l[i], seg["layers"]),
+                     jax.tree.map(lambda c: c[i], seg_cache["layers"]))
+                    for i in range(reps)
+                ]
                 if reps > 1
                 else [(seg["layers"], seg_cache["layers"])]
             )
@@ -305,7 +315,10 @@ def stack_decode(
                     ncs_rep.append(nc)
                 ncs.append(ncs_rep)
             if reps > 1:
-                new_caches.append({"layers": [_stack_leaves([r[i] for r in ncs]) for i in range(len(pattern))]})
+                new_caches.append(
+                    {"layers": [_stack_leaves([r[i] for r in ncs])
+                                for i in range(len(pattern))]}
+                )
             else:
                 new_caches.append({"layers": ncs[0]})
         else:
@@ -352,7 +365,10 @@ def stack_prefill(
                     ncs_rep.append(c)
                 ncs.append(ncs_rep)
             if reps > 1:
-                caches.append({"layers": [_stack_leaves([r[i] for r in ncs]) for i in range(len(pattern))]})
+                caches.append(
+                    {"layers": [_stack_leaves([r[i] for r in ncs])
+                                for i in range(len(pattern))]}
+                )
             else:
                 caches.append({"layers": ncs[0]})
         else:

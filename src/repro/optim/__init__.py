@@ -121,7 +121,11 @@ def _adamw(cfg: OptConfig) -> Optimizer:
 
 
 def _factored(cfg: OptConfig, shape: tuple[int, ...]) -> bool:
-    return len(shape) >= 2 and shape[-1] >= cfg.min_dim_size_to_factor and shape[-2] >= cfg.min_dim_size_to_factor
+    return (
+        len(shape) >= 2
+        and shape[-1] >= cfg.min_dim_size_to_factor
+        and shape[-2] >= cfg.min_dim_size_to_factor
+    )
 
 
 def _adafactor(cfg: OptConfig) -> Optimizer:

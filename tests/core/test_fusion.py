@@ -78,7 +78,8 @@ CORPUS = [
         (jnp.ones((8, 8)) * 0.1, jnp.ones((8, 8)) * 0.2, jnp.ones((4, 8)) * 0.7),
     ),
     ("fwd_reduce_chain", None, _reduce_chain, 0, (jnp.linspace(-2, 2, 32).reshape(4, 8),)),
-    ("grad_reduce_chain", build_grad_graph, _reduce_chain, 0, (jnp.linspace(-2, 2, 32).reshape(4, 8),)),
+    ("grad_reduce_chain", build_grad_graph, _reduce_chain, 0,
+     (jnp.linspace(-2, 2, 32).reshape(4, 8),)),
     (
         "grad_softplusish",
         build_grad_graph,

@@ -11,7 +11,6 @@ allclose in float64.
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

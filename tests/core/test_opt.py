@@ -13,7 +13,6 @@ from repro.core import (
     build_grad_graph,
     clone_graph,
     count_nodes,
-    infer,
     optimize,
     parse_function,
     run_graph,

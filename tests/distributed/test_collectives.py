@@ -6,8 +6,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
-
 
 def run_with_devices(body: str, n: int = 8) -> str:
     script = textwrap.dedent(

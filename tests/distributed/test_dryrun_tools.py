@@ -34,7 +34,6 @@ class TestCollectiveParser:
 
     def test_real_compiled_module(self):
         """Parse an actual partitioned module containing an all-reduce."""
-        import numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
 
         if len(jax.devices()) < 1:

@@ -2,7 +2,6 @@
 devices needed: specs are checked structurally."""
 
 import jax
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config

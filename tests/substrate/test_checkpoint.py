@@ -1,6 +1,5 @@
 """Checkpointing: atomicity, keep-k, async, torn-write recovery, restore."""
 
-import json
 import os
 
 import jax
