@@ -11,6 +11,13 @@ Measures, per signature:
   fully optimized jitted path (tiered compilation moves it here).
 * ``cached_call_us`` — steady-state cached calls (after the jit warmed).
 * ``specializations`` — cache isolation across signatures.
+
+Additionally reports the **VM-fallback counter**: how many programs of a
+fixed corpus (straight-line, first- and second-order adjoints, loops,
+higher-order/defunctionalized calls, plus the documented VM-only shapes)
+fail ``try_lower`` after the full pipeline.  The count is deterministic —
+``scripts/check_bench.py`` fails CI if it ever rises above the committed
+trajectory, which is the teeth that keep the fallback set from regrowing.
 """
 
 from __future__ import annotations
@@ -21,12 +28,145 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import api as myia
-from repro.core.primitives import tanh as _tanh
+from repro.core import build_grad_graph, parse_function
+from repro.core.closure import analyze_blockers
+from repro.core.infer import abstract_of_value
+from repro.core.primitives import reduce_sum as _rsum, tanh as _tanh
 
 
 def model(w, x):
     h = _tanh(x @ w)
     return h @ w
+
+
+# -- VM-fallback corpus ------------------------------------------------------
+# Deterministic programs spanning every pipeline tier.  The final rows of
+# BENCH_compile.json record how many fail try_lower; any increase vs the
+# committed trajectory fails CI (scripts/check_bench.py).
+
+
+def _cube(x):
+    return x * x * x
+
+
+def _sq(y):
+    return y * y
+
+
+def _iterate(f, x, n):
+    i = 0
+    while i < n:
+        x = f(x)
+        i = i + 1
+    return x
+
+
+def _while_pow(x, n):
+    i = 0
+    acc = x
+    while i < n:
+        acc = acc * x
+        i = i + 1
+    return acc
+
+
+def _for_fold(x):
+    s = 0.0
+    for i in range(5):
+        s = s + x * x
+    return s
+
+
+def _defunc(x, n):
+    return _iterate(_sq, x, n)
+
+
+def _partial(x, y, n):
+    g = lambda z: z * y  # noqa: E731
+    return _iterate(g, x, n)
+
+
+def _compose_use(x):
+    h = lambda v: _sq(_sq(v))  # noqa: E731
+    return h(x)
+
+
+def _fold_rec(x, n):  # non-tail self-call: documented VM resident
+    if n == 0:
+        return 1.0
+    return x * _fold_rec(x, n - 1)
+
+
+def _nested(x, n):  # nested loops: one SCC, documented VM resident
+    i = 0
+    s = 0.0
+    while i < n:
+        j = 0
+        while j < i:
+            s = s + x
+            j = j + 1
+        i = i + 1
+    return s
+
+
+_F = jnp.asarray(1.3, jnp.float32)
+_N = jnp.asarray(4)
+_WM = jnp.ones((4, 4), jnp.float32) * 0.3
+_XM = jnp.ones((2, 4), jnp.float32)
+
+
+def _grad(fn, wrt=0, order=1):
+    g = parse_function(fn)
+    for _ in range(order):
+        g = build_grad_graph(g, wrt)
+    return g
+
+
+def _mlp_sum(w, x):
+    return _rsum(_tanh(x @ w), None, False)
+
+
+def _fallback_corpus() -> list[tuple[str, object, tuple]]:
+    mlp = _mlp_sum
+    return [
+        ("fwd_mlp", parse_function(mlp), (_WM, _XM)),
+        ("grad_mlp", _grad(mlp), (_WM, _XM)),
+        ("grad2_cube", _grad(_cube, order=2), (_F,)),
+        ("while_pow", parse_function(_while_pow), (_F, _N)),
+        ("for_fold", parse_function(_for_fold), (_F,)),
+        ("defunc_iterate", parse_function(_defunc), (_F, _N)),
+        ("partial_application", parse_function(_partial), (_F, _F, _N)),
+        ("compose", parse_function(_compose_use), (_F,)),
+        ("grad_while_pow", _grad(_while_pow), (_F, _N)),
+        ("fold_rec_grad", _grad(_fold_rec), (_F, 5)),
+        ("nested_loops", parse_function(_nested), (_F, _N)),
+    ]
+
+
+def _fallback_rows() -> list[dict]:
+    from repro.core.api import compile_pipeline
+
+    fallbacks = 0
+    kinds: dict[str, int] = {}
+    per_graph = {}
+    corpus = _fallback_corpus()
+    for name, g, args in corpus:
+        og = compile_pipeline(g, tuple(abstract_of_value(a) for a in args))
+        reasons = analyze_blockers(og)
+        per_graph[name] = sorted({r.kind for r in reasons})
+        if reasons:
+            fallbacks += 1
+            for r in reasons:
+                kinds[r.kind] = kinds.get(r.kind, 0) + 1
+    return [
+        {
+            "signature": "vm_fallback_corpus",
+            "corpus_size": len(corpus),
+            "vm_fallbacks": fallbacks,
+            "fallback_kinds": dict(sorted(kinds.items())),
+            "per_graph": per_graph,
+        }
+    ]
 
 
 def run(reps: int = 50) -> list[dict]:
@@ -62,6 +202,7 @@ def run(reps: int = 50) -> list[dict]:
     fn(jnp.ones((8, 8)), jnp.ones((4, 8)))
     fn(jnp.ones((16, 16)), jnp.ones((4, 16)))
     rows.append({"signature": "polymorphic(2 shapes)", "specializations": len(fn._specializations)})
+    rows.extend(_fallback_rows())
     return rows
 
 

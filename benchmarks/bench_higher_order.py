@@ -1,0 +1,107 @@
+"""Higher-order compilation benchmark (closure-elimination tier).
+
+The paper's claim is that ST adjoints — including adjoints of adjoints —
+are ordinary programs amenable to ahead-of-time compilation.  This bench
+measures exactly that on grad-of-grad and an HVP of the ``myia_step`` MLP
+loss: the full pipeline must produce a VM-free lowered program
+(``vm_fallback`` = 0 is CI-gated via BENCH_higher_order.json), and we
+record compile time plus steady-state latency against the VM-traced
+baseline (``lower=False`` — the pre-closure-elimination execution path).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Graph, P, build_grad_graph, parse_function
+from repro.core.api import compile_pipeline
+from repro.core.infer import abstract_of_value
+from repro.core.jax_backend import compile_graph
+from repro.launch.myia_step import MyiaLMDims, build_lm_loss, init_lm_params
+
+
+def _cube(x):
+    return x * x * x
+
+
+def _hvp_graph(f_graph, nargs):
+    """grad of sum(grad(f)·v) wrt arg 0 — an HVP spelled in the IR."""
+    g1 = build_grad_graph(f_graph, 0)
+    h = Graph("hvp_host")
+    ps = [h.add_parameter(f"p{i}") for i in range(nargs)]
+    v = h.add_parameter("v")
+    dot = h.apply(P.reduce_sum, h.apply(P.mul, h.apply(g1, *ps), v), None, False)
+    h.set_return(dot)
+    return build_grad_graph(h, 0)
+
+
+def _mlp_workloads():
+    # deliberately tiny: the workload is the *graph shape* (take/one-hot/
+    # stable-logsoftmax adjoint-of-adjoint), not FLOPs — reverse-over-
+    # reverse node counts grow fast and quick-mode CI runs this
+    dims = MyiaLMDims(vocab=8, d_model=4, d_hidden=8)
+    B, S = 1, 2
+    loss_g = parse_function(build_lm_loss(dims, B, S))
+    params = init_lm_params(dims, jax.random.PRNGKey(0))
+    tokens = jnp.zeros((B, S), jnp.int32)
+    labels = jnp.ones((B, S), jnp.int32)
+    args = (*params, tokens, labels)
+    grad2 = build_grad_graph(build_grad_graph(loss_g, 0), 0)
+    hvp = _hvp_graph(loss_g, len(args))
+    return [
+        ("grad2_mlp", grad2, args),
+        ("hvp_mlp", hvp, (*args, jnp.ones_like(params[0]))),
+    ]
+
+
+def _time_runner(runner, args, reps: int) -> tuple[float, float]:
+    t0 = time.perf_counter()
+    jax.block_until_ready(runner(*args))
+    first = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = runner(*args)
+    jax.block_until_ready(r)
+    return first, (time.perf_counter() - t0) / reps
+
+
+def run(reps: int = 30) -> list[dict]:
+    workloads = [
+        (
+            "grad2_cube",
+            build_grad_graph(build_grad_graph(parse_function(_cube))),
+            (jnp.asarray(1.3, jnp.float32),),
+        )
+    ] + _mlp_workloads()
+
+    rows = []
+    for name, g, args in workloads:
+        t0 = time.perf_counter()
+        og = compile_pipeline(g, tuple(abstract_of_value(a) for a in args))
+        pipeline_s = time.perf_counter() - t0
+        compiled = compile_graph(og)
+        first, steady = _time_runner(compiled, args, reps)
+        # VM baseline: the same optimized graph traced through the
+        # interpreter (what every higher-order program did before this tier)
+        vm = compile_graph(og, lower=False)
+        vm_first, vm_steady = _time_runner(vm, args, reps)
+        rows.append(
+            {
+                "workload": name,
+                "vm_fallback": 0 if compiled.lowered else 1,
+                "pipeline_ms": round(pipeline_s * 1e3, 1),
+                "compile_first_ms": round(first * 1e3, 2),
+                "steady_us": round(steady * 1e6, 1),
+                "vm_trace_first_ms": round(vm_first * 1e3, 2),
+                "vm_steady_us": round(vm_steady * 1e6, 1),
+            }
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(reps=10):
+        print(row)

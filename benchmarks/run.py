@@ -26,6 +26,7 @@ TRAJECTORY = {
     "ad_overhead": "BENCH_ad_overhead.json",
     "fusion": "BENCH_fusion.json",
     "spmd": "BENCH_spmd.json",
+    "higher_order": "BENCH_higher_order.json",
 }
 
 
@@ -43,6 +44,7 @@ def main(argv=None) -> int:
         bench_ad_overhead,
         bench_compile_time,
         bench_fusion,
+        bench_higher_order,
         bench_kernels,
         bench_opt_effectiveness,
         bench_spmd,
@@ -54,6 +56,7 @@ def main(argv=None) -> int:
         "compile_time": lambda: bench_compile_time.run(reps=10 if args.quick else 50),
         "fusion": lambda: bench_fusion.run(reps=10 if args.quick else 50),
         "spmd": lambda: bench_spmd.run(reps=10 if args.quick else 30),
+        "higher_order": lambda: bench_higher_order.run(reps=10 if args.quick else 30),
         "kernels": bench_kernels.run,
     }
     if args.quick and not args.only:

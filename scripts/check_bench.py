@@ -9,7 +9,11 @@ by more than ``--tol`` (default 25%).
 Guarded metrics (rows matched by workload/signature/mesh key):
 
 * ``BENCH_compile.json``   — ``compile_call_ms`` (compile time; lower is
-  better, with a small absolute floor so sub-noise wiggle never trips),
+  better, with a small absolute floor so sub-noise wiggle never trips)
+  and ``vm_fallbacks`` (closure-elimination tier: corpus graphs failing
+  ``try_lower`` — deterministic, may never rise),
+* ``BENCH_higher_order.json`` — ``vm_fallback`` per workload (grad-of-grad
+  and the MLP HVP must stay on the lowered path) + floored ``steady_us``,
 * ``BENCH_ad_overhead.json`` — ``st_over_jax`` (the AD overhead ratio),
 * ``BENCH_fusion.json``    — ``launches_after`` (fused launch counts;
   deterministic, any >tol increase is a real partitioner regression),
@@ -40,8 +44,9 @@ import subprocess
 import sys
 
 #: file -> (row-key fields, [(metric, absolute floor)]).
-#: Launch/collective counts are deterministic — floor 0, the noise-free
-#: teeth of the gate.  The timing floors are calibrated to observed
+#: Floor 0.0 marks a DETERMINISTIC counter (launches, collectives, VM
+#: fallbacks): compared exactly — any increase fails, no relative
+#: tolerance.  The timing floors are calibrated to observed
 #: run-to-run variance on loaded CI boxes (compile_call_ms swings
 #: ±15 ms at the ~25 ms scale; st_over_jax, a ratio of two µs-scale
 #: medians, was observed swinging 0.58↔1.53 across consecutive runs):
@@ -49,12 +54,24 @@ import sys
 #: so load spikes don't fail builds while a genuine multi-× regression
 #: still does.
 GUARDS: dict[str, tuple[tuple[str, ...], list[tuple[str, float]]]] = {
-    "BENCH_compile.json": (("signature",), [("compile_call_ms", 15.0)]),
+    "BENCH_compile.json": (
+        ("signature",),
+        # vm_fallbacks is the closure-elimination tier's deterministic
+        # teeth: the count of corpus graphs that fail try_lower after the
+        # full pipeline may only fall, never rise (floor 0, no noise)
+        [("compile_call_ms", 15.0), ("vm_fallbacks", 0.0)],
+    ),
     "BENCH_ad_overhead.json": (("workload",), [("st_over_jax", 1.0)]),
     "BENCH_fusion.json": (("workload",), [("launches_after", 0.0)]),
     "BENCH_spmd.json": (
         ("workload", "mesh"),
         [("launches_fused", 0.0), ("n_psum", 0.0), ("n_all_gather", 0.0)],
+    ),
+    # higher-order workloads must stay on the lowered path (vm_fallback
+    # 0/1 per row, deterministic); steady-state latency is noise-floored
+    "BENCH_higher_order.json": (
+        ("workload",),
+        [("vm_fallback", 0.0), ("steady_us", 150.0)],
     ),
 }
 
@@ -97,6 +114,17 @@ def check_file(fname: str, tol: float) -> list[str]:
             if old is None or new is None:
                 continue
             old, new = float(old), float(new)
+            if floor == 0.0:
+                # deterministic counter (launches, collectives, VM
+                # fallbacks): noise-free, so ANY increase is a real
+                # regression — no relative tolerance applies (a
+                # baseline of 4 must not green a move to 5)
+                if new > old:
+                    failures.append(
+                        f"{fname}: {metric} rose for {key}: {old:g} -> {new:g} "
+                        "(deterministic counter, exact gate)"
+                    )
+                continue
             if new <= old * (1.0 + tol):
                 continue
             if abs(new - old) <= floor:

@@ -23,18 +23,43 @@ TARGETS = ["src", "benchmarks", "scripts", "tests"]
 LINE_LENGTH = 100
 
 
+def _pinned_ruff() -> str | None:
+    """The ruff pin from pyproject's ``[project.optional-dependencies]``
+    lint extra (e.g. ``"0.8.4"``) — the single source of truth CI installs."""
+    try:
+        import tomllib
+
+        with open(ROOT / "pyproject.toml", "rb") as f:
+            deps = tomllib.load(f)["project"]["optional-dependencies"]["lint"]
+        for d in deps:
+            if d.startswith("ruff=="):
+                return d.split("==", 1)[1]
+    except Exception:
+        pass
+    return None
+
+
 def _ruff() -> int | None:
     exe = shutil.which("ruff")
-    cmd = [exe, "check"] if exe else None
+    cmd = [exe] if exe else None
     if cmd is None:
         probe = subprocess.run(
             [sys.executable, "-m", "ruff", "--version"], capture_output=True
         )
         if probe.returncode == 0:
-            cmd = [sys.executable, "-m", "ruff", "check"]
+            cmd = [sys.executable, "-m", "ruff"]
     if cmd is None:
         return None
-    return subprocess.run(cmd + TARGETS, cwd=ROOT).returncode
+    pin = _pinned_ruff()
+    if pin is not None:
+        ver = subprocess.run(cmd + ["--version"], capture_output=True, text=True)
+        got = (ver.stdout or "").strip().split()[-1] if ver.returncode == 0 else ""
+        if got and got != pin:
+            print(
+                f"lint: WARNING local ruff {got} != pinned {pin} "
+                "(pyproject [lint]); results may differ from CI"
+            )
+    return subprocess.run(cmd + ["check"] + TARGETS, cwd=ROOT).returncode
 
 
 class _ImportCollector(ast.NodeVisitor):

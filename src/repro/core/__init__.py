@@ -7,6 +7,7 @@ should be going" — the Myia paper)."""
 from . import primitives as P  # noqa: F401
 from .ad import J, build_grad_graph, build_value_and_grad_graph, build_vjp_graph  # noqa: F401
 from .api import MyiaFunction, grad, myia, value_and_grad, vjp  # noqa: F401
+from .closure import FallbackReason, analyze_blockers, lower_loops  # noqa: F401
 from .fusion import Cluster, FusionPlan, partition_graph  # noqa: F401
 from .infer import InferenceError, infer  # noqa: F401
 from .ir import Apply, Constant, Graph, Node, Parameter, clone_graph  # noqa: F401

@@ -328,6 +328,18 @@ def J(g: Graph) -> Graph:
 # ---------------------------------------------------------------------------
 
 
+def _seed_cotangent(gg: Graph, out: Node) -> Node:
+    """The seed ``d(out)``: ones *at the output's shape*.  A bare scalar
+    1.0 relies on broadcasting through every backpropagator — sound for
+    scalar outputs, but under reverse-over-reverse the outer adjoint's
+    output is an array and a scalar seed leaves shape-mismatched zero
+    terms that the optimizer's ``gadd_zero`` must then treat as
+    broadcasts.  ``broadcast_to(cast(1, dtype), shape)`` is exact and
+    folds to a no-op for scalar outputs (the ``broadcast_noop`` rule)."""
+    one = gg.apply(P.cast, 1.0, gg.apply(P.dtype_of, out))
+    return gg.apply(P.broadcast_to, one, gg.apply(P.shape, out))
+
+
 def build_grad_graph(g: Graph, wrt: int | tuple[int, ...] = 0) -> Graph:
     """``grad(f)``: a graph computing df/dx_wrt for a scalar-output ``f``."""
     jg = J(g)
@@ -336,8 +348,7 @@ def build_grad_graph(g: Graph, wrt: int | tuple[int, ...] = 0) -> Graph:
     japp = gg.apply(jg, *params)
     out = gg.apply(P.tuple_getitem, japp, 0)
     bp = gg.apply(P.tuple_getitem, japp, 1)
-    one = gg.apply(P.cast, 1.0, gg.apply(P.dtype_of, out))
-    grads = gg.apply(bp, one)
+    grads = gg.apply(bp, _seed_cotangent(gg, out))
     if isinstance(wrt, int):
         gg.set_return(gg.apply(P.tuple_getitem, grads, wrt + 1))
     else:
@@ -354,8 +365,7 @@ def build_value_and_grad_graph(g: Graph, wrt: int | tuple[int, ...] = 0) -> Grap
     japp = gg.apply(jg, *params)
     out = gg.apply(P.tuple_getitem, japp, 0)
     bp = gg.apply(P.tuple_getitem, japp, 1)
-    one = gg.apply(P.cast, 1.0, gg.apply(P.dtype_of, out))
-    grads = gg.apply(bp, one)
+    grads = gg.apply(bp, _seed_cotangent(gg, out))
     if isinstance(wrt, int):
         gnode = gg.apply(P.tuple_getitem, grads, wrt + 1)
     else:

@@ -79,15 +79,22 @@ def compile_pipeline(
     engine: str = "worklist",
     stats: OptStats | None = None,
     patterns: bool = False,
+    loops: bool = True,
 ) -> Graph:
-    """inline → infer → optimize, on a private clone of ``graph``.
+    """inline → infer → optimize → loop-lower, on a private clone of
+    ``graph``.
 
     ``engine`` / ``stats`` are forwarded to :func:`repro.core.opt.optimize`
-    (both optimize calls share the one stats object).  ``patterns=True``
+    (all optimize calls share the one stats object).  ``patterns=True``
     additionally enables the kernel-pattern rules of the fusion tier
     (rmsnorm / softmax-attention subgraphs rewritten to the hand-written
     Pallas primitives registered in ``repro.kernels.ops``) in the
-    shape-directed pass.
+    shape-directed pass.  ``loops=True`` (the closure-elimination tier)
+    rewrites residual tail-recursive families into ``while_loop`` /
+    ``scan_loop`` primitive applies (``repro.core.closure``) so parsed
+    loops lower instead of falling back to the VM; when ``stats`` is
+    given, any remaining fallback reasons land in
+    ``stats.fallback_reasons`` (structured, see ``FallbackReason``).
     """
     g = clone_graph(graph)
     if not opt:
@@ -100,6 +107,18 @@ def compile_pipeline(
             pass  # dynamic program: shape-directed rules simply won't fire
         # shape-directed pass (kernel patterns need inferred shapes)
         optimize(g, engine=engine, stats=stats, patterns=patterns)
+        if loops:
+            from .closure import lower_loops
+
+            report = lower_loops(g, stats=stats)
+            if report.lowered:
+                # the rewrite leaves dead families and foldable glue; the
+                # cleanup pass also optimizes *inside* the loop subgraphs
+                optimize(g, engine=engine, stats=stats, patterns=patterns)
+    if stats is not None:
+        from .closure import analyze_blockers
+
+        stats.fallback_reasons = [r.as_dict() for r in analyze_blockers(g)]
     return g
 
 

@@ -1,0 +1,819 @@
+"""Closure elimination: call-graph analysis, defunctionalization, and
+structured-recursion lowering (the "compile the closures" tier).
+
+The paper's argument for a closure-supporting graph IR is that ST-based AD
+needs no tape *and* its output is an ordinary program, amenable to
+ahead-of-time optimization — including adjoints of adjoints and programs
+with control flow.  Before this module, any graph that kept a residual
+graph value after optimization (recursion from parsed loops, higher-order
+calls the inliner could not resolve) silently fell back to the reference
+VM.  This module closes most of that gap:
+
+* :func:`analyze_blockers` — the structured version of
+  ``lowering.lowering_blockers``: every reason a graph cannot lower is a
+  :class:`FallbackReason` with a machine-readable ``kind``
+  (``recursion-shape`` / ``higher-order-residual`` / ``free-variable`` /
+  ``non-array-param`` / ``no-return``), surfaced through ``OptStats`` and
+  the benchmark JSON so the CI fallback counter is debuggable.
+
+* :func:`specialize_recursive_calls` — defunctionalization (Shaikhha et
+  al.): a call of a *recursive* graph that passes a graph- or
+  primitive-valued constant gets a per-constant specialized clone with
+  that parameter bound.  The interior call sites become first-order, the
+  inliner resolves them on the next wave, and the loop lowering below can
+  then compile the recursion (``iterate(f, x, n)``-style programs).
+
+* :func:`lower_loops` — structured-recursion lowering (Innes, *Don't
+  Unroll Adjoint*): tail-recursive families in the canonical shape the
+  parser emits (``header: switch(cond, body, exit)()``; ``body`` tail-calls
+  the header, possibly through argument-carrying shims and nested
+  switch diamonds) are rewritten into ``while_loop`` / ``scan_loop``
+  primitive applies whose cond/step/exit are *closed first-order graphs*.
+  The loop-invariant free variables — the closure environment of the loop
+  family — are threaded as trailing arguments, and the carry is exactly
+  the header's parameter list.  ``scan_loop`` (→ ``jax.lax.scan``) is
+  selected when the trip count is statically known (the fold-shaped
+  ``for i in range(...)`` case); everything else becomes
+  ``jax.lax.while_loop``.
+
+What still genuinely needs the VM: non-tail self-calls (the recursive
+result feeds another op — ``x * f(x, n-1)``), break-style conditional
+exits from a loop body, nested loops (the inner family tail-calls the
+outer header, so both live in one SCC), and closures selected by
+``switch`` on traced conditions.  ``docs/pipeline.md`` keeps the matrix.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+from . import primitives as P
+from .infer import AArray, AScalar, ATuple, _widen
+from .ir import (
+    Apply,
+    Constant,
+    Graph,
+    GraphCloner,
+    Node,
+    Parameter,
+    dfs_nodes,
+    free_variables,
+    graph_and_descendants,
+    is_apply,
+    is_constant_graph,
+)
+from .primitives import LOOP_GRAPH_ARGS, Primitive
+
+__all__ = [
+    "FallbackReason",
+    "analyze_blockers",
+    "specialize_recursive_calls",
+    "lower_loops",
+    "LoopReport",
+]
+
+
+# ---------------------------------------------------------------------------
+# Structured fallback reasons
+# ---------------------------------------------------------------------------
+
+
+class FallbackReason:
+    """Why a graph stays on the VM: a machine-readable kind + detail."""
+
+    #: the recursion is not in a shape the loop lowering recognizes
+    RECURSION = "recursion-shape"
+    #: a function value survived optimization (closure/higher-order call)
+    HIGHER_ORDER = "higher-order-residual"
+    #: a node owned by another graph (the graph is still nested)
+    FREE_VARIABLE = "free-variable"
+    #: a loop carry that is not an array/scalar value
+    NON_ARRAY = "non-array-param"
+    NO_RETURN = "no-return"
+
+    __slots__ = ("kind", "detail")
+
+    def __init__(self, kind: str, detail: str) -> None:
+        self.kind = kind
+        self.detail = detail
+
+    def __str__(self) -> str:
+        return f"[{self.kind}] {self.detail}"
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"FallbackReason({self.kind!r}, {self.detail!r})"
+
+    def as_dict(self) -> dict:
+        return {"kind": self.kind, "detail": self.detail}
+
+
+def _reaches_itself(g: Graph) -> bool:
+    return any(is_constant_graph(n) and n.value is g for n in dfs_nodes(g.return_))
+
+
+def _is_loop_graph_slot(user: Node, idx: int) -> bool:
+    """True iff ``(user, idx)`` is a legal graph-valued slot: one of the
+    leading sub-function arguments of a loop primitive apply."""
+    if not isinstance(user, Apply):
+        return False
+    fn = user.fn
+    if not (isinstance(fn, Constant) and isinstance(fn.value, Primitive)):
+        return False
+    n = LOOP_GRAPH_ARGS.get(fn.value.name)
+    return n is not None and 1 <= idx <= n
+
+
+def analyze_blockers(graph: Graph, _depth: int = 0) -> list[FallbackReason]:
+    """Structured reasons ``graph`` cannot lower (empty list: lowerable).
+
+    Mirrors what ``lowering.lower_graph`` can emit: straight-line applies
+    of constant primitives over graph-owned nodes, plus loop primitive
+    applies whose leading arguments are *closed, recursively lowerable*
+    graphs.  De-duplicated (first occurrence wins)."""
+    if graph.return_ is None:
+        return [FallbackReason(FallbackReason.NO_RETURN, "graph has no return node")]
+    if _depth > 8:
+        return [
+            FallbackReason(
+                FallbackReason.RECURSION, f"loop nesting too deep below {graph.name!r}"
+            )
+        ]
+    reasons: dict[str, FallbackReason] = {}
+
+    def add(kind: str, detail: str) -> None:
+        reasons.setdefault(f"{kind}:{detail}", FallbackReason(kind, detail))
+
+    def classify_graph_value(g: Graph) -> None:
+        if _reaches_itself(g):
+            add(
+                FallbackReason.RECURSION,
+                f"graph-valued constant {g.name!r} survived optimization "
+                "(residual recursion)",
+            )
+        else:
+            add(
+                FallbackReason.HIGHER_ORDER,
+                f"graph-valued constant {g.name!r} survived optimization "
+                "(closure value)",
+            )
+
+    seen: set[int] = set()
+    stack: list[Node] = [graph.return_]
+    while stack:
+        node = stack.pop()
+        if id(node) in seen:
+            continue
+        seen.add(id(node))
+        if isinstance(node, Constant):
+            if isinstance(node.value, Graph):
+                if node.users and all(
+                    _is_loop_graph_slot(u, i) for u, i in node.users
+                ):
+                    # loop sub-function: must itself be closed + lowerable
+                    for sub in analyze_blockers(node.value, _depth + 1):
+                        add(sub.kind, f"in loop graph {node.value.name!r}: {sub.detail}")
+                else:
+                    classify_graph_value(node.value)
+            continue
+        if isinstance(node, Parameter):
+            if node.graph is not graph:
+                add(
+                    FallbackReason.FREE_VARIABLE,
+                    f"free parameter {node!r} of graph {node.graph and node.graph.name!r}",
+                )
+            continue
+        assert isinstance(node, Apply)
+        if node.graph is not graph:
+            add(
+                FallbackReason.FREE_VARIABLE,
+                f"free variable: apply node owned by nested graph "
+                f"{node.graph and node.graph.name!r}",
+            )
+        fn = node.fn
+        if not (isinstance(fn, Constant) and isinstance(fn.value, Primitive)):
+            if is_constant_graph(fn):
+                classify_graph_value(fn.value)
+            else:
+                add(
+                    FallbackReason.HIGHER_ORDER,
+                    f"non-primitive callee {fn!r} (higher-order or graph call)",
+                )
+        stack.extend(node.inputs)
+    return list(reasons.values())
+
+
+# ---------------------------------------------------------------------------
+# Defunctionalization: specialize recursive calls on function constants
+# ---------------------------------------------------------------------------
+
+
+def _family_recursive(g: Graph, memo: dict[int, bool]) -> bool:
+    hit = memo.get(g._id)
+    if hit is None:
+        hit = any(_reaches_itself(d) for d in graph_and_descendants(g))
+        memo[g._id] = hit
+    return hit
+
+
+def _passes_through(h: Graph, i: int, value: Any) -> bool:
+    """Every call of ``h`` inside its own family must keep argument ``i``
+    stable: the parameter itself, or a constant equal to ``value``."""
+    p = h.parameters[i]
+    for n in dfs_nodes(h.return_):
+        if isinstance(n, Apply) and is_constant_graph(n.fn) and n.fn.value is h:
+            if i >= len(n.args):
+                return False
+            a = n.args[i]
+            if a is p:
+                continue
+            if isinstance(a, Constant) and a.value is value:
+                continue
+            return False
+    return True
+
+
+def _drop_arg(call: Apply, i: int, root: Graph) -> None:
+    new = Apply(
+        [call.inputs[0]] + call.args[:i] + call.args[i + 1:],
+        call.graph,
+        call.debug_name,
+    )
+    new.abstract = call.abstract
+    _replace(root, call, new)
+
+
+def _replace(root: Graph, old: Node, new: Node) -> None:
+    for user, idx in list(old.users):
+        user.set_input(idx, new)
+    for g in graph_and_descendants(root):
+        if g.return_ is old:
+            g.set_return(new)
+    if isinstance(old, Apply):
+        for i, inp in enumerate(old.inputs):
+            inp.users.discard((old, i))
+
+
+def specialize_recursive_calls(
+    root: Graph, stats: Any = None, memo: dict | None = None
+) -> bool:
+    """Monomorphize recursive higher-order calls (defunctionalization).
+
+    A call ``h(..., const_fn, ...)`` where ``h``'s family is recursive (so
+    the inliner refuses it) and ``const_fn`` is a graph/primitive constant
+    is rewritten to ``h′(...)`` — a clone of ``h``'s family with that
+    parameter bound to the constant and dropped from every signature.  The
+    now-constant interior call sites inline on the optimizer's next wave,
+    which is what lets ``lower_loops`` compile higher-order recursion.
+
+    ``memo`` caches specializations across calls (keyed by graph, position
+    and constant identity); pass the same dict for one optimize run.
+    """
+    memo = memo if memo is not None else {}
+    rec_memo: dict[int, bool] = {}
+    changed = False
+    for site in list(dfs_nodes(root.return_)):
+        if not (isinstance(site, Apply) and is_constant_graph(site.fn)):
+            continue
+        h = site.fn.value
+        if h.return_ is None or not _family_recursive(h, rec_memo):
+            continue  # the plain inliner owns non-recursive calls
+        if len(site.args) != len(h.parameters):
+            continue
+        for i, a in enumerate(site.args):
+            if not (isinstance(a, Constant) and isinstance(a.value, (Graph, Primitive))):
+                continue
+            if isinstance(a.value, Graph) and a.value.return_ is None:
+                continue
+            if not _passes_through(h, i, a.value):
+                continue
+            key = (h._id, i, id(a.value))
+            h2 = memo.get(key)
+            if h2 is None:
+                h2 = _specialize(h, i, a.value)
+                memo[key] = h2
+            new = Apply(
+                [Constant(h2, h2.name)] + site.args[:i] + site.args[i + 1:],
+                site.graph,
+                site.debug_name,
+            )
+            new.abstract = site.abstract
+            _replace(root, site, new)
+            if stats is not None:
+                stats.record_rule("defunctionalize_call")
+            changed = True
+            break  # site rewritten; further args handled on the next pass
+    return changed
+
+
+def _specialize(h: Graph, i: int, value: Any) -> Graph:
+    label = getattr(value, "name", type(value).__name__)
+    cloner = GraphCloner(h, relabel=f"[{label}]")
+    h2 = cloner.clone()
+    # the constant may be (a clone of) a family member — self-passing style
+    if isinstance(value, Graph):
+        value = cloner.graph_map.get(value, value)
+    p = h2.parameters[i]
+    const = Constant(value, p.debug_name)
+    const.abstract = p.abstract
+    for user, idx in list(p.users):
+        user.set_input(idx, const)
+    h2.parameters.pop(i)
+    # drop the bound argument from every interior self-call
+    for n in list(dfs_nodes(h2.return_)):
+        if isinstance(n, Apply) and is_constant_graph(n.fn) and n.fn.value is h2:
+            if i < len(n.args):
+                _drop_arg(n, i, h2)
+    return h2
+
+
+# ---------------------------------------------------------------------------
+# Structured-recursion lowering
+# ---------------------------------------------------------------------------
+
+
+class _LoopMismatch(Exception):
+    """Internal signal: this recursive family is not loop-shaped."""
+
+    def __init__(self, kind: str, detail: str) -> None:
+        self.kind = kind
+        self.detail = detail
+        super().__init__(f"[{kind}] {detail}")
+
+
+class LoopReport:
+    __slots__ = ("lowered", "scans", "reasons")
+
+    def __init__(self) -> None:
+        self.lowered = 0
+        self.scans = 0
+        self.reasons: list[FallbackReason] = []
+
+
+def _loop_family(h: Graph) -> set[Graph]:
+    """Graphs mutually reachable with ``h`` through graph constants: the
+    candidate loop family (header + body blocks that jump back to it)."""
+    return {g for g in graph_and_descendants(h) if h in graph_and_descendants(g)}
+
+
+def _widen_abstract(ab: Any) -> Any:
+    if ab is None:
+        return None
+    try:
+        return _widen(ab)
+    except Exception:  # pragma: no cover - _widen is total on our domain
+        return None
+
+
+def _carryable(ab: Any) -> bool:
+    """Can this value ride in a jax loop carry?  Arrays, numeric scalars,
+    None units and tuples thereof; function values / environments / opaque
+    statics cannot change identity per iteration."""
+    if isinstance(ab, AArray):
+        return True
+    if isinstance(ab, AScalar):
+        return ab.kind in ("int", "float", "bool", "none")
+    if isinstance(ab, ATuple):
+        return all(_carryable(e) for e in ab.elements)
+    return False
+
+
+class _CloneEnv:
+    """Clone an expression DAG owned by loop-family graphs into ``target``,
+    resolving header parameters and threaded free variables through
+    ``env`` (node id → target-resident node; doubles as the memo).
+
+    Graph constants from *outside* the family are kept, unless they
+    capture family-owned (or remapped) nodes — nested closures like
+    if-expression thunks — in which case the closure's family is
+    deep-copied with its captures resolved into the target graph."""
+
+    def __init__(
+        self,
+        target: Graph,
+        fam: set[Graph],
+        env: dict[int, Node],
+        scope: set[Graph] | None = None,
+    ) -> None:
+        self.target = target
+        self.fam = fam
+        #: graphs whose owned nodes are cloned into ``target`` — the family
+        #: plus the branch graph being traced (the exit block is *not* part
+        #: of the mutually-recursive family but owns its own expression)
+        self.scope = fam if scope is None else scope
+        self.env = env
+        self._captured_memo: dict[int, list[Node]] = {}
+
+    def _captured(self, g: Graph) -> list[Node]:
+        hit = self._captured_memo.get(g._id)
+        if hit is None:
+            hit = [
+                n
+                for n in free_variables(g)
+                if (n.graph in self.scope) or (n._id in self.env)
+            ]
+            self._captured_memo[g._id] = hit
+        return hit
+
+    def clone(self, node: Node) -> Node:
+        if node._id in self.env:
+            return self.env[node._id]
+        stack: list[tuple[Node, bool]] = [(node, False)]
+        while stack:
+            cur, ready = stack.pop()
+            if cur._id in self.env:
+                continue
+            if isinstance(cur, Constant):
+                v = cur.value
+                if isinstance(v, Graph):
+                    if v in self.fam:
+                        raise _LoopMismatch(
+                            FallbackReason.RECURSION,
+                            f"loop graph {v.name!r} escapes as a first-class value",
+                        )
+                    captured = self._captured(v)
+                    if captured and not ready:
+                        stack.append((cur, True))
+                        stack.extend(
+                            (n, False) for n in captured if n._id not in self.env
+                        )
+                        continue
+                    if captured:
+                        new: Node = Constant(self._clone_closure(v), cur.debug_name)
+                    else:
+                        new = Constant(v, cur.debug_name)
+                else:
+                    new = Constant(v, cur.debug_name)
+                new.abstract = cur.abstract
+                self.env[cur._id] = new
+                continue
+            if isinstance(cur, Parameter):
+                raise _LoopMismatch(
+                    FallbackReason.RECURSION,
+                    f"loop body references parameter {cur!r} of "
+                    f"{cur.graph and cur.graph.name!r} outside its trace frame",
+                )
+            assert isinstance(cur, Apply)
+            if cur.graph not in self.scope:
+                raise _LoopMismatch(
+                    FallbackReason.FREE_VARIABLE,
+                    f"loop body references node {cur!r} outside the threaded "
+                    "environment",
+                )
+            if ready:
+                new_inputs = [self.env[i._id] for i in cur.inputs]
+                new = Apply(new_inputs, self.target, cur.debug_name)
+                new.abstract = _widen_abstract(cur.abstract)
+                self.env[cur._id] = new
+            else:
+                stack.append((cur, True))
+                for i in cur.inputs:
+                    if i._id not in self.env:
+                        stack.append((i, False))
+        return self.env[node._id]
+
+    def _clone_closure(self, g: Graph) -> Graph:
+        cloner = GraphCloner(g, relabel="")
+        for n in self._captured(g):
+            cloner.node_map[n._id] = self.env[n._id]
+        return cloner.clone()
+
+
+#: trace budget: loop-block entries per site (guards against irreducible
+#: control flow — e.g. a nested loop whose family reaches this header)
+_MAX_TRACE = 200
+
+
+class _LoopBuilder:
+    """Match one entry call of a tail-recursive family and build the
+    closed cond/step/exit graphs for the loop primitives."""
+
+    def __init__(self, site: Apply) -> None:
+        self.site = site
+        self.h: Graph = site.fn.value
+        self.fam = _loop_family(self.h)
+        self.k = len(self.h.parameters)
+        self.fvs = free_variables(self.h)
+        self._steps = 0
+
+    def build(self) -> tuple[Graph, Graph, Graph]:
+        h = self.h
+        if len(self.site.args) != self.k:
+            raise _LoopMismatch(FallbackReason.RECURSION, "entry call arity mismatch")
+        ret = h.return_
+        if not (isinstance(ret, Apply) and len(ret.inputs) == 1):
+            raise _LoopMismatch(
+                FallbackReason.RECURSION,
+                "header does not end in an applied switch",
+            )
+        sel = ret.inputs[0]
+        if not (is_apply(sel, P.switch) and len(sel.args) == 3):
+            raise _LoopMismatch(
+                FallbackReason.RECURSION,
+                "header does not end in an applied switch",
+            )
+        cond_node, tb, fb = sel.args
+        if not (is_constant_graph(tb) and is_constant_graph(fb)):
+            raise _LoopMismatch(
+                FallbackReason.RECURSION, "switch branches are not graph constants"
+            )
+        t_loops = tb.value in self.fam
+        f_loops = fb.value in self.fam
+        if t_loops == f_loops:
+            raise _LoopMismatch(
+                FallbackReason.RECURSION,
+                "both switch branches re-enter the loop"
+                if t_loops
+                else "no switch branch re-enters the loop",
+            )
+        loop_g, exit_g = (tb.value, fb.value) if t_loops else (fb.value, tb.value)
+        negate = not t_loops
+        if loop_g.parameters or exit_g.parameters:
+            raise _LoopMismatch(
+                FallbackReason.RECURSION, "switch branch takes parameters"
+            )
+        for p in h.parameters:
+            if not _carryable(p.abstract):
+                raise _LoopMismatch(
+                    FallbackReason.NON_ARRAY,
+                    f"loop carry {p.debug_name or p!r} is not an array value "
+                    f"({p.abstract!r})",
+                )
+
+        cg = self._fresh("loop_cond")
+        c = _CloneEnv(cg, self.fam, self._base_env(cg)).clone(cond_node)
+        if negate:
+            neg = cg.apply(P.bool_not, c)
+            neg.abstract = AScalar("bool")
+            c = neg
+        cg.set_return(c)
+
+        sg = self._fresh("loop_step")
+        exprs = self._trace(sg, self._base_env(sg), loop_g)
+        mt = sg.apply(P.make_tuple, *exprs)
+        mt.abstract = ATuple(
+            tuple(
+                e.abstract if e.abstract is not None else _widen_abstract(p.abstract)
+                for e, p in zip(exprs, self.h.parameters)
+            )
+        )
+        sg.set_return(mt)
+
+        eg = self._fresh("loop_exit")
+        eg.set_return(
+            _CloneEnv(
+                eg, self.fam, self._base_env(eg), scope=self.fam | {exit_g}
+            ).clone(exit_g.return_)
+        )
+        return cg, sg, eg
+
+    def _fresh(self, tag: str) -> Graph:
+        g = Graph(f"{self.h.name}:{tag}")
+        for p in self.h.parameters:
+            np_ = g.add_parameter(p.debug_name)
+            np_.abstract = _widen_abstract(p.abstract)
+        for j, v in enumerate(self.fvs):
+            np_ = g.add_parameter(v.debug_name or f"fv{j}")
+            np_.abstract = _widen_abstract(v.abstract)
+        return g
+
+    def _base_env(self, g: Graph) -> dict[int, Node]:
+        env: dict[int, Node] = {}
+        for p, np_ in zip(self.h.parameters, g.parameters[: self.k]):
+            env[p._id] = np_
+        for v, np_ in zip(self.fvs, g.parameters[self.k:]):
+            env[v._id] = np_
+        return env
+
+    def _trace(self, target: Graph, env: dict[int, Node], g: Graph) -> list[Node]:
+        """Symbolically execute loop block ``g`` down to the back-edge,
+        returning the k cloned next-carry expressions.  Handles chains of
+        argument-carrying tail calls (the for-loop ``incr`` shim, if/else
+        rejoin blocks) and switch diamonds whose branches both loop."""
+        self._steps += 1
+        if self._steps > _MAX_TRACE:
+            raise _LoopMismatch(
+                FallbackReason.RECURSION,
+                "loop control flow too complex (trace budget exceeded — "
+                "nested or irreducible recursion)",
+            )
+        ret = g.return_
+        if not isinstance(ret, Apply):
+            raise _LoopMismatch(
+                FallbackReason.RECURSION, f"loop block {g.name!r} returns a non-call"
+            )
+        ce = _CloneEnv(target, self.fam, env)
+        fn = ret.inputs[0]
+        if is_constant_graph(fn):
+            callee = fn.value
+            if callee is self.h:
+                if len(ret.args) != self.k:
+                    raise _LoopMismatch(
+                        FallbackReason.RECURSION, "back-edge arity mismatch"
+                    )
+                return [ce.clone(a) for a in ret.args]
+            if callee in self.fam:
+                if len(ret.args) != len(callee.parameters):
+                    raise _LoopMismatch(
+                        FallbackReason.RECURSION, "tail-call arity mismatch"
+                    )
+                env2 = dict(env)
+                for p, a in zip(callee.parameters, [ce.clone(a) for a in ret.args]):
+                    env2[p._id] = a
+                return self._trace(target, env2, callee)
+            raise _LoopMismatch(
+                FallbackReason.RECURSION,
+                f"loop body exits through {callee.name!r} "
+                "(break-style control flow)",
+            )
+        if (
+            isinstance(fn, Apply)
+            and is_apply(fn, P.switch)
+            and len(fn.args) == 3
+            and len(ret.args) == 0
+        ):
+            c, t, f = fn.args
+            if not (is_constant_graph(t) and is_constant_graph(f)):
+                raise _LoopMismatch(
+                    FallbackReason.RECURSION, "switch branches are not graph constants"
+                )
+            tg, fg = t.value, f.value
+            if tg not in self.fam or fg not in self.fam:
+                raise _LoopMismatch(
+                    FallbackReason.RECURSION,
+                    "conditional exit from the loop body (break-style control flow)",
+                )
+            if tg.parameters or fg.parameters:
+                raise _LoopMismatch(
+                    FallbackReason.RECURSION, "switch branch takes parameters"
+                )
+            cnode = ce.clone(c)
+            ta = self._trace(target, dict(env), tg)
+            fa = self._trace(target, dict(env), fg)
+            out: list[Node] = []
+            for i, (x, y) in enumerate(zip(ta, fa)):
+                s = target.apply(P.switch, cnode, x, y)
+                s.abstract = _widen_abstract(self.h.parameters[i].abstract)
+                out.append(s)
+            return out
+        raise _LoopMismatch(
+            FallbackReason.RECURSION,
+            f"unrecognized loop-block return in {g.name!r}",
+        )
+
+
+def _static_int(node: Node, site: Apply, cg: Graph, k: int) -> int | None:
+    """Resolve a cond/step operand to a static int: a literal constant, or
+    a loop parameter whose binding at the entry site is statically known."""
+    if isinstance(node, Constant):
+        v = node.value
+        return v if isinstance(v, int) and not isinstance(v, bool) else None
+    if isinstance(node, Parameter) and node.graph is cg:
+        j = cg.parameters.index(node)
+        init = site.args[j] if j < k else None
+        if init is None:
+            return None
+        if isinstance(init, Constant):
+            v = init.value
+            return v if isinstance(v, int) and not isinstance(v, bool) else None
+        ab = init.abstract
+        if isinstance(ab, AScalar) and ab.kind == "int" and ab.known():
+            return int(ab.value)
+    return None
+
+
+def _static_trip_count(site: Apply, cg: Graph, sg: Graph, k: int) -> int | None:
+    """Trip count when the loop is an affine counting loop with static
+    bounds (``for i in range(...)``): cond ``lt/gt(i, stop)``, step
+    ``i + const``, static init — the scan-shaped case."""
+    ret = cg.return_
+    if not isinstance(ret, Apply) or len(ret.args) != 2:
+        return None
+    if is_apply(ret, P.lt):
+        ascending = True
+    elif is_apply(ret, P.gt):
+        ascending = False
+    else:
+        return None
+    iv, stop_n = ret.args
+    if not (isinstance(iv, Parameter) and iv.graph is cg):
+        return None
+    idx = cg.parameters.index(iv)
+    if idx >= k:
+        return None  # comparing a loop invariant: not a counting loop
+    mt = sg.return_
+    if not is_apply(mt, P.make_tuple) or idx >= len(mt.args):
+        return None
+    if isinstance(stop_n, Parameter) and stop_n.graph is cg:
+        # a carried stop bound is only static if the step keeps it
+        # LOOP-INVARIANT (identity update) — `while i < n: ...; n = n - 1`
+        # has a static init but a moving bound and must stay a while_loop
+        j = cg.parameters.index(stop_n)
+        if j < k:
+            upd_j = mt.args[j] if j < len(mt.args) else None
+            if not (
+                isinstance(upd_j, Parameter)
+                and upd_j.graph is sg
+                and sg.parameters.index(upd_j) == j
+            ):
+                return None
+    stop = _static_int(stop_n, site, cg, k)
+    start = _static_int(cg.parameters[idx], site, cg, k)
+    if stop is None or start is None:
+        return None
+    upd = mt.args[idx]
+    if not (is_apply(upd, P.add) and len(upd.args) == 2):
+        return None
+    step = None
+    for a, b in ((upd.args[0], upd.args[1]), (upd.args[1], upd.args[0])):
+        if (
+            isinstance(a, Parameter)
+            and a.graph is sg
+            and sg.parameters.index(a) == idx
+            and isinstance(b, Constant)
+            and isinstance(b.value, int)
+            and not isinstance(b.value, bool)
+        ):
+            step = b.value
+            break
+    if step is None or step == 0:
+        return None
+    if ascending:
+        if step < 0:
+            return None
+        return max(0, math.ceil((stop - start) / step))
+    if step > 0:
+        return None
+    return max(0, math.ceil((start - stop) / (-step)))
+
+
+def _find_site(root: Graph, failed: set[int]) -> Apply | None:
+    """First live entry call of a recursive header (a call from *outside*
+    the header's own family — back-edges don't count)."""
+    for n in dfs_nodes(root.return_):
+        if not (isinstance(n, Apply) and is_constant_graph(n.fn)):
+            continue
+        h = n.fn.value
+        if h._id in failed or h.return_ is None or not _reaches_itself(h):
+            continue
+        if n.graph in _loop_family(h):
+            continue  # interior back-edge, not an entry
+        return n
+    return None
+
+
+def lower_loops(root: Graph, stats: Any = None) -> LoopReport:
+    """Rewrite every recognizable tail-recursive family below ``root``
+    into ``while_loop`` / ``scan_loop`` applies (in place).  One site is
+    rewritten per scan so later sites see the updated graph; headers that
+    fail to match are recorded once in the report and skipped."""
+    report = LoopReport()
+    failed: set[int] = set()
+    for _ in range(64):
+        site = _find_site(root, failed)
+        if site is None:
+            break
+        h = site.fn.value
+        try:
+            builder = _LoopBuilder(site)
+            cg, sg, eg = builder.build()
+        except _LoopMismatch as e:
+            failed.add(h._id)
+            report.reasons.append(
+                FallbackReason(e.kind, f"{h.name}: {e.detail}")
+            )
+            continue
+        caller = site.graph
+        fv_nodes = list(builder.fvs)
+        n_iters = _static_trip_count(site, cg, sg, builder.k)
+        if n_iters is not None:
+            new = caller.apply(
+                P.scan_loop,
+                Constant(sg, sg.name),
+                Constant(eg, eg.name),
+                n_iters,
+                builder.k,
+                *site.args,
+                *fv_nodes,
+                debug_name=f"scan_{h.name}",
+            )
+            report.scans += 1
+            if stats is not None:
+                stats.record_rule("lower_loop_scan")
+        else:
+            new = caller.apply(
+                P.while_loop,
+                Constant(cg, cg.name),
+                Constant(sg, sg.name),
+                Constant(eg, eg.name),
+                builder.k,
+                *site.args,
+                *fv_nodes,
+                debug_name=f"while_{h.name}",
+            )
+            if stats is not None:
+                stats.record_rule("lower_loop_while")
+        new.abstract = _widen_abstract(eg.return_.abstract)
+        _replace(root, site, new)
+        report.lowered += 1
+    return report

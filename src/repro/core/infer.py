@@ -650,14 +650,28 @@ def _r_dtype_of(inf: Inferencer, args: tuple, frame) -> AbstractValue:
     raise InferenceError(f"dtype_of {x!r}")
 
 
+def _contains_fn_or_env(a: AbstractValue) -> bool:
+    if isinstance(a, (AFunction, AEnv)):
+        return True
+    if isinstance(a, ATuple):
+        return any(_contains_fn_or_env(e) for e in a.elements)
+    return False
+
+
 def _r_switch(inf: Inferencer, args: tuple, frame) -> AbstractValue:
     c, t, f = args
     if isinstance(c, AScalar) and c.known():
         return t if c.value else f
     if isinstance(c, AScalar):
         return join(t, f)
-    if isinstance(c, AArray):  # elementwise select
-        out = jax.eval_shape(
+    if isinstance(c, AArray):
+        if _contains_fn_or_env(t) or _contains_fn_or_env(f):
+            # selecting between closures on a traced (0-d array) condition
+            # — e.g. a loop header whose bound is an array: the branches
+            # cannot be materialized for jnp.where, but the result is just
+            # their join (both control paths stay live for inference)
+            return join(t, f)
+        out = jax.eval_shape(  # elementwise select
             lambda cc, tt, ff: jnp.where(cc, tt, ff),
             _materialize(c),
             _materialize(t),
@@ -749,6 +763,32 @@ def _r_shard_slice(inf: Inferencer, args: tuple, frame) -> AbstractValue:
     return AArray(x.dtype, tuple(shp))
 
 
+def _loop_exit_closure(exit_ab: AbstractValue) -> AClosureSpec:
+    if (
+        isinstance(exit_ab, AFunction)
+        and len(exit_ab.options) == 1
+        and isinstance(exit_ab.options[0], AClosureSpec)
+    ):
+        return exit_ab.options[0]
+    raise InferenceError(f"loop exit must be a single closed graph, got {exit_ab!r}")
+
+
+def _r_while_loop(inf: Inferencer, args: tuple, frame) -> AbstractValue:
+    # (cond, step, exit, n_carry, *carry_and_extras).  The carry is
+    # type-stable but its VALUES iterate — widen before applying the exit
+    # graph so constant propagation can never fold across the back-edge.
+    exit_spec = _loop_exit_closure(args[2])
+    rest = tuple(_widen(a) for a in args[4:])
+    return inf._call_closure(exit_spec, rest)
+
+
+def _r_scan_loop(inf: Inferencer, args: tuple, frame) -> AbstractValue:
+    # (step, exit, length, n_carry, *carry_and_extras)
+    exit_spec = _loop_exit_closure(args[1])
+    rest = tuple(_widen(a) for a in args[4:])
+    return inf._call_closure(exit_spec, rest)
+
+
 def _r_cast(inf: Inferencer, args: tuple, frame) -> AbstractValue:
     x, dt = args
     if isinstance(dt, AScalar) and dt.known():
@@ -780,6 +820,9 @@ _STRUCTURAL_RULES = {
     "pmax_axes": _r_psum_axes,
     "all_gather_axes": _r_all_gather_axes,
     "shard_slice": _r_shard_slice,
+    # structured loops (repro.core.closure): carry-widened exit application
+    "while_loop": _r_while_loop,
+    "scan_loop": _r_scan_loop,
 }
 
 

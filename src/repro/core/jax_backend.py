@@ -11,18 +11,23 @@ straight-line program.  Two routes produce that program:
   *zero* interpreter machinery in the way, and the same callable can also
   run eagerly (no XLA compile on the critical path of the first call).
 * **VM trace** (the fallback): when residual graph values survive
-  optimization — recursion, higher-order calls, closures selected by
-  ``switch`` on traced values — the reference VM evaluates the graph and
-  ``jax.jit`` traces *through* the interpreter.  Interpreter overhead is
-  paid once at trace time (contrast with the OO baseline, which pays it
-  per call).
+  optimization *and* closure elimination — non-tail recursion, nested
+  loops, closures selected by ``switch`` on traced values — the reference
+  VM evaluates the graph and ``jax.jit`` traces *through* the
+  interpreter.  Interpreter overhead is paid once at trace time (contrast
+  with the OO baseline, which pays it per call).
 
 ``compile_graph`` picks automatically: lowering when
 ``lowering_blockers(graph)`` is empty, VM otherwise.
 
-Data-dependent control flow: conditions that stay concrete (python ints)
-unroll during tracing, exactly like the loop-specialization the inferencer
-performs; genuinely traced-value recursion must use the VM backend.
+Data-dependent control flow: the closure-elimination tier
+(``repro.core.closure``) rewrites tail-recursive families — parsed
+``while``/``for`` loops, defunctionalized higher-order recursion — into
+``while_loop``/``scan_loop`` primitive applies, which the lowering emits
+as ``jax.lax.while_loop``/``jax.lax.scan`` with recursively-lowered
+cond/step/exit callables: traced-value loop bounds compile instead of
+punting to the VM.  See the fallback matrix in ``docs/pipeline.md`` for
+the shapes that genuinely still need the interpreter.
 """
 
 from __future__ import annotations

@@ -35,19 +35,23 @@ from __future__ import annotations
 import math
 from typing import Any, Callable
 
+from .closure import analyze_blockers
 from .ir import (
     Apply,
     Constant,
     Graph,
     Node,
-    Parameter,
-    dfs_nodes,
-    is_constant_graph,
     toposort,
 )
-from .primitives import Primitive
+from .primitives import LOOP_GRAPH_ARGS, Primitive
 
-__all__ = ["LoweringError", "lowering_blockers", "lower_graph", "try_lower"]
+__all__ = [
+    "LoweringError",
+    "analyze_blockers",
+    "lowering_blockers",
+    "lower_graph",
+    "try_lower",
+]
 
 
 class LoweringError(Exception):
@@ -57,33 +61,13 @@ class LoweringError(Exception):
 def lowering_blockers(graph: Graph) -> list[str]:
     """Reasons ``graph`` cannot be lowered (empty list: lowerable).
 
-    Messages are de-duplicated (first occurrence wins): a residually
-    recursive family repeats the same graph-valued constant at every call
-    site, and callers log/assert on the list — N copies of one message
-    carry no extra information."""
-    if graph.return_ is None:
-        return ["graph has no return node"]
-    blockers: dict[str, None] = {}
-    for n in dfs_nodes(graph.return_):
-        if is_constant_graph(n):
-            blockers.setdefault(
-                f"graph-valued constant {n.value.name!r} survived optimization "
-                "(residual recursion or closure value)"
-            )
-        elif isinstance(n, Apply):
-            if n.graph is not graph:
-                blockers.setdefault(
-                    f"free variable: apply node owned by nested graph "
-                    f"{n.graph and n.graph.name!r}"
-                )
-            fn = n.fn
-            if not (isinstance(fn, Constant) and isinstance(fn.value, Primitive)):
-                blockers.setdefault(
-                    f"non-primitive callee {fn!r} (higher-order or graph call)"
-                )
-        elif isinstance(n, Parameter) and n.graph is not graph:
-            blockers.setdefault(f"free parameter {n!r} of graph {n.graph.name!r}")
-    return list(blockers)
+    The string form of :func:`repro.core.closure.analyze_blockers` — each
+    message is prefixed with its structured kind (``[recursion-shape]``,
+    ``[higher-order-residual]``, …).  De-duplicated (first occurrence
+    wins): a residually recursive family repeats the same graph-valued
+    constant at every call site, and callers log/assert on the list — N
+    copies of one message carry no extra information."""
+    return [str(r) for r in analyze_blockers(graph)]
 
 
 def _literal(value: Any) -> str | None:
@@ -201,6 +185,21 @@ def lower_graph(graph: Graph, *, fuse: bool = False) -> Callable:
             )
             continue
         prim = n.fn.value
+        n_sub = LOOP_GRAPH_ARGS.get(prim.name)
+        if n_sub is not None:
+            # structured loop: the leading args are closed first-order
+            # graphs — lower each recursively and bind the callables, so
+            # the loop body pays zero interpreter overhead too
+            subs = []
+            for sub in n.args[:n_sub]:
+                assert isinstance(sub, Constant) and isinstance(sub.value, Graph)
+                sname = f"_loop_{sub.value.name.split(':')[-1]}_{len(env)}"
+                env[sname] = lower_graph(sub.value)
+                subs.append(sname)
+            rest = [ref(a) for a in n.args[n_sub:]]
+            args = ", ".join(subs + rest)
+            lines.append(f"    {name} = {bind_prim(prim)}({args})  # {prim.name}")
+            continue
         args = ", ".join(ref(a) for a in n.args)
         lines.append(f"    {name} = {bind_prim(prim)}({args})  # {prim.name}")
     lines.append(f"    return {ref(graph.return_)}")

@@ -58,9 +58,9 @@ from .ir import (
     is_apply,
     is_constant_graph,
 )
-from .infer import AArray, AScalar, ATuple  # noqa: F401 (ATuple used in folding)
+from .infer import AArray, AFunction, AScalar, ATuple  # noqa: F401 (ATuple used in folding)
 from .primitives import COLLECTIVE_NAMES, Primitive
-from .values import EnvInstance
+from .values import EnvInstance, newenv
 
 __all__ = ["optimize", "reachable_nodes", "count_nodes", "OptStats"]
 
@@ -87,7 +87,10 @@ class OptStats:
     * ``verify_sweep_hits`` — rewrites found only by the post-drain
       verification sweep (should stay 0: nonzero means the enqueue locality
       missed a rule dependency and the engine fell back to sweeping),
-    * ``iterations`` — outer inline+rules iterations until fixpoint.
+    * ``iterations`` — outer inline+rules iterations until fixpoint,
+    * ``fallback_reasons`` — structured reasons the final pipeline graph
+      still cannot lower (``FallbackReason.as_dict()`` entries, filled by
+      ``api.compile_pipeline``; empty means the graph compiles VM-free).
     """
 
     __slots__ = (
@@ -97,6 +100,7 @@ class OptStats:
         "worklist_pops",
         "verify_sweep_hits",
         "iterations",
+        "fallback_reasons",
     )
 
     def __init__(self) -> None:
@@ -106,6 +110,7 @@ class OptStats:
         self.worklist_pops = 0
         self.verify_sweep_hits = 0
         self.iterations = 0
+        self.fallback_reasons: list[dict] = []
 
     def record_rule(self, name: str) -> None:
         self.rule_hits[name] = self.rule_hits.get(name, 0) + 1
@@ -123,6 +128,7 @@ class OptStats:
             "worklist_pops": self.worklist_pops,
             "verify_sweep_hits": self.verify_sweep_hits,
             "iterations": self.iterations,
+            "fallback_reasons": list(self.fallback_reasons),
         }
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
@@ -180,6 +186,12 @@ class _Rewriter:
             # inputs (make_tuple/setitem/cast chains), so refresh two levels
             # of users; and the replaced node's inputs lost a user.
             push(new)
+            if isinstance(new, Apply):
+                # distribute-style rules build fresh child applies under the
+                # replacement (zeros_like/gadd over tuple elements) — each
+                # child may itself match a rule, so it must be seeded
+                for inp in new.inputs:
+                    push(inp)
             for user, _ in list(new.users):
                 push(user)
                 for uu, _ in list(user.users):
@@ -406,10 +418,42 @@ class _Rewriter:
                 if isinstance(z, Constant) and (
                     z.value is None
                     or (isinstance(z.value, (int, float)) and z.value == 0)
+                    or (isinstance(z.value, EnvInstance) and len(z.value) == 0)
                 ):
                     return a[j], "gadd_zero"
-                if is_apply(z, P.zeros_like):
+                if is_apply(z, P.zeros_like) and _gadd_zero_drop_safe(z, a[j]):
                     return a[j], "gadd_zero"
+            # distribute over tuples: gadd is elementwise on same-length
+            # tuples (values.gadd_values), so pairing the elements lets the
+            # per-element zero/closure rules fire where a whole-tuple match
+            # could not (the closure-elimination tier's workhorse)
+            lhs, rhs = a
+            le = _tuple_elements(lhs)
+            re_ = _tuple_elements(rhs)
+            if le is not None and re_ is not None and len(le) == len(re_):
+                g = n.graph
+                items = [g.apply(P.gadd, x, y) for x, y in zip(le, re_)]
+                return g.apply(P.make_tuple, *items), "gadd_tuple_distribute"
+
+        # closure elimination (paper §3.2 / §4.3): the sensitivity of a
+        # function value is an (empty) gradient environment, and zeros of a
+        # tuple distribute — these erase the residual ◀-closure plumbing
+        # from reverse-over-reverse adjoints so they lower without the VM
+        if p is P.zeros_like and len(a) == 1:
+            z = a[0]
+            if isinstance(z, Constant) and isinstance(z.value, (Graph, Primitive)):
+                return Constant(newenv), "zeros_of_function"
+            if isinstance(z, Constant) and isinstance(z.value, EnvInstance):
+                return Constant(newenv), "zeros_of_function"
+            if isinstance(z.abstract, AFunction):
+                return Constant(newenv), "zeros_of_function"
+            if is_apply(z, P.zeros_like):
+                return z, "zeros_idempotent"
+            elts = _tuple_elements(z)
+            if elts is not None:
+                g = n.graph
+                items = [g.apply(P.zeros_like, x) for x in elts]
+                return g.apply(P.make_tuple, *items), "zeros_tuple_distribute"
 
         # algebraic: x+0, x-0, x*1, x/1, --x  (scalar literal identities only:
         # they cannot change the broadcast shape of the result)
@@ -477,6 +521,52 @@ class _Rewriter:
             if hit is not None:
                 return hit
         return None
+
+
+def _gadd_zero_drop_safe(z: Node, other: Node) -> bool:
+    """Dropping the zero operand of a gadd is only shape-preserving when
+    the zeros cannot broadcast-extend the other side: ``gadd(scalar,
+    zeros_like(arr))`` has the ARRAY's shape, so erasing the zeros would
+    change the result.  Array-shaped zeros may go only when the other
+    operand provably has (at least) the same shape; with no inferred
+    abstracts we keep the legacy permissive behavior (the structural pass
+    runs before inference, and pre-seed-fix graphs never mixed shapes)."""
+    za = z.abstract
+    if za is None or isinstance(za, (AScalar, ATuple)):
+        return True
+    if isinstance(za, AArray):
+        oa = other.abstract
+        if isinstance(oa, AArray):
+            try:
+                return tuple(np.broadcast_shapes(za.shape, oa.shape)) == tuple(oa.shape)
+            except ValueError:
+                return False
+        return False  # other side scalar/unknown: zeros would extend it
+    return True  # env/function zeros: structural, never shape-bearing
+
+
+def _tuple_elements(node: Node) -> list[Node] | None:
+    """Element nodes of a syntactic tuple: a ``make_tuple`` apply, a
+    tuple-valued constant (elements wrapped as fresh Constants), or a
+    constant-index ``tuple_setitem`` over one of those (the shape
+    ``_bprop_tuple_getitem`` emits — resolved so gadd/zeros distribution
+    reaches the real elements)."""
+    if is_apply(node, P.make_tuple):
+        return list(node.args)
+    if isinstance(node, Constant) and isinstance(node.value, tuple):
+        return [Constant(v) for v in node.value]
+    if (
+        is_apply(node, P.tuple_setitem)
+        and len(node.args) == 3
+        and isinstance(node.args[1], Constant)
+        and isinstance(node.args[1].value, int)
+    ):
+        base = _tuple_elements(node.args[0])
+        idx = node.args[1].value
+        if base is not None and 0 <= idx < len(base):
+            base[idx] = node.args[2]
+            return base
+    return None
 
 
 _NO_VALUE = object()
@@ -697,6 +787,7 @@ def optimize(
     engine: str = "worklist",
     stats: OptStats | None = None,
     patterns: bool = False,
+    defunctionalize: bool = True,
 ) -> Graph:
     """Optimize ``graph`` in place (and return it).
 
@@ -708,12 +799,25 @@ def optimize(
     kernel-shaped subgraphs — rmsnorm, the softmax-attention core — and
     rewrites them to the hand-written Pallas primitives registered in
     ``repro.kernels.ops`` (shape-directed: requires inferred abstracts).
+    ``defunctionalize=True`` monomorphizes calls of *recursive* graphs on
+    graph/primitive-valued constant arguments (``repro.core.closure``):
+    the specialized clone's interior calls become first-order, which the
+    next inline wave resolves — higher-order recursion reduces to the
+    loop shapes ``lower_loops`` compiles.
     """
     rw = _Rewriter(graph, max_inline_size, stats, patterns=patterns)
+    spec_memo: dict = {}
     for _ in range(max_iterations):
         changed = False
         if inline:
             changed |= rw.inline_pass()
+        if inline and defunctionalize:
+            from .closure import specialize_recursive_calls
+
+            if specialize_recursive_calls(graph, stats=rw.stats, memo=spec_memo):
+                # whole families were cloned and rewired: rebuild the index
+                rw.fam = FamilyIndex(graph)
+                changed = True
         changed |= rw.rules_pass(engine)
         rw.stats.iterations += 1
         if not changed:

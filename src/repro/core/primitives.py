@@ -311,6 +311,83 @@ COLLECTIVE_NAMES = frozenset(
 )
 
 
+# ---------------------------------------------------------------------------
+# Structured loops (closure-elimination tier).  ``repro.core.closure``
+# rewrites residual tail-recursive families (parsed while/for loops) into
+# these primitives AFTER AD and optimization, so — like the collectives —
+# they carry no backpropagators: differentiating through one is a pipeline
+# ordering bug and must fail loudly.  ``cond``/``step``/``exit`` arrive as
+# *closed first-order graphs* (bound as lowered callables on the direct
+# path, as Closures on the VM path); the trailing arguments split at
+# ``n_carry`` into the loop carry (the header parameters) and the
+# loop-invariant closure environment (threaded unchanged to every call).
+# ---------------------------------------------------------------------------
+
+
+def _call_loop_fn(f: Any, args: tuple) -> Any:
+    """Call a loop sub-function: a lowered Python callable (direct path)
+    or a Graph/Closure evaluated by the reference VM (fallback path)."""
+    from .ir import Graph
+    from .values import Closure
+
+    if isinstance(f, (Graph, Closure)):
+        from .vm import VM
+
+        return VM().call(f, tuple(args))
+    return f(*args)
+
+
+def _loop_retype_carry(step_f: Callable, carry: tuple) -> tuple:
+    """Promote the init carry to the step's output types.  jax requires the
+    while/scan carry to be type-stable; Python-literal inits (weak types)
+    routinely disagree with the step's strong jnp results, and one
+    promotion round resolves every case our rewriter can produce."""
+    spec = jax.eval_shape(step_f, carry)
+    return jax.tree_util.tree_map(lambda i, s: jnp.asarray(i, s.dtype), carry, spec)
+
+
+def _impl_while_loop(cond, step, exit_, n_carry, *args):
+    carry = tuple(args[:n_carry])
+    extras = tuple(args[n_carry:])
+
+    def cond_f(c):
+        return _call_loop_fn(cond, (*c, *extras))
+
+    def step_f(c):
+        return tuple(_call_loop_fn(step, (*c, *extras)))
+
+    try:
+        out = jax.lax.while_loop(cond_f, step_f, carry)
+    except TypeError:
+        out = jax.lax.while_loop(cond_f, step_f, _loop_retype_carry(step_f, carry))
+    return _call_loop_fn(exit_, (*tuple(out), *extras))
+
+
+def _impl_scan_loop(step, exit_, length, n_carry, *args):
+    carry = tuple(args[:n_carry])
+    extras = tuple(args[n_carry:])
+
+    def step_f(c):
+        return tuple(_call_loop_fn(step, (*c, *extras)))
+
+    def body(c, _):
+        return step_f(c), None
+
+    try:
+        out, _ = jax.lax.scan(body, carry, None, length=int(length))
+    except TypeError:
+        out, _ = jax.lax.scan(
+            body, _loop_retype_carry(step_f, carry), None, length=int(length)
+        )
+    return _call_loop_fn(exit_, (*tuple(out), *extras))
+
+
+#: loop primitives and, per name, how many leading arguments are
+#: graph-valued sub-functions (legal graph constants for the lowerer)
+LOOP_GRAPH_ARGS: dict[str, int] = {"while_loop": 3, "scan_loop": 2}
+LOOP_NAMES = frozenset(LOOP_GRAPH_ARGS)
+
+
 # ===========================================================================
 # Registration.  bprop functions are defined at the end of this module and
 # attached afterwards (they reference the prim globals below).
@@ -403,6 +480,10 @@ psum_axes = register_primitive("psum_axes", _impl_psum_axes)
 pmax_axes = register_primitive("pmax_axes", _impl_pmax_axes)
 all_gather_axes = register_primitive("all_gather_axes", _impl_all_gather_axes)
 shard_slice = register_primitive("shard_slice", _impl_shard_slice)
+
+# structured loops: bprop=None — inserted after AD (see repro.core.closure)
+while_loop = register_primitive("while_loop", _impl_while_loop, vararg=True)
+scan_loop = register_primitive("scan_loop", _impl_scan_loop, vararg=True)
 
 switch = register_primitive("switch", _impl_switch)
 stop_gradient = register_primitive("stop_gradient", _impl_stop_gradient)

@@ -305,6 +305,28 @@ class _Rules:
             raise SpmdError(f"tuple_getitem on non-tuple spec {t!r}")
         return _Res(t.elements[i], [None, None])
 
+    def _r_gadd(self, node, arg_specs, arg_abs, out_ab) -> _Res:
+        # gradient addition is elementwise on tuples (values.gadd_values);
+        # identically-sharded operands add shard-locally
+        a, b = arg_specs
+        if isinstance(a, _TSpec) or isinstance(b, _TSpec):
+            if a == b:
+                return _Res(a, [None, None])
+            raise SpmdError(f"gadd of differently-sharded tuples: {a!r} vs {b!r}")
+        return self._elementwise(node, arg_specs, arg_abs, out_ab)
+
+    def _r_tuple_setitem(self, node, arg_specs, arg_abs, out_ab) -> _Res:
+        # second-order adjoints update gradient tuples in place: the
+        # result keeps every element's spec, with slot i taking the new
+        # value's spec (no resharding required on any operand)
+        t, _i, v = arg_specs
+        i = _const_value(node.args[1])
+        if not isinstance(t, _TSpec):
+            raise SpmdError(f"tuple_setitem on non-tuple spec {t!r}")
+        elts = list(t.elements)
+        elts[i] = v
+        return _Res(_TSpec(tuple(elts)), [None, None, None])
+
     # -- linear algebra ---------------------------------------------------
     def _r_matmul(self, node, arg_specs, arg_abs, out_ab) -> _Res:
         la, ra = arg_abs

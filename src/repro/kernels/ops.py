@@ -20,6 +20,7 @@ and expose them to Myia as primitives" (§3, Myia's intended use case).
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 
@@ -38,8 +39,23 @@ __all__ = [
     "ssd_step",
 ]
 
-_MODE = "ref"
 _MODES = ("ref", "chunked", "pallas_interpret", "pallas")
+
+
+def _mode_from_env() -> str:
+    """Initial kernel mode from ``MYIA_KERNEL_MODE`` (the CI matrix axis:
+    the fast job runs ``ref``, the full job also ``pallas_interpret``).
+    Invalid values fail loudly — a typo'd matrix entry must not silently
+    green the ref path."""
+    mode = os.environ.get("MYIA_KERNEL_MODE", "ref")
+    if mode not in _MODES:
+        raise ValueError(
+            f"MYIA_KERNEL_MODE must be one of {_MODES}, got {mode!r}"
+        )
+    return mode
+
+
+_MODE = _mode_from_env()
 
 
 def set_kernel_mode(mode: str) -> None:
@@ -170,8 +186,6 @@ def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6, impl: str | None =
 def _ssd_scan_y(x, dt, A, B, C, impl):
     return _ssd_dispatch(x, dt, A, B, C, impl)[0]
 
-
-import os
 
 #: SSD chunk length: 128 keeps the (L,L) intra-chunk matmuls MXU-aligned;
 #: the bytes-vs-flops sweep (EXPERIMENTS.md §Perf) showed 64 within 0.3%
