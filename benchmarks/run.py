@@ -27,6 +27,7 @@ TRAJECTORY = {
     "fusion": "BENCH_fusion.json",
     "spmd": "BENCH_spmd.json",
     "higher_order": "BENCH_higher_order.json",
+    "serve": "BENCH_serve.json",
 }
 
 
@@ -47,6 +48,7 @@ def main(argv=None) -> int:
         bench_higher_order,
         bench_kernels,
         bench_opt_effectiveness,
+        bench_serve,
         bench_spmd,
     )
 
@@ -57,6 +59,7 @@ def main(argv=None) -> int:
         "fusion": lambda: bench_fusion.run(reps=10 if args.quick else 50),
         "spmd": lambda: bench_spmd.run(reps=10 if args.quick else 30),
         "higher_order": lambda: bench_higher_order.run(reps=10 if args.quick else 30),
+        "serve": bench_serve.run,
         "kernels": bench_kernels.run,
     }
     if args.quick and not args.only:

@@ -19,7 +19,12 @@ Guarded metrics (rows matched by workload/signature/mesh key):
   deterministic, any >tol increase is a real partitioner regression),
 * ``BENCH_spmd.json``      — ``launches_fused`` and the collective count
   ``n_psum`` + ``n_all_gather`` (a propagation regression shows up as
-  extra communication before it shows up on a wall clock).
+  extra communication before it shows up on a wall clock),
+* ``BENCH_serve.json``     — ``compilations`` / ``xla_compiles`` at the
+  bucket-derived floor (the serving runtime compiles per bucket, never
+  per generated length; deterministic, may only fall) and
+  ``cache_hit_rate`` (may only RISE: the warm row losing hits means the
+  AOT program cache key or serialization went unstable).
 
 Rows present only in the fresh file (new benchmarks) pass; rows present
 only at HEAD (removed benchmarks) fail — deleting a regressing benchmark
@@ -43,10 +48,13 @@ import os
 import subprocess
 import sys
 
-#: file -> (row-key fields, [(metric, absolute floor)]).
+#: file -> (row-key fields, [(metric, absolute floor[, direction])]).
+#: ``direction`` defaults to "lower" (lower is better); "higher" inverts
+#: the gate for metrics that may only RISE (cache hit rates).
 #: Floor 0.0 marks a DETERMINISTIC counter (launches, collectives, VM
-#: fallbacks): compared exactly — any increase fails, no relative
-#: tolerance.  The timing floors are calibrated to observed
+#: fallbacks, serve compilations): compared exactly — any move in the bad
+#: direction fails, no relative tolerance.  The timing floors are
+#: calibrated to observed
 #: run-to-run variance on loaded CI boxes (compile_call_ms swings
 #: ±15 ms at the ~25 ms scale; st_over_jax, a ratio of two µs-scale
 #: medians, was observed swinging 0.58↔1.53 across consecutive runs):
@@ -72,6 +80,17 @@ GUARDS: dict[str, tuple[tuple[str, ...], list[tuple[str, float]]]] = {
     "BENCH_higher_order.json": (
         ("workload",),
         [("vm_fallback", 0.0), ("steady_us", 150.0)],
+    ),
+    # serve: compilations pinned at the bucket-derived floor (cold row),
+    # warm row must keep xla_compiles at 0 and its hit rate may only rise
+    "BENCH_serve.json": (
+        ("workload",),
+        [
+            ("compilations", 0.0),
+            ("decode_compilations", 0.0),
+            ("xla_compiles", 0.0),
+            ("cache_hit_rate", 0.0, "higher"),
+        ],
     ),
 }
 
@@ -109,17 +128,26 @@ def check_file(fname: str, tol: float) -> list[str]:
         if frow is None:
             failures.append(f"{fname}: row {key} present at HEAD but missing now")
             continue
-        for metric, floor in metrics:
+        for spec in metrics:
+            metric, floor = spec[0], spec[1]
+            direction = spec[2] if len(spec) > 2 else "lower"
             old, new = brow.get(metric), frow.get(metric)
             if old is None or new is None:
                 continue
             old, new = float(old), float(new)
             if floor == 0.0:
                 # deterministic counter (launches, collectives, VM
-                # fallbacks): noise-free, so ANY increase is a real
-                # regression — no relative tolerance applies (a
-                # baseline of 4 must not green a move to 5)
-                if new > old:
+                # fallbacks, serve compilations / hit rates): noise-free,
+                # so ANY move in the bad direction is a real regression —
+                # no relative tolerance applies (a baseline of 4 must not
+                # green a move to 5)
+                if direction == "higher":
+                    if new < old:
+                        failures.append(
+                            f"{fname}: {metric} fell for {key}: {old:g} -> {new:g} "
+                            "(deterministic counter, may only rise)"
+                        )
+                elif new > old:
                     failures.append(
                         f"{fname}: {metric} rose for {key}: {old:g} -> {new:g} "
                         "(deterministic counter, exact gate)"

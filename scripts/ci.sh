@@ -18,6 +18,35 @@ python scripts/lint.py
 echo "== tier-1 tests (fast suite) =="
 python -m pytest -x -q -m "not slow"
 
+echo "== serve engine smoke (tmpdir AOT cache: cold run compiles, warm run hits) =="
+python - <<'PY'
+import tempfile
+import jax, numpy as np
+from repro.core.jax_backend import ProgramCache
+from repro.serve import ServeEngine, ServeLMDims, init_serve_params
+
+dims = ServeLMDims(vocab=48, d_model=8, d_hidden=16)
+params = init_serve_params(dims, jax.random.PRNGKey(0))
+with tempfile.TemporaryDirectory(prefix="ci-progcache-") as d:
+    outs = []
+    for leg in ("cold", "warm"):
+        cache = ProgramCache(d)
+        eng = ServeEngine(dims, params, n_slots=2, min_bucket=16, program_cache=cache)
+        rng = np.random.default_rng(0)
+        rids = [eng.submit(rng.integers(0, dims.vocab, n).tolist(), m)
+                for n, m in [(5, 6), (9, 4)]]
+        res = eng.run()
+        outs.append({r: res[r]["tokens"] for r in rids})
+        print(f"  {leg}: {cache.stats.as_dict()}")
+        if leg == "cold":
+            assert cache.stats.misses > 0 and cache.stats.puts > 0
+        else:
+            assert cache.stats.hits > 0, "warm run found no cached programs"
+            assert cache.stats.misses == 0 and cache.stats.xla_compiles == 0
+    assert outs[0] == outs[1], "warm serve diverged from cold serve"
+print("  serve smoke OK")
+PY
+
 if [ "${SKIP_SLOW:-0}" != "1" ]; then
   echo "== slow suite (multi-device subprocess corpus) =="
   python -m pytest -x -q -m slow

@@ -11,8 +11,20 @@ from .closure import FallbackReason, analyze_blockers, lower_loops  # noqa: F401
 from .fusion import Cluster, FusionPlan, partition_graph  # noqa: F401
 from .infer import InferenceError, infer  # noqa: F401
 from .ir import Apply, Constant, Graph, Node, Parameter, clone_graph  # noqa: F401
-from .jax_backend import compile_graph, compile_graph_spmd, trace_graph  # noqa: F401
+from .jax_backend import (  # noqa: F401
+    CacheStats,
+    ProgramCache,
+    compile_graph,
+    compile_graph_spmd,
+    trace_graph,
+)
 from .lowering import LoweringError, lower_graph, lowering_blockers, try_lower  # noqa: F401
+from .serialize import (  # noqa: F401
+    SerializeError,
+    deserialize_graph,
+    serialize_graph,
+    structural_hash,
+)
 from .spmd import SpmdError, SpmdPlan, propagate, shard_graph  # noqa: F401
 from .oo_tape import oo_grad, oo_value_and_grad  # noqa: F401
 from .opt import OptStats, count_nodes, optimize  # noqa: F401

@@ -136,6 +136,7 @@ class MyiaFunction:
         fuse: bool = False,
         patterns: bool = False,
         in_specs: tuple | None = None,
+        program_cache=None,
         name: str | None = None,
     ) -> None:
         if fn is None and graph is None:
@@ -144,6 +145,14 @@ class MyiaFunction:
         self._graph = graph
         self.backend = backend
         self.opt = opt
+        #: AOT tier: a :class:`repro.core.jax_backend.ProgramCache` makes
+        #: compiled specializations durable — lowered straight-line graphs
+        #: are compiled via ``jit(...).lower().compile()`` and persisted
+        #: (graph payload + serialized executable), so a later process
+        #: serving the same program skips XLA entirely.  Graphs that fall
+        #: back to the VM, or calls with non-array statics, silently use
+        #: the ordinary tiers.
+        self.program_cache = program_cache
         #: fusion tier: cluster the optimized graph and execute regions as
         #: generated Pallas kernels (see docs/fusion.md)
         self.fuse = fuse
@@ -219,15 +228,11 @@ class MyiaFunction:
             mode = None
         mesh = self._active_mesh()
         # key by shape AND device identity: a same-shape mesh over different
-        # devices must not reuse a runner closed over the old mesh
-        meshkey = (
-            None
-            if mesh is None
-            else (
-                tuple(sorted(mesh.shape.items())),
-                tuple(d.id for d in mesh.devices.flat),
-            )
-        )
+        # devices must not reuse a runner closed over the old mesh (same
+        # identity rule the AOT cache key uses)
+        from .jax_backend import mesh_descriptor
+
+        meshkey = mesh_descriptor(mesh)
         key = (self.backend, self.fuse, self.patterns, mode, meshkey, self._sigkey(args))
         hit = self._specializations.get(key)
         if hit is not None:
@@ -269,6 +274,46 @@ class MyiaFunction:
         dyn_idx = [i for i, a in enumerate(example_args) if is_array_like(a)]
         static = {i: a for i, a in enumerate(example_args) if i not in set(dyn_idx)}
         lowered = try_lower(g, fuse=self.fuse)
+
+        if (
+            self.program_cache is not None
+            and lowered is not None
+            and len(dyn_idx) == len(example_args)
+            and not any(isinstance(a, jax.core.Tracer) for a in example_args)
+        ):
+            # (tracer args mean we're specializing under an outer jit trace
+            # — an AOT executable cannot be invoked there; use the jit tier)
+            # AOT tier: durable compiled artifact, answered from the
+            # persistent cache when this program was compiled before (by
+            # this process or any earlier one)
+            from .serialize import SerializeError
+
+            try:
+                aot = self.program_cache.load_or_compile(
+                    g, example_args, fuse=self.fuse, lowered_fn=lowered
+                )
+            except SerializeError:
+                pass  # not durable (exotic constants): ordinary tiers
+            else:
+                # the specialization key cannot tell a concrete array from
+                # a same-shaped tracer, so this runner may later be handed
+                # tracer args (the MyiaFunction called under an outer
+                # jit/grad) — an AOT executable rejects those; route them
+                # to a lazily-built ordinary jit of the same lowered fn
+                state: dict[str, Any] = {}
+
+                def runner(*args):
+                    if any(isinstance(a, jax.core.Tracer) for a in args):
+                        jitted = state.get("jit")
+                        if jitted is None:
+                            jitted = state["jit"] = jax.jit(lowered)
+                        return jitted(*args)
+                    return aot(*args)
+
+                runner.lowered = True
+                runner.aot = True
+                runner.cache_key = aot.cache_key
+                return runner
 
         def assemble(arrs) -> tuple:
             full: list[Any] = [None] * (len(arrs) + len(static))
@@ -348,6 +393,7 @@ def myia(
     fuse: bool = False,
     patterns: bool = False,
     in_specs: tuple | None = None,
+    program_cache=None,
 ):
     """Decorator: compile ``fn`` (pure Python subset) through the pipeline.
 
@@ -361,11 +407,17 @@ def myia(
     under an active concrete mesh context the optimized+fused graph is
     partitioned per-shard and executed under ``shard_map``; with no mesh
     active the single-device tiers run unchanged (see docs/pipeline.md).
+
+    ``program_cache`` (a :class:`repro.core.jax_backend.ProgramCache`)
+    arms the AOT tier: all-array specializations of lowerable graphs are
+    compiled ahead of time and persisted, so a warm process reloads the
+    XLA executable instead of recompiling (see docs/serving.md).
     """
 
     def wrap(f: Callable) -> MyiaFunction:
         return MyiaFunction(
-            f, backend=backend, opt=opt, fuse=fuse, patterns=patterns, in_specs=in_specs
+            f, backend=backend, opt=opt, fuse=fuse, patterns=patterns,
+            in_specs=in_specs, program_cache=program_cache,
         )
 
     return wrap(fn) if fn is not None else wrap

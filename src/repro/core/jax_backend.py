@@ -32,16 +32,30 @@ the shapes that genuinely still need the interpreter.
 
 from __future__ import annotations
 
+import hashlib
+import json
+import os
+import pickle
+import tempfile
 from typing import Any, Callable, Sequence
 
 import jax
 
 from .ir import Graph
 from .lowering import lower_graph, lowering_blockers, try_lower
+from .serialize import (
+    FORMAT_VERSION,
+    SerializeError,
+    deserialize_graph,
+    serialize_graph,
+    structural_hash,
+)
 from .spmd import SpmdError, shard_graph
 from .vm import VM
 
 __all__ = [
+    "CacheStats",
+    "ProgramCache",
     "compile_graph",
     "compile_graph_spmd",
     "trace_graph",
@@ -180,4 +194,283 @@ def compile_graph_spmd(
     runner.jitted = out if jit else None
     runner.sharded = sharded
     runner.plan = sharded.plan
+    return runner
+
+
+# ---------------------------------------------------------------------------
+# Persistent AOT program cache
+# ---------------------------------------------------------------------------
+
+
+class CacheStats:
+    """Counters from one :class:`ProgramCache` (surfaced like ``OptStats``).
+
+    * ``hits`` / ``misses`` — cache-key lookups that found / did not find a
+      durable entry,
+    * ``exec_loads`` — hits answered by deserializing the stored XLA
+      executable (zero recompilation: neither the pipeline's lowering nor
+      XLA ran),
+    * ``xla_compiles`` — actual ``.lower().compile()`` invocations this
+      process performed (a warm restart of the same workload must keep
+      this at 0 — pinned by the serve subprocess test),
+    * ``puts`` / ``spills`` — entries written / evicted (LRU by mtime when
+      over ``max_entries``),
+    * ``errors`` — corrupt/incompatible entries or failed executable
+      serializations (never fatal: the cache degrades to recompiling).
+    """
+
+    __slots__ = ("hits", "misses", "exec_loads", "xla_compiles", "puts", "spills", "errors")
+
+    def __init__(self) -> None:
+        self.hits = 0
+        self.misses = 0
+        self.exec_loads = 0
+        self.xla_compiles = 0
+        self.puts = 0
+        self.spills = 0
+        self.errors = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "exec_loads": self.exec_loads,
+            "xla_compiles": self.xla_compiles,
+            "puts": self.puts,
+            "spills": self.spills,
+            "errors": self.errors,
+            "hit_rate": round(self.hit_rate, 4),
+        }
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"CacheStats({self.as_dict()!r})"
+
+
+def mesh_descriptor(mesh: Any) -> tuple | None:
+    """Canonical identity of a concrete mesh: axis sizes + device ids.
+    The single definition shared by the specialization key
+    (``api.MyiaFunction``) and the AOT cache key — a same-shape mesh over
+    different devices must never collide."""
+    if mesh is None:
+        return None
+    return (
+        tuple(sorted(mesh.shape.items())),
+        tuple(int(d.id) for d in mesh.devices.flat),
+    )
+
+
+def abstract_signature(example_args: Sequence[Any]) -> str:
+    """Canonical string for the argument avals — the signature component of
+    the cache key.  Only array arguments are supported (the AOT cache holds
+    straight-line array programs; statics are baked into the graph)."""
+    parts = []
+    for a in example_args:
+        if isinstance(a, jax.ShapeDtypeStruct):
+            dt, shp = a.dtype, a.shape
+        elif hasattr(a, "dtype") and hasattr(a, "shape"):
+            dt, shp = a.dtype, a.shape
+        else:
+            raise SerializeError(f"non-array argument {type(a).__name__} in AOT signature")
+        parts.append(f"{jax.numpy.dtype(dt).str}{list(shp)}")
+    return ";".join(parts)
+
+
+def _avals(example_args: Sequence[Any]) -> tuple:
+    return tuple(
+        a if isinstance(a, jax.ShapeDtypeStruct) else jax.ShapeDtypeStruct(a.shape, a.dtype)
+        for a in example_args
+    )
+
+
+class ProgramCache:
+    """Persistent cache of AOT-compiled programs (``jax.jit(...).lower().
+    compile()`` artifacts), keyed on *what the program is* rather than which
+    process built it:
+
+        structural graph hash × abstract signature × fuse/kernel-mode ×
+        mesh descriptor × (jax version, serialize format, backend platform)
+
+    Each entry stores the serialized optimized graph (``repro.core.
+    serialize``) and, best-effort, the serialized XLA executable
+    (``jax.experimental.serialize_executable``).  A warm process finds the
+    entry, reloads the executable, and serves with **zero recompilations**;
+    if the executable blob is incompatible (different machine/jaxlib) the
+    stored graph is re-lowered and recompiled — never wrong, at worst slow.
+    Counters are surfaced on ``.stats`` like ``OptStats``.
+    """
+
+    def __init__(self, path: str, *, max_entries: int = 256) -> None:
+        self.path = os.path.abspath(path)
+        self.max_entries = max_entries
+        self.stats = CacheStats()
+        os.makedirs(self.path, exist_ok=True)
+
+    # -- keys --------------------------------------------------------------
+    def key(
+        self,
+        graph: Graph,
+        example_args: Sequence[Any],
+        *,
+        fuse: bool = False,
+        kernel_mode: str | None = None,
+        mesh: Any = None,
+    ) -> str:
+        if kernel_mode is None:
+            from repro.kernels.ops import get_kernel_mode
+
+            kernel_mode = get_kernel_mode()
+        meshdesc = mesh_descriptor(mesh)
+        payload = {
+            "graph": structural_hash(graph),
+            "sig": abstract_signature(example_args),
+            "fuse": bool(fuse),
+            "kernel_mode": kernel_mode,
+            "mesh": meshdesc,
+            "jax": jax.__version__,
+            "format": FORMAT_VERSION,
+            "platform": jax.devices()[0].platform,
+        }
+        return hashlib.sha256(
+            json.dumps(payload, sort_keys=True, separators=(",", ":")).encode()
+        ).hexdigest()
+
+    def _file(self, key: str) -> str:
+        return os.path.join(self.path, key + ".pkl")
+
+    # -- main entry point --------------------------------------------------
+    def load_or_compile(
+        self,
+        graph: Graph,
+        example_args: Sequence[Any],
+        *,
+        fuse: bool = False,
+        lowered_fn: Callable | None = None,
+        mesh: Any = None,
+    ) -> Callable:
+        """An AOT-compiled callable for ``graph`` at ``example_args``'s
+        avals, answered from disk when possible.
+
+        Raises :class:`SerializeError` when the graph/arguments cannot be
+        made durable (VM-fallback graphs, non-array args) — callers fall
+        back to the ordinary jit tiers.
+        """
+        key = self.key(graph, example_args, fuse=fuse, mesh=mesh)
+        avals = _avals(example_args)
+        entry = self._read(key)
+        if entry is not None:
+            runner = self._from_entry(entry, avals, fuse=fuse)
+            if runner is not None:
+                self.stats.hits += 1
+                runner.cache_key = key
+                return runner
+        # miss: compile fresh from the live graph and persist
+        self.stats.misses += 1
+        fn = lowered_fn if lowered_fn is not None else try_lower(graph, fuse=fuse)
+        if fn is None:
+            raise SerializeError(f"graph {graph.name} does not lower (VM fallback)")
+        compiled = jax.jit(fn).lower(*avals).compile()
+        self.stats.xla_compiles += 1
+        self._write(key, graph, compiled)
+        runner = _aot_runner(compiled)
+        runner.cache_key = key
+        return runner
+
+    # -- internals ---------------------------------------------------------
+    def _read(self, key: str) -> dict | None:
+        fpath = self._file(key)
+        if not os.path.exists(fpath):
+            return None
+        try:
+            with open(fpath, "rb") as f:
+                entry = pickle.load(f)
+            os.utime(fpath)  # LRU touch
+            return entry
+        except Exception:
+            self.stats.errors += 1
+            return None
+
+    def _from_entry(self, entry: dict, avals: tuple, *, fuse: bool) -> Callable | None:
+        if entry.get("exec") is not None:
+            try:
+                from jax.experimental import serialize_executable
+
+                compiled = serialize_executable.deserialize_and_load(
+                    entry["exec"], entry["in_tree"], entry["out_tree"]
+                )
+                self.stats.exec_loads += 1
+                return _aot_runner(compiled)
+            except Exception:
+                self.stats.errors += 1  # foreign/stale executable: rebuild
+        try:
+            g = deserialize_graph(entry["graph"])
+            fn = try_lower(g, fuse=fuse)
+            if fn is None:
+                return None
+            compiled = jax.jit(fn).lower(*avals).compile()
+            self.stats.xla_compiles += 1
+            return _aot_runner(compiled)
+        except Exception:
+            self.stats.errors += 1
+            return None
+
+    def _write(self, key: str, graph: Graph, compiled: Any) -> None:
+        try:
+            payload = serialize_graph(graph)
+        except SerializeError:
+            self.stats.errors += 1
+            return  # graph not durable: serve from memory only
+        blob = in_tree = out_tree = None
+        try:
+            from jax.experimental import serialize_executable
+
+            blob, in_tree, out_tree = serialize_executable.serialize(compiled)
+        except Exception:
+            self.stats.errors += 1  # entry still useful: graph-level reuse
+        entry = {"graph": payload, "exec": blob, "in_tree": in_tree, "out_tree": out_tree}
+        tmp = None
+        try:
+            fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".tmp")
+            with os.fdopen(fd, "wb") as f:
+                pickle.dump(entry, f)
+            os.replace(tmp, self._file(key))
+            self.stats.puts += 1
+        except Exception:
+            self.stats.errors += 1
+            if tmp is not None:  # don't leak .tmp files into the cache dir
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+            return
+        self._evict()
+
+    def _evict(self) -> None:
+        try:
+            files = [
+                os.path.join(self.path, n)
+                for n in os.listdir(self.path)
+                if n.endswith(".pkl")
+            ]
+            if len(files) <= self.max_entries:
+                return
+            files.sort(key=os.path.getmtime)
+            for f in files[: len(files) - self.max_entries]:
+                os.remove(f)
+                self.stats.spills += 1
+        except OSError:
+            self.stats.errors += 1
+
+
+def _aot_runner(compiled: Any) -> Callable:
+    def runner(*args: Any) -> Any:
+        return compiled(*args)
+
+    runner.lowered = True
+    runner.aot = True
+    runner.compiled = compiled
     return runner

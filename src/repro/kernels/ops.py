@@ -42,35 +42,48 @@ __all__ = [
 _MODES = ("ref", "chunked", "pallas_interpret", "pallas")
 
 
-def _mode_from_env() -> str:
-    """Initial kernel mode from ``MYIA_KERNEL_MODE`` (the CI matrix axis:
-    the fast job runs ``ref``, the full job also ``pallas_interpret``).
-    Invalid values fail loudly — a typo'd matrix entry must not silently
-    green the ref path."""
-    mode = os.environ.get("MYIA_KERNEL_MODE", "ref")
+def _validate(mode: str) -> str:
+    """Invalid values fail loudly — a typo'd CI matrix entry must not
+    silently green the ref path."""
     if mode not in _MODES:
-        raise ValueError(
-            f"MYIA_KERNEL_MODE must be one of {_MODES}, got {mode!r}"
-        )
+        raise ValueError(f"MYIA_KERNEL_MODE must be one of {_MODES}, got {mode!r}")
     return mode
 
 
-_MODE = _mode_from_env()
+# ``MYIA_KERNEL_MODE`` (the CI matrix axis: the fast job runs ``ref``, the
+# full job also ``pallas_interpret``) used to be read ONCE at import, so a
+# process that changed the environment afterwards — the serve engine
+# flipping modes between workloads, or a test driving the mode matrix
+# in-process — silently kept the stale mode.  The env var is now re-read
+# on every query: a *change* to it takes effect immediately, while an
+# explicit ``set_kernel_mode`` wins until the env var next changes.
+_ENV_SEEN = os.environ.get("MYIA_KERNEL_MODE")
+# validate the RAW value when the var is set: an empty/typo'd CI matrix
+# expansion must fail loudly, not silently green the ref path
+_MODE = _validate("ref" if _ENV_SEEN is None else _ENV_SEEN)
 
 
 def set_kernel_mode(mode: str) -> None:
-    global _MODE
-    if mode not in _MODES:
-        raise ValueError(f"kernel mode must be one of {_MODES}, got {mode!r}")
-    _MODE = mode
+    global _MODE, _ENV_SEEN
+    _MODE = _validate(mode)
+    # sync the watermark: a later env-var CHANGE still overrides
+    _ENV_SEEN = os.environ.get("MYIA_KERNEL_MODE")
 
 
 def get_kernel_mode() -> str:
+    global _MODE, _ENV_SEEN
+    env = os.environ.get("MYIA_KERNEL_MODE")
+    if env != _ENV_SEEN:
+        if env is not None:
+            # validate BEFORE moving the watermark: a typo'd value keeps
+            # failing on every query instead of raising once and going quiet
+            _MODE = _validate(env)
+        _ENV_SEEN = env
     return _MODE
 
 
 def _resolve(impl: str | None) -> str:
-    return impl if impl is not None else _MODE
+    return impl if impl is not None else get_kernel_mode()
 
 
 # ===========================================================================

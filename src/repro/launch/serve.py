@@ -7,12 +7,19 @@ Runs a continuous-batch of requests through prefill, then step-decodes
 with greedy sampling.  The same ``decode_step`` is what the decode_32k /
 long_500k dry-run cells lower at production shapes.
 
-``--compiler myia`` serves the Myia-compiled LM instead: logits come from
-the optimized+fused graph (``launch/myia_step.build_lm_logits``), and
-under ``--data-mesh``/``--model-mesh`` > 1 each forward runs as a
-per-shard program under ``shard_map`` (the SPMD tier).  Decode recomputes
-the full prefix per step (no KV cache in the Myia subset yet), so each
-generated length is its own specialization — keep ``--gen`` small.
+``--compiler myia`` serves the Myia-compiled LM through the serving
+runtime (``repro.serve``): requests are admitted into power-of-two shape
+buckets, the KV/prefix cache is threaded *functionally* through the
+compiled decode graph as a tuple carry, and compiled programs persist in
+the AOT program cache (``--cache-dir``) — a warm process restart replays
+the serialized executables with zero recompilation.  Decode is O(T):
+one single-token specialization per bucket, not one per generated
+length.  ``--full-prefix`` keeps the old O(T²) full-prefix-recompute
+path (one specialization per length) as the differential oracle;
+``--check-oracle`` runs both and asserts the token streams are
+identical.  Under ``--data-mesh``/``--model-mesh`` > 1 the full-prefix
+path runs the train-side LM as a per-shard program under ``shard_map``
+(the SPMD tier), unchanged.
 """
 
 from __future__ import annotations
@@ -39,17 +46,39 @@ def main(argv=None) -> int:
         "--compiler",
         default="jax",
         choices=("jax", "myia"),
-        help="jax: cached prefill/decode; myia: the optimized+fused graph, "
-        "sharded under a mesh (full-prefix recompute per step)",
+        help="jax: cached prefill/decode; myia: the serving runtime over "
+        "the optimized+fused graph (bucketed continuous batching + AOT "
+        "program cache); add --full-prefix for the per-length oracle path",
     )
     ap.add_argument("--data-mesh", type=int, default=1)
     ap.add_argument("--model-mesh", type=int, default=1)
+    ap.add_argument(
+        "--full-prefix",
+        action="store_true",
+        help="myia: serve by full-prefix recompute (the pre-runtime path; "
+        "one specialization per generated length) instead of the engine",
+    )
+    ap.add_argument(
+        "--check-oracle",
+        action="store_true",
+        help="myia: run the engine AND the full-prefix oracle, assert "
+        "identical token streams",
+    )
+    ap.add_argument("--slots", type=int, default=4, help="myia: engine batch lanes")
+    ap.add_argument("--min-bucket", type=int, default=32)
+    ap.add_argument(
+        "--cache-dir",
+        default="artifacts/progcache",
+        help="myia: persistent AOT program cache directory ('' disables)",
+    )
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
 
     if args.compiler == "myia":
-        return _serve_myia(args, cfg)
+        if args.full_prefix or args.data_mesh * args.model_mesh > 1:
+            return _serve_myia_full_prefix(args, cfg)
+        return _serve_myia_engine(args, cfg)
     params = init_params(cfg, jax.random.PRNGKey(0))
     max_len = args.prompt_len + args.gen
 
@@ -100,10 +129,66 @@ def decode_step_jit_call(decode_jit, params, tok, pos, caches):
     return decode_jit(params, tok, jnp.int32(pos), caches)
 
 
-def _serve_myia(args, cfg) -> int:
+def _serve_myia_engine(args, cfg) -> int:
+    """The serving runtime: bucketed continuous batching, incremental
+    decode (tuple-carried KV cache), persistent AOT program cache."""
+    from repro.core.jax_backend import ProgramCache
+    from repro.serve import ServeEngine, ServeLMDims, init_serve_params, oracle_generate
+
+    dims = ServeLMDims.from_config(cfg)
+    params = init_serve_params(dims, jax.random.PRNGKey(0))
+    cache = ProgramCache(args.cache_dir) if args.cache_dir else None
+    engine = ServeEngine(
+        dims,
+        params,
+        n_slots=args.slots,
+        min_bucket=args.min_bucket,
+        program_cache=cache,
+    )
+
+    rng = np.random.default_rng(0)
+    submitted = []
+    for _ in range(args.batch):
+        prompt = rng.integers(0, dims.vocab, args.prompt_len).tolist()
+        submitted.append((engine.submit(prompt, args.gen), prompt))
+
+    t0 = time.monotonic()
+    results = engine.run()
+    wall = time.monotonic() - t0
+
+    stats = engine.stats()
+    ttft = min(r["ttft_s"] for r in results.values())
+    print(
+        f"[myia/engine] {args.batch} reqs × (prompt {args.prompt_len} + gen "
+        f"{args.gen}) in {wall:.3f}s ({stats['tokens_generated'] / max(wall, 1e-9):.1f} tok/s, "
+        f"ttft {ttft * 1e3:.1f}ms)"
+    )
+    print(
+        f"[myia/engine] buckets {stats['buckets_in_use']}, compilations "
+        f"{stats['compilations']} (floor {stats['compilation_floor']})"
+    )
+    if cache is not None:
+        print(f"[myia/engine] program cache: {cache.stats.as_dict()}")
+    print("sample generations (token ids):")
+    for rid, _prompt in submitted[:2]:
+        print("  ", results[rid]["tokens"][:16])
+
+    if args.check_oracle:
+        fns: dict = {}
+        for rid, prompt in submitted:
+            want = oracle_generate(dims, params, prompt, args.gen, fns=fns)
+            got = results[rid]["tokens"]
+            assert got == want, f"engine diverged from full-prefix oracle on rid {rid}"
+        print(f"[myia/engine] oracle check passed ({len(submitted)} requests)")
+    return 0
+
+
+def _serve_myia_full_prefix(args, cfg) -> int:
     """Greedy decode off the Myia-compiled LM forward (SPMD tier when a
     mesh is active).  Batch stays data-parallel; the vocab projection is
-    model-parallel — the same specs the train step uses."""
+    model-parallel — the same specs the train step uses.  Decode
+    recomputes the full prefix per step (one specialization per length):
+    this is the serving runtime's differential oracle."""
     from repro.launch.mesh import make_local_mesh
     from repro.launch.myia_step import (
         MyiaLMDims,

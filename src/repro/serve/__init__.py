@@ -1,0 +1,18 @@
+"""``repro.serve`` — the inference runtime over the compiled Myia pipeline.
+
+Serving is where ahead-of-time compilation pays or dies: the same
+optimized graphs the trainer lowers are specialized per shape *bucket*
+(bounded, not per-length), compiled once, persisted in the AOT program
+cache (``repro.core.jax_backend.ProgramCache``), and replayed across
+process restarts with zero recompilation.  See docs/serving.md.
+"""
+
+from .engine import Request, ServeEngine, bucket_for, oracle_generate  # noqa: F401
+from .model import (  # noqa: F401
+    ServeLMDims,
+    build_decode_step,
+    build_prefill,
+    causal_mask,
+    decode_masks,
+    init_serve_params,
+)

@@ -1,0 +1,284 @@
+"""Continuous-batching serve engine over the compiled Myia decode path.
+
+Lifecycle (see docs/serving.md for the full walkthrough):
+
+1. **submit** — requests enter a per-bucket FIFO queue.  A request's
+   bucket is the smallest power-of-two ≥ ``prompt_len + max_new`` (so a
+   request's cache never migrates: its KV length is fixed at admission).
+   Bucketing bounds the number of compiled specializations at
+   O(log max_len) — *not* O(distinct lengths) and *not* O(generated
+   tokens).
+2. **admit** — each bucket owns one slot batch (``n_slots`` lanes of a
+   (B, L, D) KV cache).  When a slot is free, the next queued request of
+   that bucket is prefilled alone at (1, L) — one compiled prefill per
+   bucket — its K/V rows are written into the slot lane, and its first
+   token is sampled from the prompt's last-row logits.
+3. **step** — all active slots of a batch advance together through ONE
+   compiled decode graph call (per-slot positions/done only enter as
+   mask *values*, never shapes).  Finished slots (per-slot done mask:
+   ``generated == max_new``) free immediately and the queue refills them
+   mid-flight — continuous batching, not static batching.
+4. **drain** — ``run()`` loops admit→step across buckets until queues
+   and slots are empty, returning per-request generations + TTFT.
+
+Compilation accounting: the engine counts one compilation per
+(program, bucket) pair it instantiates — the floor is
+``2 × |buckets in use|`` (prefill + decode) and ``benchmarks/
+bench_serve.py`` gates it exactly.  With a :class:`ProgramCache`
+attached, those compilations are durable: a warm process restart replays
+the serialized executables and performs zero XLA compiles (asserted by
+``tests/serve/test_serve_cache.py``).
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+from collections import deque
+from typing import Any, Sequence
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import api
+from .model import (
+    ServeLMDims,
+    build_decode_step,
+    build_prefill,
+    causal_mask,
+    decode_masks,
+)
+
+__all__ = ["Request", "ServeEngine", "bucket_for", "oracle_generate"]
+
+
+def bucket_for(total_len: int, *, min_bucket: int = 16, max_bucket: int = 4096) -> int:
+    """Smallest power-of-two bucket ≥ ``total_len`` (≥ ``min_bucket``)."""
+    if total_len > max_bucket:
+        raise ValueError(f"request length {total_len} exceeds max bucket {max_bucket}")
+    b = min_bucket
+    while b < total_len:
+        b *= 2
+    return b
+
+
+class Request:
+    """One generation request: a prompt and a token budget."""
+
+    __slots__ = ("rid", "prompt", "max_new", "bucket", "submitted_at", "first_token_at")
+
+    def __init__(self, rid: int, prompt: Sequence[int], max_new: int, bucket: int) -> None:
+        self.rid = rid
+        self.prompt = list(int(t) for t in prompt)
+        self.max_new = int(max_new)
+        self.bucket = bucket
+        self.submitted_at = time.monotonic()
+        self.first_token_at: float | None = None
+
+
+class _SlotBatch:
+    """One bucket's lanes: a (n_slots, L, D) KV cache + per-slot state."""
+
+    def __init__(self, engine: "ServeEngine", bucket: int) -> None:
+        B, D = engine.n_slots, engine.dims.d_model
+        self.bucket = bucket
+        self.engine = engine
+        self.kcache = jnp.zeros((B, bucket, D), jnp.float32)
+        self.vcache = jnp.zeros((B, bucket, D), jnp.float32)
+        self.tok = np.zeros((B,), np.int32)
+        self.pos = np.zeros((B,), np.int64)
+        self.active: list[Request | None] = [None] * B
+        self.out: list[list[int]] = [[] for _ in range(B)]
+
+    def free_slot(self) -> int | None:
+        for i, r in enumerate(self.active):
+            if r is None:
+                return i
+        return None
+
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self.active)
+
+    def admit(self, req: Request, slot: int) -> list[tuple[Request, list[int]]]:
+        eng = self.engine
+        L = self.bucket
+        padded = np.zeros((1, L), np.int32)
+        padded[0, : len(req.prompt)] = req.prompt
+        logits, k, v = eng._call("prefill", L, eng._prefill_fn)(
+            *eng.params, jnp.asarray(padded), causal_mask(L)
+        )
+        first = int(jnp.argmax(logits[0, len(req.prompt) - 1]))
+        req.first_token_at = time.monotonic()
+        self.kcache = self.kcache.at[slot].set(k[0])
+        self.vcache = self.vcache.at[slot].set(v[0])
+        self.tok[slot] = first
+        self.pos[slot] = len(req.prompt)
+        self.out[slot] = [first]
+        self.active[slot] = req
+        eng.tokens_generated += 1
+        if req.max_new <= 1:
+            self.active[slot] = None
+            return [(req, self.out[slot])]
+        return []
+
+    def step(self) -> list[tuple[Request, list[int]]]:
+        if self.n_active == 0:
+            return []
+        eng = self.engine
+        wcol, amask = decode_masks(self.pos, self.bucket)
+        logits, self.kcache, self.vcache = eng._call("decode", self.bucket, eng._decode_fn)(
+            *eng.params, jnp.asarray(self.tok), self.kcache, self.vcache, wcol, amask
+        )
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        eng.steps += 1
+        finished: list[tuple[Request, list[int]]] = []
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.out[s].append(int(nxt[s]))
+            self.tok[s] = nxt[s]
+            self.pos[s] += 1
+            eng.tokens_generated += 1
+            if len(self.out[s]) >= req.max_new:
+                finished.append((req, self.out[s]))
+                self.active[s] = None  # slot frees mid-flight
+        return finished
+
+
+class ServeEngine:
+    """Bucketed continuous-batching inference over compiled Myia graphs."""
+
+    def __init__(
+        self,
+        dims: ServeLMDims,
+        params: tuple,
+        *,
+        n_slots: int = 4,
+        min_bucket: int = 16,
+        max_bucket: int = 4096,
+        program_cache: Any = None,
+        fuse: bool = False,
+    ) -> None:
+        self.dims = dims
+        self.params = tuple(params)
+        self.n_slots = int(n_slots)
+        self.min_bucket = int(min_bucket)
+        self.max_bucket = int(max_bucket)
+        self.program_cache = program_cache
+        self._prefill_fn = api.myia(
+            build_prefill(dims), program_cache=program_cache, fuse=fuse
+        )
+        self._decode_fn = api.myia(
+            build_decode_step(dims, self.n_slots), program_cache=program_cache, fuse=fuse
+        )
+        self._queues: dict[int, deque[Request]] = {}
+        self._batches: dict[int, _SlotBatch] = {}
+        self._rids = itertools.count()
+        self._specs_seen: set[tuple[str, int]] = set()
+        self.compilations: dict[str, int] = {"prefill": 0, "decode": 0}
+        self.tokens_generated = 0
+        self.steps = 0
+
+    # -- compiled-call bookkeeping ----------------------------------------
+    def _call(self, kind: str, bucket: int, fn: Any) -> Any:
+        spec = (kind, bucket)
+        if spec not in self._specs_seen:
+            self._specs_seen.add(spec)
+            self.compilations[kind] += 1
+        return fn
+
+    @property
+    def buckets_in_use(self) -> list[int]:
+        return sorted(self._batches)
+
+    @property
+    def total_compilations(self) -> int:
+        return sum(self.compilations.values())
+
+    def compilation_floor(self) -> int:
+        """What the bucket policy predicts: prefill + decode per bucket."""
+        return 2 * len(self._batches)
+
+    # -- request lifecycle -------------------------------------------------
+    def submit(self, prompt: Sequence[int], max_new: int) -> int:
+        bucket = bucket_for(
+            len(prompt) + max_new, min_bucket=self.min_bucket, max_bucket=self.max_bucket
+        )
+        req = Request(next(self._rids), prompt, max_new, bucket)
+        self._queues.setdefault(bucket, deque()).append(req)
+        return req.rid
+
+    def run(self) -> dict[int, dict]:
+        """Drain all queues; returns {rid: {tokens, ttft_s, bucket}}."""
+        results: dict[int, dict] = {}
+
+        def record(pairs: list[tuple[Request, list[int]]]) -> None:
+            for req, toks in pairs:
+                results[req.rid] = {
+                    "tokens": list(toks),
+                    "ttft_s": (req.first_token_at or req.submitted_at) - req.submitted_at,
+                    "bucket": req.bucket,
+                }
+
+        while any(self._queues.values()) or any(
+            b.n_active for b in self._batches.values()
+        ):
+            # admission: fill every free slot from its bucket's queue
+            for bucket, q in self._queues.items():
+                if not q:
+                    continue
+                batch = self._batches.get(bucket)
+                if batch is None:
+                    batch = self._batches[bucket] = _SlotBatch(self, bucket)
+                while q:
+                    slot = batch.free_slot()
+                    if slot is None:
+                        break
+                    record(batch.admit(q.popleft(), slot))
+            # one decode step per active batch
+            for batch in self._batches.values():
+                record(batch.step())
+        return results
+
+    # -- introspection -----------------------------------------------------
+    def stats(self) -> dict:
+        out = {
+            "n_slots": self.n_slots,
+            "min_bucket": self.min_bucket,
+            "buckets_in_use": self.buckets_in_use,
+            "compilations": dict(self.compilations),
+            "total_compilations": self.total_compilations,
+            "compilation_floor": self.compilation_floor(),
+            "tokens_generated": self.tokens_generated,
+            "decode_steps": self.steps,
+        }
+        if self.program_cache is not None:
+            out["program_cache"] = self.program_cache.stats.as_dict()
+        return out
+
+
+def oracle_generate(
+    dims: ServeLMDims, params: tuple, prompt: Sequence[int], max_new: int, *, fns=None
+) -> list[int]:
+    """The pre-runtime serving path, kept as the differential oracle:
+    greedy decode by **full-prefix recompute** — every step re-runs the
+    whole forward at the grown length, one specialization per length,
+    O(T²) total work.  ``fns`` (a dict) can be shared across calls to
+    reuse the per-length MyiaFunctions."""
+    fns = {} if fns is None else fns
+    tokens = [int(t) for t in prompt]
+    out: list[int] = []
+    for _ in range(max_new):
+        t = len(tokens)
+        fn = fns.get(t)
+        if fn is None:
+            fn = fns[t] = api.myia(build_prefill(dims))
+        logits, _k, _v = fn(
+            *params, jnp.asarray([tokens], jnp.int32), causal_mask(t)
+        )
+        nxt = int(jnp.argmax(logits[0, -1]))
+        out.append(nxt)
+        tokens.append(nxt)
+    return out

@@ -1,0 +1,170 @@
+"""Myia-subset serving model: causal-attention LM with incremental decode.
+
+The train-side LM (``launch/myia_step``) is position-independent (a
+tanh-MLP over embeddings), so serving it incrementally would be trivial.
+This model adds the part that makes serving a real problem — a causal
+single-head attention block — written entirely in the Myia subset, so the
+whole decode path goes through parse → infer → worklist-optimize → fuse →
+lower and lands in the AOT program cache like any other compiled graph.
+
+Two entry points, both pure functions of arrays (no Python state):
+
+* :func:`build_prefill` — full-sequence forward over a (B, S) token grid
+  with an explicit causal mask argument; returns ``(logits, k, v)`` so the
+  caller keeps the attention cache.  This is also the *full-prefix
+  oracle*: evaluated at every growing length it reproduces exactly what
+  ``launch/serve.py --compiler myia`` did before the serving runtime —
+  one specialization per length, O(T²) work.
+* :func:`build_decode_step` — one token per slot against a fixed-length
+  KV cache: the new K/V row is written functionally (``where`` on a
+  one-hot column mask — no in-place mutation, the carry is a plain
+  tuple), attention reads only rows ``<= pos`` via the attend mask, and
+  the step returns ``(logits, kcache', vcache')`` as a tuple carry.  One
+  specialization per cache bucket, O(T) per generated token.
+
+Mask/position tensors are *arguments*, not baked constants, so a single
+graph serves every request position at a bucket and the abstract
+signature (hence the AOT cache key) depends only on (n_slots, bucket).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+
+from repro.launch.myia_step import MyiaLMDims
+import repro.core.primitives as P
+
+__all__ = [
+    "ServeLMDims",
+    "build_prefill",
+    "build_decode_step",
+    "init_serve_params",
+    "causal_mask",
+    "decode_masks",
+]
+
+#: serving reuses the train-side dims object (vocab, d_model, d_hidden)
+ServeLMDims = MyiaLMDims
+
+_take = P.take
+_tanh = P.tanh
+_exp = P.exp
+_rsum = P.reduce_sum
+_rmax = P.reduce_max
+_mT = P.mT
+_where = P.where
+_reshape = P.reshape
+
+_NEG_INF = float("-inf")
+
+
+def init_serve_params(dims: ServeLMDims, rng: jax.Array) -> tuple:
+    """(emb, wq, wk, wv, w1, w2, wout) — the decode/prefill signature."""
+    import jax.numpy as jnp
+
+    k = jax.random.split(rng, 7)
+    s = 0.1
+    D, H, V = dims.d_model, dims.d_hidden, dims.vocab
+    return (
+        jax.random.normal(k[0], (V, D), jnp.float32) * s,
+        jax.random.normal(k[1], (D, D), jnp.float32) * s,
+        jax.random.normal(k[2], (D, D), jnp.float32) * s,
+        jax.random.normal(k[3], (D, D), jnp.float32) * s,
+        jax.random.normal(k[4], (D, H), jnp.float32) * s,
+        jax.random.normal(k[5], (H, D), jnp.float32) * s,
+        jax.random.normal(k[6], (D, V), jnp.float32) * s,
+    )
+
+
+def build_prefill(dims: ServeLMDims):
+    """Full-sequence forward: (params…, tokens (B,S), cmask (1,S,S)) →
+    (logits (B,S,V), k (B,S,D), v (B,S,D)).
+
+    Shape-polymorphic over B and S (the mask arrives as an argument), so
+    one builder covers prefill at every bucket AND the per-length
+    full-prefix oracle."""
+    scale = 1.0 / float(np.sqrt(dims.d_model))
+    neg_inf = _NEG_INF
+
+    def serve_prefill(emb, wq, wk, wv, w1, w2, wout, tokens, cmask):
+        h0 = _take(emb, tokens)
+        q = h0 @ wq
+        k = h0 @ wk
+        v = h0 @ wv
+        s = (q @ _mT(k)) * scale
+        s = _where(cmask, s, neg_inf)
+        m = _rmax(s, (2,), True)
+        e = _exp(s - m)
+        p = e / _rsum(e, (2,), True)
+        h = h0 + (p @ v)
+        h = _tanh(h @ w1)
+        h = _tanh(h @ w2)
+        return (h @ wout, k, v)
+
+    return serve_prefill
+
+
+def build_decode_step(dims: ServeLMDims, n_slots: int):
+    """Single-token decode against a bucket-length KV cache.
+
+    (params…, tok (B,), kcache (B,L,D), vcache (B,L,D), wcol (B,L,1)
+    bool, amask (B,1,L) bool) → (logits (B,V), kcache', vcache').
+
+    ``wcol`` is the one-hot write column at each slot's position —
+    ``where(wcol, k_new, kcache)`` is the functional cache write — and
+    ``amask`` admits exactly rows ``<= pos`` to the softmax (stale rows
+    past the position are masked to −inf and contribute exact zeros).
+    The cache length L only enters through argument shapes: one
+    specialization per bucket, replayed for every step at that bucket."""
+    D = dims.d_model
+    scale = 1.0 / float(np.sqrt(D))
+    neg_inf = _NEG_INF
+    row3 = (n_slots, 1, D)
+    flat2 = (n_slots, D)
+
+    def serve_decode(emb, wq, wk, wv, w1, w2, wout, tok, kcache, vcache, wcol, amask):
+        h0 = _take(emb, tok)
+        q = h0 @ wq
+        k = h0 @ wk
+        v = h0 @ wv
+        kc = _where(wcol, _reshape(k, row3), kcache)
+        vc = _where(wcol, _reshape(v, row3), vcache)
+        s = (_reshape(q, row3) @ _mT(kc)) * scale
+        s = _where(amask, s, neg_inf)
+        m = _rmax(s, (2,), True)
+        e = _exp(s - m)
+        p = e / _rsum(e, (2,), True)
+        h = h0 + _reshape(p @ vc, flat2)
+        h = _tanh(h @ w1)
+        h = _tanh(h @ w2)
+        return (h @ wout, kc, vc)
+
+    return serve_decode
+
+
+# -- host-side mask helpers (plain jnp; tiny, recomputed per step) ----------
+
+
+@functools.lru_cache(maxsize=32)
+def causal_mask(seq: int):
+    """(1, S, S) lower-triangular bool mask for :func:`build_prefill`.
+    Memoized per length — admissions reuse the device array instead of
+    re-building and re-uploading an S×S host mask per request."""
+    import jax.numpy as jnp
+
+    return jnp.asarray(np.tril(np.ones((seq, seq), bool)))[None, :, :]
+
+
+def decode_masks(pos, bucket: int):
+    """(wcol (B,L,1), amask (B,1,L)) for integer positions ``pos`` (B,)."""
+    import jax.numpy as jnp
+
+    pos = jnp.asarray(pos, jnp.int32)
+    ar = jnp.arange(bucket, dtype=jnp.int32)
+    wcol = (ar[None, :] == pos[:, None])[:, :, None]
+    amask = (ar[None, :] <= pos[:, None])[:, None, :]
+    return wcol, amask

@@ -1,0 +1,201 @@
+"""Serialization round trips + structural-hash stability.
+
+The AOT program cache is only sound if (a) deserialize → re-lower
+reproduces the exact program (bit-identical outputs under jit), and
+(b) the structural hash is a pure function of graph *structure* — stable
+across process runs, insensitive to debug names and clone relabels.
+Both properties are pinned here over the existing differential corpora
+(the closure-elimination programs and the worklist-equivalence corpus).
+"""
+
+import importlib.util
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import P, Graph, clone_graph
+from repro.core.api import compile_pipeline
+from repro.core.infer import abstract_of_value
+from repro.core.lowering import lower_graph, lowering_blockers
+from repro.core.serialize import (
+    SerializeError,
+    dumps,
+    loads,
+    serialize_graph,
+    structural_hash,
+)
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_SRC = os.path.abspath(os.path.join(_HERE, "..", "..", "src"))
+
+
+def _load_corpus_module(fname: str):
+    spec = importlib.util.spec_from_file_location(
+        f"_corpus_{fname[:-3]}", os.path.join(_HERE, fname)
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+_CE = _load_corpus_module("test_closure_elim.py")
+_WL = _load_corpus_module("test_opt_worklist.py")
+
+
+def _closure_elim_cases():
+    for name, (build, args) in _CE.LOWERS.items():
+        yield f"ce_{name}", build, args
+
+
+def _worklist_cases():
+    for name, fn, use_grad, wrt, example in _WL.CORPUS:
+        if name in ("recursion", "mutual_recursion"):
+            continue  # residual recursion: VM-fallback graphs are not durable
+        yield (
+            f"wl_{name}",
+            (lambda fn=fn, use_grad=use_grad, wrt=wrt: _WL._graph_for(fn, use_grad, wrt)),
+            tuple(_WL._concrete(a) for a in example),
+        )
+
+
+CASES = dict(
+    (n, (b, a)) for n, b, a in (*_closure_elim_cases(), *_worklist_cases())
+)
+
+
+def _pipeline(build, args):
+    return compile_pipeline(build(), tuple(abstract_of_value(a) for a in args))
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_roundtrip_relowers_bit_identical(name):
+    build, args = CASES[name]
+    g = _pipeline(build, args)
+    if lowering_blockers(g):
+        pytest.skip("program stays on the VM: not an AOT artifact")
+    g2 = loads(dumps(g))
+    assert lowering_blockers(g2) == []
+    r1 = jax.jit(lower_graph(g))(*args)
+    r2 = jax.jit(lower_graph(g2))(*args)
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+    # the round trip is structure-preserving: identical hash
+    assert structural_hash(g) == structural_hash(g2)
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_hash_ignores_debug_names_and_relabels(name):
+    build, args = CASES[name]
+    g = _pipeline(build, args)
+    relabeled = clone_graph(g, relabel=":renamed")
+    assert structural_hash(relabeled) == structural_hash(g)
+
+
+def test_distinct_programs_distinct_hashes():
+    by_hash: dict[str, list[str]] = {}
+    for name in sorted(CASES):
+        build, args = CASES[name]
+        g = _pipeline(build, args)
+        by_hash.setdefault(structural_hash(g), []).append(name)
+    collisions = [ns for ns in by_hash.values() if len(ns) > 1]
+    # exactly one *structural identity* is expected: while_pow optimizes to
+    # the same loop graph whether the bound arrived traced or static (the
+    # static value widens at the loop header) — equal hashes are correct
+    # there, and the cache key still separates the two by abstract
+    # signature.  Everything else must hash apart.
+    assert collisions == [["ce_while_pow_static", "ce_while_pow_traced"]], collisions
+
+
+def test_payload_is_json_canonical():
+    build, args = CASES["ce_while_pow_traced"]
+    g = _pipeline(build, args)
+    text1 = dumps(g)
+    text2 = dumps(loads(text1))
+    assert text1 == text2  # fixpoint: serialize∘deserialize is identity on payloads
+
+
+def test_serialize_rejects_non_durable_constants():
+    g = Graph("bad")
+    p = g.add_parameter("x")
+    g.set_return(g.apply(P.add, p, g.constant(object())))
+    with pytest.raises(SerializeError):
+        serialize_graph(g)
+
+
+def test_serialize_rejects_open_families():
+    outer = Graph("outer")
+    x = outer.add_parameter("x")
+    inner = Graph("inner")
+    inner.set_return(inner.apply(P.mul, x, x))  # x is a free variable
+    with pytest.raises(SerializeError):
+        serialize_graph(inner)
+
+
+_HASH_SCRIPT = textwrap.dedent(
+    """
+    import jax.numpy as jnp
+    from repro.core import build_grad_graph, parse_function
+    from repro.core.api import compile_pipeline
+    from repro.core.infer import abstract_of_value
+    from repro.core.serialize import structural_hash
+
+    def p_while_pow(x, n):
+        i = 0
+        acc = x
+        while i < n:
+            acc = acc * x
+            i = i + 1
+        return acc
+
+    def cube(x):
+        return x * x * x
+
+    args_pow = (jnp.asarray(1.3, jnp.float32), jnp.asarray(4))
+    g1 = compile_pipeline(
+        parse_function(p_while_pow), tuple(abstract_of_value(a) for a in args_pow)
+    )
+    g2 = compile_pipeline(
+        build_grad_graph(parse_function(cube)),
+        (abstract_of_value(jnp.asarray(1.3, jnp.float32)),),
+    )
+    print(structural_hash(g1))
+    print(structural_hash(g2))
+    """
+)
+
+
+@pytest.mark.slow
+def test_structural_hash_stable_across_processes(tmp_path):
+    """Two fresh interpreters compiling the same source programs must agree
+    on the hash — the property the persistent cache key stands on."""
+    script = tmp_path / "hash_script.py"
+    script.write_text(_HASH_SCRIPT)
+    env = dict(os.environ, PYTHONPATH=_SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    outs = []
+    for _ in range(2):
+        res = subprocess.run(
+            [sys.executable, str(script)], capture_output=True, text=True, env=env
+        )
+        assert res.returncode == 0, res.stderr
+        outs.append(res.stdout.strip().splitlines())
+    assert outs[0] == outs[1]
+    assert len(set(outs[0])) == 2  # and the two programs hash differently
+
+
+def test_array_and_dtype_constants_roundtrip():
+    g = Graph("consts")
+    p = g.add_parameter("x")
+    arr = jnp.asarray(np.arange(6, dtype=np.float32).reshape(2, 3))
+    casted = g.apply(P.cast, g.apply(P.add, p, g.constant(arr)), g.constant(np.dtype("int32")))
+    g.set_return(casted)
+    g2 = loads(dumps(g))
+    x = jnp.ones((2, 3), jnp.float32)
+    r1 = jax.jit(lower_graph(g))(x)
+    r2 = jax.jit(lower_graph(g2))(x)
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+    assert r2.dtype == np.dtype("int32")

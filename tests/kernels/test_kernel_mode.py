@@ -1,0 +1,73 @@
+"""Kernel-mode dispatch: ``MYIA_KERNEL_MODE`` must be live, not
+import-frozen.
+
+PR 4 read the env var once at import, so a process that changed it
+afterwards (the serve engine flipping modes between workloads, a test
+driving the CI kernel-mode matrix in-process) silently kept the stale
+mode.  The contract now: an env-var *change* takes effect on the next
+query; an explicit ``set_kernel_mode`` wins until the env var next
+changes."""
+
+import pytest
+
+from repro.kernels.ops import get_kernel_mode, set_kernel_mode
+
+
+@pytest.fixture(autouse=True)
+def _restore_mode(monkeypatch):
+    before = get_kernel_mode()
+    yield
+    set_kernel_mode(before)
+
+
+def test_env_change_takes_effect_in_process(monkeypatch):
+    set_kernel_mode("ref")
+    monkeypatch.setenv("MYIA_KERNEL_MODE", "pallas_interpret")
+    assert get_kernel_mode() == "pallas_interpret"
+
+
+def test_set_kernel_mode_wins_over_unchanged_env(monkeypatch):
+    monkeypatch.setenv("MYIA_KERNEL_MODE", "pallas_interpret")
+    assert get_kernel_mode() == "pallas_interpret"
+    set_kernel_mode("ref")
+    # env unchanged since the explicit set: the explicit choice sticks
+    assert get_kernel_mode() == "ref"
+
+
+def test_env_change_after_explicit_set_overrides(monkeypatch):
+    monkeypatch.setenv("MYIA_KERNEL_MODE", "ref")
+    set_kernel_mode("chunked")
+    assert get_kernel_mode() == "chunked"
+    monkeypatch.setenv("MYIA_KERNEL_MODE", "pallas_interpret")
+    assert get_kernel_mode() == "pallas_interpret"
+
+
+def test_env_removal_keeps_current_mode(monkeypatch):
+    monkeypatch.setenv("MYIA_KERNEL_MODE", "pallas_interpret")
+    assert get_kernel_mode() == "pallas_interpret"
+    monkeypatch.delenv("MYIA_KERNEL_MODE")
+    assert get_kernel_mode() == "pallas_interpret"
+
+
+def test_invalid_env_value_fails_loudly(monkeypatch):
+    monkeypatch.setenv("MYIA_KERNEL_MODE", "definitely-not-a-mode")
+    with pytest.raises(ValueError):
+        get_kernel_mode()
+    # clean up the poisoned watermark for the restore fixture
+    monkeypatch.delenv("MYIA_KERNEL_MODE")
+    set_kernel_mode("ref")
+
+
+def test_invalid_set_rejected():
+    with pytest.raises(ValueError):
+        set_kernel_mode("nope")
+
+
+def test_empty_env_value_fails_loudly(monkeypatch):
+    """An empty matrix expansion (e.g. a misspelled CI variable rendering
+    as \"\") must fail, not silently run the ref path."""
+    monkeypatch.setenv("MYIA_KERNEL_MODE", "")
+    with pytest.raises(ValueError):
+        get_kernel_mode()
+    monkeypatch.delenv("MYIA_KERNEL_MODE")
+    set_kernel_mode("ref")

@@ -87,3 +87,43 @@ class TestGrad:
         g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(x, B, C)
         for a, b in zip(g1, g2):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+class TestKnownChunkedBackwardNaN:
+    """KNOWN BUG (surfaced by the PR-4 kernel-mode matrix, documented here
+    instead of hiding behind the tests/models ref-mode pin): the *chunked*
+    backward — the vjp route shared by the ``chunked`` / ``pallas`` /
+    ``pallas_interpret`` modes — produces NaN ``dt`` gradients when
+    ``dt·A`` is strongly negative (decay ≈ e⁻⁶⁰, i.e. badly-scaled inits
+    at tiny CPU configs).  Mechanism: the inter-chunk decay factors
+    ``exp(segsum(dt·A))`` underflow to exact 0, and the vjp of ``exp`` at
+    an underflowed output multiplies 0 · ∞ cotangents from the log-domain
+    segment sums.  The stepwise ``ref`` backward never forms the segment
+    matrix and stays finite on identical inputs (asserted below).  Until
+    the chunked backward clamps its decay factors, tests/models pins
+    ``ref`` mode (see tests/models/conftest.py, which points here)."""
+
+    def _extreme_decay_inputs(self):
+        B, S, H, P, N = 1, 16, 2, 4, 4
+        x = jnp.ones((B, S, H, P), jnp.float32)
+        dt = jnp.full((B, S, H), 3.9, jnp.float32)  # softplus-scale, model-like
+        A = jnp.asarray([-1.0, -16.0], jnp.float32)  # dt*A down to ≈ -62
+        Bm = jnp.ones((B, S, 1, N), jnp.float32)
+        C = jnp.ones((B, S, 1, N), jnp.float32)
+        return x, dt, A, Bm, C
+
+    def test_ref_backward_is_finite_on_extreme_decay(self):
+        x, dt, A, Bm, C = self._extreme_decay_inputs()
+        g = jax.grad(lambda d: jnp.sum(ssd_scan(x, d, A, Bm, C, impl="ref")))(dt)
+        assert bool(jnp.all(jnp.isfinite(g)))
+
+    @pytest.mark.xfail(
+        strict=True,
+        reason="chunked ssd backward: exp(segsum) underflow -> 0*inf NaN in "
+        "dt grads at strongly negative dt*A (shared by pallas modes)",
+    )
+    @pytest.mark.parametrize("impl", ["chunked", "pallas_interpret"])
+    def test_chunked_backward_nan_minimal_repro(self, impl):
+        x, dt, A, Bm, C = self._extreme_decay_inputs()
+        g = jax.grad(lambda d: jnp.sum(ssd_scan(x, d, A, Bm, C, impl=impl)))(dt)
+        assert bool(jnp.all(jnp.isfinite(g)))

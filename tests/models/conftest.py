@@ -2,10 +2,18 @@
 
 These tests pin *architecture* properties (shapes wire up, losses and
 grads are finite) — not kernel dispatch, which tests/kernels and
-tests/core/test_fusion.py cover per mode.  Under the CI kernel-mode
-matrix (``MYIA_KERNEL_MODE=pallas_interpret``) the interpreted ssd_scan
-backward is known to produce NaN gradients at these tiny CPU-sized
-configs, so the ambient mode is pinned to ``ref`` here.
+tests/core/test_fusion.py cover per mode.
+
+Why the pin exists (a DOCUMENTED bug, not a silent dodge): under the CI
+kernel-mode matrix (``MYIA_KERNEL_MODE=pallas_interpret``) the chunked
+ssd_scan *backward* — shared by the ``chunked``/``pallas``/
+``pallas_interpret`` modes — produces NaN ``dt``/``A_log``/``in_proj``
+gradients at these tiny CPU-sized configs: strongly negative ``dt·A``
+underflows the inter-chunk decay ``exp(segsum(·))`` to exact 0 and the
+vjp multiplies 0·∞.  The minimal repro and the mechanism live in
+``tests/kernels/test_ssd_scan.py::TestKnownChunkedBackwardNaN`` as a
+strict xfail — when the chunked backward is fixed, that xfail flips to
+XPASS and this pin should be removed in the same change.
 """
 
 import pytest

@@ -1,0 +1,118 @@
+"""Serving runtime: engine vs full-prefix oracle, bucket-bounded
+compilation, continuous batching.
+
+The hard contract (ISSUE 5 acceptance): a 64-token generation performs
+exactly *buckets*-many decode compilations — never one per generated
+length — and the engine's token streams are identical to the
+full-prefix-recompute oracle (the pre-runtime serving path)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.serve import (
+    ServeEngine,
+    ServeLMDims,
+    bucket_for,
+    init_serve_params,
+    oracle_generate,
+)
+
+DIMS = ServeLMDims(vocab=48, d_model=8, d_hidden=16)
+PARAMS = init_serve_params(DIMS, jax.random.PRNGKey(0))
+
+
+def _prompts(spec, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, DIMS.vocab, n).tolist() for n in spec]
+
+
+class TestBucketing:
+    def test_power_of_two_rounding(self):
+        assert bucket_for(1, min_bucket=16) == 16
+        assert bucket_for(16, min_bucket=16) == 16
+        assert bucket_for(17, min_bucket=16) == 32
+        assert bucket_for(100, min_bucket=16) == 128
+
+    def test_oversize_request_rejected(self):
+        with pytest.raises(ValueError):
+            bucket_for(5000, min_bucket=16, max_bucket=4096)
+
+
+class TestEngineVsOracle:
+    def test_mixed_requests_match_full_prefix_oracle(self):
+        """Continuous batching (4 requests over 2 slots, two buckets)
+        serves every stream identically to per-request O(T²) recompute."""
+        engine = ServeEngine(DIMS, PARAMS, n_slots=2, min_bucket=16)
+        prompts = _prompts([5, 9, 3, 20])
+        max_new = [8, 6, 10, 14]
+        rids = [engine.submit(p, m) for p, m in zip(prompts, max_new)]
+        results = engine.run()
+        fns: dict = {}
+        for rid, prompt, m in zip(rids, prompts, max_new):
+            want = oracle_generate(DIMS, PARAMS, prompt, m, fns=fns)
+            assert results[rid]["tokens"] == want
+        assert sorted(results) == sorted(rids)
+
+    def test_single_token_request(self):
+        engine = ServeEngine(DIMS, PARAMS, n_slots=2, min_bucket=16)
+        prompt = _prompts([6])[0]
+        rid = engine.submit(prompt, 1)
+        results = engine.run()
+        assert results[rid]["tokens"] == oracle_generate(DIMS, PARAMS, prompt, 1)
+
+
+class TestCompilationBudget:
+    def test_64_token_generation_compiles_per_bucket_not_per_length(self):
+        """The acceptance bound: gen=64 ⇒ decode compilations == number of
+        buckets (here 1), not 64."""
+        engine = ServeEngine(DIMS, PARAMS, n_slots=2, min_bucket=16)
+        rid = engine.submit(_prompts([4])[0], 64)  # total 68 → one 128-bucket
+        results = engine.run()
+        assert len(results[rid]["tokens"]) == 64
+        assert engine.buckets_in_use == [128]
+        assert engine.compilations["decode"] == len(engine.buckets_in_use) == 1
+        assert engine.total_compilations == engine.compilation_floor() == 2
+
+    def test_two_buckets_two_decode_specializations(self):
+        engine = ServeEngine(DIMS, PARAMS, n_slots=2, min_bucket=16)
+        for p, m in zip(_prompts([4, 40]), [8, 8]):
+            engine.submit(p, m)
+        engine.run()
+        assert engine.buckets_in_use == [16, 64]
+        assert engine.compilations == {"prefill": 2, "decode": 2}
+        assert engine.total_compilations == engine.compilation_floor()
+
+    def test_same_bucket_requests_share_the_specialization(self):
+        engine = ServeEngine(DIMS, PARAMS, n_slots=2, min_bucket=16)
+        for p in _prompts([3, 5, 7, 4]):
+            engine.submit(p, 6)  # all land in the 16-bucket
+        engine.run()
+        assert engine.total_compilations == 2  # one prefill + one decode
+
+
+class TestContinuousBatching:
+    def test_queue_refills_freed_slots(self):
+        """6 same-bucket requests over 2 slots: early finishers free their
+        slot mid-flight and queued requests ride the SAME running batch —
+        total decode steps must be far below the serial sum."""
+        engine = ServeEngine(DIMS, PARAMS, n_slots=2, min_bucket=32)
+        prompts = _prompts([4, 5, 6, 7, 8, 9])
+        max_new = [12, 4, 12, 4, 12, 4]
+        rids = [engine.submit(p, m) for p, m in zip(prompts, max_new)]
+        results = engine.run()
+        assert sorted(results) == sorted(rids)
+        serial_steps = sum(m - 1 for m in max_new)
+        assert engine.steps < serial_steps
+        fns: dict = {}
+        for rid, prompt, m in zip(rids, prompts, max_new):
+            assert results[rid]["tokens"] == oracle_generate(
+                DIMS, PARAMS, prompt, m, fns=fns
+            )
+
+    def test_ttft_recorded(self):
+        engine = ServeEngine(DIMS, PARAMS, n_slots=2, min_bucket=16)
+        rid = engine.submit(_prompts([4])[0], 4)
+        results = engine.run()
+        assert results[rid]["ttft_s"] >= 0.0
+        assert results[rid]["bucket"] == 16

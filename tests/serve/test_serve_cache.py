@@ -1,0 +1,149 @@
+"""AOT program cache under the serve engine: durable compiled programs.
+
+* In-process cold→warm over one tmpdir cache: the warm engine answers
+  every specialization from disk (hits > 0, zero XLA compiles) and
+  serves identical tokens — this is the CI fast-job smoke.
+* Subprocess cold→warm: a genuine process restart replays serialized
+  executables with **zero recompilations** (the ISSUE 5 acceptance
+  criterion), pinned via the cache counters.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.jax_backend import ProgramCache
+from repro.serve import ServeEngine, ServeLMDims, init_serve_params
+
+_SRC = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", "src")
+)
+
+DIMS = ServeLMDims(vocab=48, d_model=8, d_hidden=16)
+PARAMS = init_serve_params(DIMS, jax.random.PRNGKey(0))
+
+
+def _workload(engine):
+    rng = np.random.default_rng(0)
+    rids = [
+        engine.submit(rng.integers(0, DIMS.vocab, n).tolist(), m)
+        for n, m in [(5, 6), (9, 4), (3, 8)]
+    ]
+    return rids, engine.run()
+
+
+def test_cold_then_warm_in_process(tmp_path):
+    cold_cache = ProgramCache(str(tmp_path))
+    cold = ServeEngine(DIMS, PARAMS, n_slots=2, min_bucket=16, program_cache=cold_cache)
+    _rids, cold_res = _workload(cold)
+    assert cold_cache.stats.misses > 0
+    assert cold_cache.stats.puts == cold_cache.stats.misses
+    assert cold_cache.stats.hits == 0
+
+    warm_cache = ProgramCache(str(tmp_path))
+    warm = ServeEngine(DIMS, PARAMS, n_slots=2, min_bucket=16, program_cache=warm_cache)
+    _rids2, warm_res = _workload(warm)
+    assert warm_cache.stats.hits > 0
+    assert warm_cache.stats.misses == 0
+    assert warm_cache.stats.xla_compiles == 0  # answered purely from disk
+    assert warm_cache.stats.exec_loads == warm_cache.stats.hits
+    for rid in cold_res:
+        assert warm_res[rid]["tokens"] == cold_res[rid]["tokens"]
+
+
+def test_aot_runner_survives_tracer_args_after_eager_call(tmp_path):
+    """The specialization key cannot tell a concrete array from a
+    same-shaped tracer: a MyiaFunction called eagerly first (caching the
+    AOT runner) and then under an outer jit must not hand the compiled
+    executable tracer arguments — it falls back to an ordinary jit."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import P, api
+
+    def f(x, w):
+        return P.reduce_sum(P.tanh(x @ w), None, False)
+
+    g = api.myia(f, program_cache=ProgramCache(str(tmp_path)))
+    x = jnp.ones((4, 8), jnp.float32)
+    w = jnp.ones((8, 8), jnp.float32) * 0.1
+    eager = g(x, w)  # caches the AOT runner for this signature
+    assert getattr(g.specialize((x, w)), "aot", False)
+    traced = jax.jit(lambda x_, w_: g(x_, w_) * 2.0)(x, w)
+    np.testing.assert_allclose(
+        np.asarray(traced), np.asarray(eager) * 2.0, rtol=1e-6
+    )
+
+
+def test_cache_spills_when_over_capacity(tmp_path):
+    cache = ProgramCache(str(tmp_path), max_entries=1)
+    engine = ServeEngine(DIMS, PARAMS, n_slots=2, min_bucket=16, program_cache=cache)
+    rng = np.random.default_rng(0)
+    engine.submit(rng.integers(0, DIMS.vocab, 4).tolist(), 4)    # 16-bucket
+    engine.submit(rng.integers(0, DIMS.vocab, 20).tolist(), 8)   # 32-bucket
+    engine.run()
+    assert cache.stats.puts >= 2
+    assert cache.stats.spills >= 1
+    files = [n for n in os.listdir(tmp_path) if n.endswith(".pkl")]
+    assert len(files) == 1
+
+
+_SUBPROCESS_SCRIPT = textwrap.dedent(
+    """
+    import json, sys
+    import jax, numpy as np
+    from repro.core.jax_backend import ProgramCache
+    from repro.serve import ServeEngine, ServeLMDims, init_serve_params
+
+    dims = ServeLMDims(vocab=48, d_model=8, d_hidden=16)
+    params = init_serve_params(dims, jax.random.PRNGKey(0))
+    cache = ProgramCache(sys.argv[1])
+    engine = ServeEngine(dims, params, n_slots=2, min_bucket=16, program_cache=cache)
+    rng = np.random.default_rng(0)
+    rids = [
+        engine.submit(rng.integers(0, dims.vocab, n).tolist(), m)
+        for n, m in [(5, 6), (9, 4), (3, 8)]
+    ]
+    results = engine.run()
+    print(json.dumps({
+        "stats": cache.stats.as_dict(),
+        "engine": engine.stats(),
+        "tokens": {str(r): results[r]["tokens"] for r in rids},
+    }))
+    """
+)
+
+
+@pytest.mark.slow
+def test_warm_process_restart_zero_recompilations(tmp_path):
+    """The acceptance criterion: the same workload in a fresh process hits
+    the persistent cache for every specialization and performs zero XLA
+    compilations, serving identical tokens."""
+    script = tmp_path / "serve_once.py"
+    script.write_text(_SUBPROCESS_SCRIPT)
+    cachedir = tmp_path / "cache"
+    env = dict(os.environ, PYTHONPATH=_SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    runs = []
+    for _ in range(2):
+        res = subprocess.run(
+            [sys.executable, str(script), str(cachedir)],
+            capture_output=True,
+            text=True,
+            env=env,
+        )
+        assert res.returncode == 0, res.stderr
+        runs.append(json.loads(res.stdout.strip().splitlines()[-1]))
+    cold, warm = runs
+    assert cold["stats"]["misses"] == cold["engine"]["total_compilations"]
+    assert cold["stats"]["xla_compiles"] > 0
+    # warm restart: every lookup hits, nothing compiles
+    assert warm["stats"]["misses"] == 0
+    assert warm["stats"]["xla_compiles"] == 0
+    assert warm["stats"]["hits"] == cold["stats"]["misses"]
+    assert warm["stats"]["exec_loads"] == warm["stats"]["hits"]
+    assert warm["tokens"] == cold["tokens"]
