@@ -1,6 +1,6 @@
 """Serving-runtime benchmark: throughput, TTFT, and the compilation economy.
 
-Two rows on a fixed mixed-length workload (4 requests over 2 slots,
+Three rows on a fixed mixed-length workload (4 requests over 2 slots,
 landing in two power-of-two buckets):
 
 * ``serve_cold`` — fresh tmpdir AOT cache: every specialization is a
@@ -11,6 +11,13 @@ landing in two power-of-two buckets):
 * ``serve_warm`` — same workload, same cache directory, fresh engine +
   cache handle: every lookup hits, ``xla_compiles`` stays 0 and
   ``cache_hit_rate`` is 1.0 (gated as may-only-rise).
+* ``serve_chaos`` — same workload and cache directory under a fixed
+  fault plan (every cache entry garbage-corrupted on first read, the
+  first compile attempt raises): the degraded-mode ladder must absorb
+  every fault — all requests finish ``ok`` with tokens identical to the
+  cold run (``completed_pct`` gated at exactly 100.0), corrupt entries
+  are quarantined (exact count gated), and nothing times out or
+  exhausts the step budget.
 
 Timing fields (tokens/s, TTFT) are reported for the trajectory but not
 gated — cold TTFT is dominated by the pipeline+XLA compile, which is
@@ -27,7 +34,15 @@ import numpy as np
 import jax
 
 from repro.core.jax_backend import ProgramCache
-from repro.serve import ServeEngine, ServeLMDims, init_serve_params
+from repro.serve import (
+    CacheFault,
+    CompileFault,
+    FaultPlan,
+    ServeEngine,
+    ServeLMDims,
+    init_serve_params,
+    inject_faults,
+)
 
 #: the fixed workload: (prompt_len, max_new) per request.  Totals 30, 36,
 #: 48, 64 → buckets {32, 64} at min_bucket=32 → compilation floor 4.
@@ -35,8 +50,13 @@ _REQUESTS = [(6, 24), (12, 24), (24, 24), (40, 24)]
 _MIN_BUCKET = 32
 _N_SLOTS = 2
 
+#: the chaos row's fixed plan: every cached program is corrupted on its
+#: first read and the first fresh-compile attempt raises — the ladder
+#: must quarantine + retry through both without a single lost request.
+_CHAOS_SEED = 0xC0FFEE
 
-def _run_once(cache_dir: str) -> dict:
+
+def _run_once(cache_dir: str) -> tuple[dict, dict]:
     dims = ServeLMDims(vocab=256, d_model=32, d_hidden=64)
     params = init_serve_params(dims, jax.random.PRNGKey(0))
     cache = ProgramCache(cache_dir)
@@ -44,14 +64,17 @@ def _run_once(cache_dir: str) -> dict:
         dims, params, n_slots=_N_SLOTS, min_bucket=_MIN_BUCKET, program_cache=cache
     )
     rng = np.random.default_rng(0)
-    for plen, mx in _REQUESTS:
+    rids = [
         engine.submit(rng.integers(0, dims.vocab, plen).tolist(), mx)
+        for plen, mx in _REQUESTS
+    ]
     t0 = time.monotonic()
     results = engine.run()
     wall = time.monotonic() - t0
     stats = engine.stats()
     cs = cache.stats
-    return {
+    ttfts = [r["ttft_s"] for r in results.values() if r["ttft_s"] is not None]
+    row = {
         "n_slots": _N_SLOTS,
         "min_bucket": _MIN_BUCKET,
         "n_requests": len(_REQUESTS),
@@ -66,15 +89,36 @@ def _run_once(cache_dir: str) -> dict:
         "tokens_generated": stats["tokens_generated"],
         "decode_steps": stats["decode_steps"],
         "tokens_per_s": round(stats["tokens_generated"] / max(wall, 1e-9), 1),
-        "ttft_ms": round(min(r["ttft_s"] for r in results.values()) * 1e3, 2),
+        "ttft_ms": round(min(ttfts) * 1e3, 2) if ttfts else None,
         "wall_s": round(wall, 3),
+        # robustness telemetry (all-zero on the fault-free rows)
+        "timeouts": stats["statuses"]["timeout"],
+        "failed": stats["statuses"]["failed"],
+        "corrupt_entries": cs.corrupt_entries,
+        "quarantined": cs.quarantined,
+        "compile_retries": cs.compile_retries,
+        "vm_fallbacks": cs.vm_fallbacks,
+        "budget_exhausted": stats["budget_exhausted"],
+        "completed_pct": round(100.0 * stats["statuses"]["ok"] / len(rids), 1),
     }
+    tokens = {rid: results[rid]["tokens"] for rid in rids}
+    return row, tokens
 
 
 def run(reps: int = 1) -> list[dict]:
     with tempfile.TemporaryDirectory(prefix="bench-progcache-") as cache_dir:
-        cold = {"workload": "serve_cold", **_run_once(cache_dir)}
-        warm = {"workload": "serve_warm", **_run_once(cache_dir)}
+        cold, cold_tokens = _run_once(cache_dir)
+        cold = {"workload": "serve_cold", **cold}
+        warm, warm_tokens = _run_once(cache_dir)
+        warm = {"workload": "serve_warm", **warm}
+        plan = FaultPlan(
+            seed=_CHAOS_SEED,
+            cache_fault=CacheFault(mode="garbage"),
+            compile_fault=CompileFault(kind="raise", count=1),
+        )
+        with inject_faults(plan):
+            chaos, chaos_tokens = _run_once(cache_dir)
+        chaos = {"workload": "serve_chaos", **chaos}
     # the economics the runtime exists for — fail fast here, not in CI diff
     assert cold["compilations"] == cold["compilation_floor"], (
         f"compilations {cold['compilations']} != bucket floor "
@@ -83,7 +127,13 @@ def run(reps: int = 1) -> list[dict]:
     assert cold["decode_compilations"] == len(cold["buckets"])
     assert warm["xla_compiles"] == 0, "warm cache still compiled"
     assert warm["cache_hit_rate"] == 1.0
-    return [cold, warm]
+    assert warm_tokens == cold_tokens
+    # the robustness contract: faults are absorbed, not surfaced
+    assert chaos["completed_pct"] == 100.0, f"chaos lost requests: {chaos}"
+    assert chaos_tokens == cold_tokens, "degraded mode changed outputs"
+    assert chaos["timeouts"] == 0 and chaos["budget_exhausted"] == 0
+    assert chaos["quarantined"] == chaos["corrupt_entries"] > 0
+    return [cold, warm, chaos]
 
 
 if __name__ == "__main__":

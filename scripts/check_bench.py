@@ -22,9 +22,14 @@ Guarded metrics (rows matched by workload/signature/mesh key):
   extra communication before it shows up on a wall clock),
 * ``BENCH_serve.json``     — ``compilations`` / ``xla_compiles`` at the
   bucket-derived floor (the serving runtime compiles per bucket, never
-  per generated length; deterministic, may only fall) and
+  per generated length; deterministic, may only fall),
   ``cache_hit_rate`` (may only RISE: the warm row losing hits means the
-  AOT program cache key or serialization went unstable).
+  AOT program cache key or serialization went unstable), and the
+  robustness row: ``timeouts`` / ``corrupt_entries`` / ``vm_fallbacks``
+  / ``budget_exhausted`` are deterministic under the fixed fault seed
+  and may only fall, while ``completed_pct`` may only rise — the chaos
+  workload finishing below 100% means the degraded-mode ladder dropped
+  a request.
 
 Rows present only in the fresh file (new benchmarks) pass; rows present
 only at HEAD (removed benchmarks) fail — deleting a regressing benchmark
@@ -90,15 +95,30 @@ GUARDS: dict[str, tuple[tuple[str, ...], list[tuple[str, float]]]] = {
             ("decode_compilations", 0.0),
             ("xla_compiles", 0.0),
             ("cache_hit_rate", 0.0, "higher"),
+            # robustness counters (chaos row runs under a FIXED fault
+            # seed, so these are deterministic too): fault impact may
+            # only shrink, and degraded-mode completion may only rise
+            ("timeouts", 0.0),
+            ("corrupt_entries", 0.0),
+            ("vm_fallbacks", 0.0),
+            ("budget_exhausted", 0.0),
+            ("completed_pct", 0.0, "higher"),
         ],
     ),
 }
 
 
 def _baseline(fname: str) -> list[dict] | None:
-    res = subprocess.run(
-        ["git", "show", f"HEAD:{fname}"], capture_output=True, text=True
-    )
+    """The committed rows for ``fname``, or None when there is nothing to
+    gate against: a fresh BENCH_*.json not yet at HEAD (a brand-new
+    metric family lands gate-green and becomes the baseline once
+    committed), no git repo, or no git binary at all."""
+    try:
+        res = subprocess.run(
+            ["git", "show", f"HEAD:{fname}"], capture_output=True, text=True
+        )
+    except OSError:
+        return None  # git itself unavailable: report-only mode
     if res.returncode != 0:
         return None  # file not committed yet: nothing to gate against
     try:
@@ -119,7 +139,10 @@ def check_file(fname: str, tol: float) -> list[str]:
         fresh = _rows_by_key(json.load(f), key_fields)
     base_rows = _baseline(fname)
     if base_rows is None:
-        print(f"  {fname}: no committed baseline — skipping")
+        print(
+            f"  {fname}: no committed baseline (new metric family or no "
+            "git history) — reporting only, gate arms on next commit"
+        )
         return []
     base = _rows_by_key(base_rows, key_fields)
     failures: list[str] = []

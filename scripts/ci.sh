@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# CI entry point: lint → tier-1 tests → quick benchmarks → bench gate.
+# CI entry point: lint → tier-1 tests → serve smoke + chaos corpus →
+# quick benchmarks → bench gate.
 #
 #   scripts/ci.sh                 # everything (the CI "full" job)
 #   SKIP_SLOW=1 SKIP_BENCH=1 scripts/ci.sh   # the CI "fast" job (minutes)
@@ -46,6 +47,12 @@ with tempfile.TemporaryDirectory(prefix="ci-progcache-") as d:
     assert outs[0] == outs[1], "warm serve diverged from cold serve"
 print("  serve smoke OK")
 PY
+
+echo "== chaos corpus (deterministic fault injection, fixed seed) =="
+# part of every job, fast included: the chaos tests use explicit
+# fire-at-step fault plans (seed 0xC0FFEE feeds only the garbage bytes),
+# so this run is deterministic — a flake here is a real robustness bug.
+python -m pytest -q -m "not slow" tests/serve/test_chaos.py
 
 if [ "${SKIP_SLOW:-0}" != "1" ]; then
   echo "== slow suite (multi-device subprocess corpus) =="

@@ -286,6 +286,7 @@ class MyiaFunction:
             # AOT tier: durable compiled artifact, answered from the
             # persistent cache when this program was compiled before (by
             # this process or any earlier one)
+            from .jax_backend import CompileFailed
             from .serialize import SerializeError
 
             try:
@@ -294,6 +295,21 @@ class MyiaFunction:
                 )
             except SerializeError:
                 pass  # not durable (exotic constants): ordinary tiers
+            except CompileFailed:
+                # bottom rung of the degraded-mode ladder: XLA would not
+                # compile this specialization even after bounded retries
+                # (docs/serving.md).  The reference VM evaluates the same
+                # optimized graph eagerly — no XLA on the critical path,
+                # slow but correct — and the downgrade is counted so a
+                # serving fleet can alarm on it.
+                self.program_cache.stats.vm_fallbacks += 1
+
+                def runner(*args):
+                    return VM().call(g, args)
+
+                runner.lowered = False
+                runner.degraded = "vm_oracle"
+                return runner
             else:
                 # the specialization key cannot tell a concrete array from
                 # a same-shaped tracer, so this runner may later be handed

@@ -55,6 +55,7 @@ from .vm import VM
 
 __all__ = [
     "CacheStats",
+    "CompileFailed",
     "ProgramCache",
     "compile_graph",
     "compile_graph_spmd",
@@ -62,6 +63,28 @@ __all__ = [
     "lower_graph",
     "lowering_blockers",
 ]
+
+
+class CompileFailed(Exception):
+    """XLA compilation failed after the cache's bounded retries.
+
+    The next rung of the degraded-mode ladder (``api.MyiaFunction``)
+    catches this and falls back to the VM oracle — slow, but alive and
+    correct (see docs/serving.md, "Failure modes & degraded operation").
+    """
+
+
+def _fault_hooks():
+    """The serving fault-injection hooks, or None outside chaos runs.
+
+    Imported lazily: ``repro.serve`` depends on ``repro.core``, so a
+    module-level import here would be circular — and the cache/compile
+    paths are cold enough that the cached-module lookup is free."""
+    try:
+        from repro.serve import faults
+    except ImportError:  # pragma: no cover - serve tier absent
+        return None
+    return faults
 
 
 def trace_graph(graph: Graph) -> Callable:
@@ -215,11 +238,31 @@ class CacheStats:
       this at 0 — pinned by the serve subprocess test),
     * ``puts`` / ``spills`` — entries written / evicted (LRU by mtime when
       over ``max_entries``),
-    * ``errors`` — corrupt/incompatible entries or failed executable
-      serializations (never fatal: the cache degrades to recompiling).
+    * ``errors`` — every degradation event, in aggregate (never fatal:
+      the cache degrades to recompiling), classified further as:
+
+      - ``corrupt_entries`` — entries whose payload would not decode
+        (truncated/garbage pickle, undeserializable graph).  Each is
+        **quarantined** (renamed to ``*.quarantined``, counted in
+        ``quarantined``) so it is never re-read and never fatal,
+      - ``io_errors`` — OS-level read/write failures (permissions, disk
+        full, vanished files): the *file system* misbehaving, as opposed
+        to the *bytes* being wrong,
+      - the remainder of ``errors`` is benign degradation: foreign/stale
+        executable blobs rebuilt from the graph payload, non-durable
+        graphs served from memory only.
+
+    * ``compile_retries`` / ``vm_fallbacks`` — the degraded-mode ladder:
+      failed XLA compiles retried (bounded by ``max_compile_retries``),
+      and specializations that exhausted retries and were handed to the
+      VM oracle by ``api.MyiaFunction`` (see docs/serving.md).
     """
 
-    __slots__ = ("hits", "misses", "exec_loads", "xla_compiles", "puts", "spills", "errors")
+    __slots__ = (
+        "hits", "misses", "exec_loads", "xla_compiles", "puts", "spills",
+        "errors", "corrupt_entries", "io_errors", "quarantined",
+        "compile_retries", "vm_fallbacks",
+    )
 
     def __init__(self) -> None:
         self.hits = 0
@@ -229,6 +272,11 @@ class CacheStats:
         self.puts = 0
         self.spills = 0
         self.errors = 0
+        self.corrupt_entries = 0
+        self.io_errors = 0
+        self.quarantined = 0
+        self.compile_retries = 0
+        self.vm_fallbacks = 0
 
     @property
     def hit_rate(self) -> float:
@@ -244,6 +292,11 @@ class CacheStats:
             "puts": self.puts,
             "spills": self.spills,
             "errors": self.errors,
+            "corrupt_entries": self.corrupt_entries,
+            "io_errors": self.io_errors,
+            "quarantined": self.quarantined,
+            "compile_retries": self.compile_retries,
+            "vm_fallbacks": self.vm_fallbacks,
             "hit_rate": round(self.hit_rate, 4),
         }
 
@@ -304,9 +357,14 @@ class ProgramCache:
     Counters are surfaced on ``.stats`` like ``OptStats``.
     """
 
-    def __init__(self, path: str, *, max_entries: int = 256) -> None:
+    def __init__(
+        self, path: str, *, max_entries: int = 256, max_compile_retries: int = 1
+    ) -> None:
         self.path = os.path.abspath(path)
         self.max_entries = max_entries
+        #: bounded retry for failed XLA compiles (rung 2 of the ladder);
+        #: past it, :class:`CompileFailed` hands the caller to the VM rung
+        self.max_compile_retries = max_compile_retries
         self.stats = CacheStats()
         os.makedirs(self.path, exist_ok=True)
 
@@ -363,7 +421,7 @@ class ProgramCache:
         avals = _avals(example_args)
         entry = self._read(key)
         if entry is not None:
-            runner = self._from_entry(entry, avals, fuse=fuse)
+            runner = self._from_entry(entry, avals, fuse=fuse, fpath=self._file(key))
             if runner is not None:
                 self.stats.hits += 1
                 runner.cache_key = key
@@ -373,28 +431,87 @@ class ProgramCache:
         fn = lowered_fn if lowered_fn is not None else try_lower(graph, fuse=fuse)
         if fn is None:
             raise SerializeError(f"graph {graph.name} does not lower (VM fallback)")
-        compiled = jax.jit(fn).lower(*avals).compile()
-        self.stats.xla_compiles += 1
+        compiled = self._compile(fn, avals, tag=f"fresh:{graph.name}")
         self._write(key, graph, compiled)
         runner = _aot_runner(compiled)
         runner.cache_key = key
         return runner
 
     # -- internals ---------------------------------------------------------
+    def _compile(self, fn: Callable, avals: tuple, *, tag: str) -> Any:
+        """One XLA compile, with bounded retry (rung 2 of the ladder).
+
+        Transient compile failures (injected by the chaos harness; OOM /
+        backend flakes in the wild) are retried up to
+        ``max_compile_retries`` times; a persistent failure raises
+        :class:`CompileFailed` so the caller can take the VM rung."""
+        fh = _fault_hooks()
+        last: Exception | None = None
+        for attempt in range(self.max_compile_retries + 1):
+            if attempt:
+                self.stats.compile_retries += 1
+            try:
+                if fh is not None:
+                    fh.on_compile(tag)
+                compiled = jax.jit(fn).lower(*avals).compile()
+            except Exception as e:
+                last = e
+                continue
+            self.stats.xla_compiles += 1
+            return compiled
+        raise CompileFailed(
+            f"XLA compile of {tag} failed after "
+            f"{self.max_compile_retries + 1} attempts"
+        ) from last
+
+    def _quarantine(self, fpath: str) -> None:
+        """Rename a corrupt entry aside: ``<key>.pkl.quarantined`` no
+        longer matches the ``.pkl`` suffix, so it is never re-read (and
+        never re-written over — the key's next ``_write`` creates a
+        fresh ``.pkl``).  Quarantine failure degrades to deletion; both
+        paths leave the cache consistent and the process alive."""
+        self.stats.corrupt_entries += 1
+        self.stats.errors += 1
+        try:
+            os.replace(fpath, fpath + ".quarantined")
+            self.stats.quarantined += 1
+        except OSError:
+            try:
+                os.unlink(fpath)
+                self.stats.quarantined += 1
+            except OSError:
+                self.stats.io_errors += 1
+
     def _read(self, key: str) -> dict | None:
         fpath = self._file(key)
         if not os.path.exists(fpath):
             return None
+        fh = _fault_hooks()
+        if fh is not None:
+            fh.on_cache_read(fpath)
         try:
             with open(fpath, "rb") as f:
                 entry = pickle.load(f)
-            os.utime(fpath)  # LRU touch
-            return entry
-        except Exception:
+        except OSError:
+            self.stats.io_errors += 1
             self.stats.errors += 1
             return None
+        except Exception:
+            # truncated / garbage bytes: the entry itself is poison
+            self._quarantine(fpath)
+            return None
+        if not isinstance(entry, dict) or "graph" not in entry:
+            self._quarantine(fpath)  # decoded, but not a cache entry
+            return None
+        try:
+            os.utime(fpath)  # LRU touch
+        except OSError:
+            self.stats.io_errors += 1
+        return entry
 
-    def _from_entry(self, entry: dict, avals: tuple, *, fuse: bool) -> Callable | None:
+    def _from_entry(
+        self, entry: dict, avals: tuple, *, fuse: bool, fpath: str | None = None
+    ) -> Callable | None:
         if entry.get("exec") is not None:
             try:
                 from jax.experimental import serialize_executable
@@ -408,12 +525,21 @@ class ProgramCache:
                 self.stats.errors += 1  # foreign/stale executable: rebuild
         try:
             g = deserialize_graph(entry["graph"])
+        except Exception:
+            # exec blob unusable AND graph payload undecodable: corrupt
+            if fpath is not None:
+                self._quarantine(fpath)
+            else:
+                self.stats.corrupt_entries += 1
+                self.stats.errors += 1
+            return None
+        try:
             fn = try_lower(g, fuse=fuse)
             if fn is None:
                 return None
-            compiled = jax.jit(fn).lower(*avals).compile()
-            self.stats.xla_compiles += 1
-            return _aot_runner(compiled)
+            return _aot_runner(self._compile(fn, avals, tag=f"entry:{g.name}"))
+        except CompileFailed:
+            raise
         except Exception:
             self.stats.errors += 1
             return None
@@ -439,8 +565,12 @@ class ProgramCache:
                 pickle.dump(entry, f)
             os.replace(tmp, self._file(key))
             self.stats.puts += 1
-        except Exception:
+        except Exception as e:
+            # disk full / permissions / unpicklable tree — the write layer,
+            # not the entry bytes
             self.stats.errors += 1
+            if isinstance(e, OSError):
+                self.stats.io_errors += 1
             if tmp is not None:  # don't leak .tmp files into the cache dir
                 try:
                     os.unlink(tmp)
@@ -464,6 +594,7 @@ class ProgramCache:
                 self.stats.spills += 1
         except OSError:
             self.stats.errors += 1
+            self.stats.io_errors += 1
 
 
 def _aot_runner(compiled: Any) -> Callable:

@@ -71,6 +71,20 @@ def main(argv=None) -> int:
         default="artifacts/progcache",
         help="myia: persistent AOT program cache directory ('' disables)",
     )
+    ap.add_argument(
+        "--deadline",
+        type=float,
+        default=None,
+        help="myia: per-request deadline in seconds (requests past it "
+        "finish with status 'timeout', partial tokens kept)",
+    )
+    ap.add_argument(
+        "--max-queue",
+        type=int,
+        default=None,
+        help="myia: admission-control bound on queued requests; submits "
+        "past it are rejected with reason 'queue_full' instead of queued",
+    )
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -144,6 +158,8 @@ def _serve_myia_engine(args, cfg) -> int:
         n_slots=args.slots,
         min_bucket=args.min_bucket,
         program_cache=cache,
+        default_deadline_s=args.deadline,
+        max_queue=args.max_queue,
     )
 
     rng = np.random.default_rng(0)
@@ -157,18 +173,31 @@ def _serve_myia_engine(args, cfg) -> int:
     wall = time.monotonic() - t0
 
     stats = engine.stats()
-    ttft = min(r["ttft_s"] for r in results.values())
+    ttfts = [r["ttft_s"] for r in results.values() if r["ttft_s"] is not None]
+    ttft_txt = f"ttft {min(ttfts) * 1e3:.1f}ms" if ttfts else "ttft n/a"
     print(
         f"[myia/engine] {args.batch} reqs × (prompt {args.prompt_len} + gen "
         f"{args.gen}) in {wall:.3f}s ({stats['tokens_generated'] / max(wall, 1e-9):.1f} tok/s, "
-        f"ttft {ttft * 1e3:.1f}ms)"
+        f"{ttft_txt})"
     )
     print(
         f"[myia/engine] buckets {stats['buckets_in_use']}, compilations "
         f"{stats['compilations']} (floor {stats['compilation_floor']})"
     )
+    print(
+        f"[myia/engine] statuses {stats['statuses']}, rejected "
+        f"{stats['rejected']}, queue peak {stats['queue_peak']}"
+    )
     if cache is not None:
-        print(f"[myia/engine] program cache: {cache.stats.as_dict()}")
+        cs = cache.stats.as_dict()
+        print(f"[myia/engine] program cache: {cs}")
+        degraded = {
+            k: cs[k]
+            for k in ("corrupt_entries", "quarantined", "compile_retries", "vm_fallbacks")
+            if cs.get(k)
+        }
+        if degraded:
+            print(f"[myia/engine] DEGRADED-MODE events: {degraded}")
     print("sample generations (token ids):")
     for rid, _prompt in submitted[:2]:
         print("  ", results[rid]["tokens"][:16])
@@ -176,6 +205,8 @@ def _serve_myia_engine(args, cfg) -> int:
     if args.check_oracle:
         fns: dict = {}
         for rid, prompt in submitted:
+            if results[rid]["status"] != "ok":
+                continue  # timeout/failed streams are partial by contract
             want = oracle_generate(dims, params, prompt, args.gen, fns=fns)
             got = results[rid]["tokens"]
             assert got == want, f"engine diverged from full-prefix oracle on rid {rid}"

@@ -7,12 +7,30 @@ cache (``repro.core.jax_backend.ProgramCache``), and replayed across
 process restarts with zero recompilation.  See docs/serving.md.
 """
 
-from .engine import Request, ServeEngine, bucket_for, oracle_generate  # noqa: F401
+from .engine import (  # noqa: F401
+    DeadlineExceeded,
+    NumericalFault,
+    Request,
+    RequestRejected,
+    ServeEngine,
+    ServeError,
+    bucket_for,
+    oracle_generate,
+)
+from .faults import (  # noqa: F401
+    CacheFault,
+    CompileFault,
+    DecodeNaN,
+    FaultPlan,
+    StepDelay,
+    inject_faults,
+)
 from .model import (  # noqa: F401
     ServeLMDims,
     build_decode_step,
     build_prefill,
     causal_mask,
     decode_masks,
+    finite_lanes,
     init_serve_params,
 )

@@ -45,6 +45,7 @@ __all__ = [
     "init_serve_params",
     "causal_mask",
     "decode_masks",
+    "finite_lanes",
 ]
 
 #: serving reuses the train-side dims object (vocab, d_model, d_hidden)
@@ -168,3 +169,17 @@ def decode_masks(pos, bucket: int):
     wcol = (ar[None, :] == pos[:, None])[:, :, None]
     amask = (ar[None, :] <= pos[:, None])[:, None, :]
     return wcol, amask
+
+
+def finite_lanes(logits) -> np.ndarray:
+    """Per-lane NaN/inf sentinel: (B, …, V) logits → (B,) bool, True where
+    the lane's logits are all finite.  Every op in the serve model is
+    lane-local (per-row matmuls, per-slot attention over the lane's own
+    KV rows), so a non-finite lane is *contained*: the engine fails only
+    that slot (:class:`repro.serve.engine.NumericalFault`) and the other
+    lanes' streams stay bit-identical to an unpoisoned run — the chaos
+    corpus pins this."""
+    import jax.numpy as jnp
+
+    axes = tuple(range(1, logits.ndim))
+    return np.asarray(jnp.isfinite(logits).all(axis=axes))

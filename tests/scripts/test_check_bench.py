@@ -1,0 +1,130 @@
+"""Unit tests for the CI bench gate (``scripts/check_bench.py``).
+
+The gate's failure matrix is easy to get silently wrong (a gate that
+never fires is worse than none), so each branch is pinned against a
+throwaway git repo:
+
+* worktree-only BENCH file (new metric family, nothing at HEAD) → pass,
+* row removed from the fresh file → fail (deleting a regressing
+  benchmark must not green the gate),
+* deterministic counter rising (timeouts 0 → 1) → fail, exact compare,
+* "higher"-direction metric falling (completed_pct 100 → 90) → fail,
+* not a git repo at all → report-only pass.
+"""
+
+import importlib.util
+import json
+import os
+import subprocess
+
+import pytest
+
+_SCRIPT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", "scripts", "check_bench.py")
+)
+
+
+def _load_module():
+    spec = importlib.util.spec_from_file_location("check_bench", _SCRIPT)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture()
+def cb():
+    return _load_module()
+
+
+def _git(repo, *args):
+    subprocess.run(
+        ["git", "-c", "user.email=ci@test", "-c", "user.name=ci", *args],
+        cwd=repo,
+        check=True,
+        capture_output=True,
+    )
+
+
+BASE_ROWS = [
+    {
+        "workload": "serve_chaos",
+        "compilations": 4,
+        "xla_compiles": 4,
+        "cache_hit_rate": 0.0,
+        "timeouts": 0,
+        "corrupt_entries": 4,
+        "vm_fallbacks": 0,
+        "budget_exhausted": 0,
+        "completed_pct": 100.0,
+    }
+]
+
+
+@pytest.fixture()
+def repo(tmp_path, monkeypatch):
+    _git(tmp_path, "init", "-q")
+    monkeypatch.chdir(tmp_path)
+    return tmp_path
+
+
+def _write(repo, rows):
+    (repo / "BENCH_serve.json").write_text(json.dumps(rows))
+
+
+def _commit(repo, rows):
+    _write(repo, rows)
+    _git(repo, "add", "BENCH_serve.json")
+    _git(repo, "commit", "-q", "-m", "baseline")
+
+
+def test_worktree_only_file_passes(cb, repo):
+    """A BENCH file present in the worktree but absent at HEAD (a brand
+    new metric family) must not trip the gate — it becomes the baseline
+    when committed."""
+    _git(repo, "commit", "-q", "--allow-empty", "-m", "empty")
+    _write(repo, BASE_ROWS)
+    assert cb.check_file("BENCH_serve.json", tol=0.25) == []
+
+
+def test_removed_row_fails(cb, repo):
+    _commit(repo, BASE_ROWS)
+    _write(repo, [])
+    failures = cb.check_file("BENCH_serve.json", tol=0.25)
+    assert len(failures) == 1 and "missing now" in failures[0]
+
+
+def test_deterministic_counter_rise_fails(cb, repo):
+    """timeouts 0 → 1 is within any relative tolerance but must still
+    fail: floor-0.0 counters are compared exactly."""
+    _commit(repo, BASE_ROWS)
+    worse = [dict(BASE_ROWS[0], timeouts=1)]
+    _write(repo, worse)
+    failures = cb.check_file("BENCH_serve.json", tol=0.25)
+    assert len(failures) == 1
+    assert "timeouts rose" in failures[0]
+
+
+def test_higher_direction_fall_fails(cb, repo):
+    _commit(repo, BASE_ROWS)
+    worse = [dict(BASE_ROWS[0], completed_pct=90.0)]
+    _write(repo, worse)
+    failures = cb.check_file("BENCH_serve.json", tol=0.25)
+    assert len(failures) == 1
+    assert "completed_pct fell" in failures[0]
+    assert "may only rise" in failures[0]
+
+
+def test_unchanged_rows_pass(cb, repo):
+    _commit(repo, BASE_ROWS)
+    assert cb.check_file("BENCH_serve.json", tol=0.25) == []
+
+
+def test_no_git_repo_is_report_only(cb, tmp_path, monkeypatch):
+    """Outside any git repo, _baseline returns None and the gate runs in
+    report-only mode instead of crashing."""
+    plain = tmp_path / "plain"
+    plain.mkdir()
+    monkeypatch.chdir(plain)
+    _write(plain, BASE_ROWS)
+    assert cb._baseline("BENCH_serve.json") is None
+    assert cb.check_file("BENCH_serve.json", tol=0.25) == []

@@ -93,6 +93,134 @@ def test_cache_spills_when_over_capacity(tmp_path):
     assert len(files) == 1
 
 
+def _tiny_fn():
+    from repro.core import P
+
+    def f(x, w):
+        return P.reduce_sum(P.tanh(x @ w), None, False)
+
+    return f
+
+
+def test_truncated_entry_quarantined_on_load(tmp_path):
+    """A truncated entry file is classified corrupt, renamed aside
+    (``*.quarantined``) so it is never re-read, and recompiled around —
+    the caller sees a plain miss, never an exception."""
+    import jax.numpy as jnp
+    from repro.core import api
+
+    x = jnp.ones((4, 8), jnp.float32)
+    w = jnp.full((8, 8), 0.1, jnp.float32)
+    cache = ProgramCache(str(tmp_path))
+    mf = api.myia(_tiny_fn(), program_cache=cache)
+    want = np.asarray(mf(x, w))
+    (entry,) = [n for n in os.listdir(tmp_path) if n.endswith(".pkl")]
+    with open(tmp_path / entry, "r+b") as f:
+        f.truncate(16)
+
+    cache2 = ProgramCache(str(tmp_path))
+    mf2 = api.myia(_tiny_fn(), program_cache=cache2)
+    got = np.asarray(mf2(x, w))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    assert cache2.stats.corrupt_entries == 1
+    assert cache2.stats.quarantined == 1
+    assert cache2.stats.hits == 0 and cache2.stats.misses == 1
+    names = set(os.listdir(tmp_path))
+    assert entry + ".quarantined" in names  # renamed aside …
+    assert entry in names  # … and the key re-written fresh by the miss
+
+    cache3 = ProgramCache(str(tmp_path))
+    mf3 = api.myia(_tiny_fn(), program_cache=cache3)
+    np.testing.assert_allclose(np.asarray(mf3(x, w)), want, rtol=1e-6)
+    assert cache3.stats.hits == 1  # the re-written entry answers
+    assert cache3.stats.corrupt_entries == 0  # quarantine was never re-read
+
+
+_RACE_SCRIPT = textwrap.dedent(
+    """
+    import json, os, sys
+    import jax.numpy as jnp
+    from repro.core import P, api
+    from repro.core.jax_backend import ProgramCache
+
+    cachedir, iters = sys.argv[1], int(sys.argv[2])
+    cache = ProgramCache(cachedir)
+
+    def f(x, w):
+        return P.reduce_sum(P.tanh(x @ w), None, False)
+
+    mf = api.myia(f, program_cache=cache)
+    x = jnp.ones((4, 8), jnp.float32)
+    w = jnp.full((8, 8), 0.1, jnp.float32)
+    key = None
+    for _ in range(iters):
+        # churn the one shared key: unlink, then re-specialize (miss ->
+        # compile -> atomic _write), racing the sibling process's
+        # reads/writes of the same file
+        if key is not None:
+            try:
+                os.unlink(os.path.join(cachedir, key + ".pkl"))
+            except FileNotFoundError:
+                pass
+        mf._specializations.clear()
+        runner = mf.specialize((x, w))
+        key = getattr(runner, "cache_key", None)
+        assert key is not None, "specialization left the AOT tier"
+        float(runner(x, w))  # and the program actually runs
+    print(json.dumps(cache.stats.as_dict()))
+    """
+)
+
+
+@pytest.mark.slow
+def test_concurrent_same_key_writers_last_writer_wins(tmp_path):
+    """Two processes churn the SAME cache key concurrently (unlink +
+    re-write through ``_write``'s tmpfile + atomic rename).  Torn reads
+    would surface as ``corrupt_entries``/``quarantined`` in either
+    process; the survivor entry must be a clean, loadable last-writer
+    artifact."""
+    script = tmp_path / "race.py"
+    script.write_text(_RACE_SCRIPT)
+    cachedir = tmp_path / "cache"
+    cachedir.mkdir()
+    env = dict(os.environ, PYTHONPATH=_SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    procs = [
+        subprocess.Popen(
+            [sys.executable, str(script), str(cachedir), "12"],
+            stdout=subprocess.PIPE,
+            stderr=subprocess.PIPE,
+            text=True,
+            env=env,
+        )
+        for _ in range(2)
+    ]
+    stats = []
+    for p in procs:
+        out, err = p.communicate(timeout=600)
+        assert p.returncode == 0, err
+        stats.append(json.loads(out.strip().splitlines()[-1]))
+    for s in stats:
+        # atomic rename ⇒ no reader ever saw a half-written entry
+        assert s["corrupt_entries"] == 0, s
+        assert s["quarantined"] == 0, s
+        assert s["puts"] > 0, s
+    # no tmpfile leaks, and exactly the one (last-written) entry survives
+    names = os.listdir(cachedir)
+    assert not [n for n in names if n.endswith(".tmp")], names
+    assert len([n for n in names if n.endswith(".pkl")]) == 1, names
+
+    import jax.numpy as jnp
+    from repro.core import api
+
+    cache = ProgramCache(str(cachedir))
+    mf = api.myia(_tiny_fn(), program_cache=cache)
+    x = jnp.ones((4, 8), jnp.float32)
+    w = jnp.full((8, 8), 0.1, jnp.float32)
+    val = float(mf(x, w))
+    assert cache.stats.hits == 1 and cache.stats.corrupt_entries == 0
+    assert np.isfinite(val)
+
+
 _SUBPROCESS_SCRIPT = textwrap.dedent(
     """
     import json, sys
