@@ -21,6 +21,7 @@ from repro.core.api import compile_pipeline
 from repro.core.infer import abstract_of_value
 from repro.core.jax_backend import compile_graph
 from repro.launch.myia_step import MyiaLMDims, build_lm_loss, init_lm_params
+from repro.obs import trace as obs_trace
 
 
 def _cube(x):
@@ -79,9 +80,20 @@ def run(reps: int = 30) -> list[dict]:
 
     rows = []
     for name, g, args in workloads:
+        tracer = obs_trace.Tracer()
         t0 = time.perf_counter()
-        og = compile_pipeline(g, tuple(abstract_of_value(a) for a in args))
+        with obs_trace.tracing(tracer):
+            og = compile_pipeline(g, tuple(abstract_of_value(a) for a in args))
         pipeline_s = time.perf_counter() - t0
+        # phase breakdown from the direct children of the compile_pipeline
+        # span; its sum must reproduce the end-to-end wall time (no phase
+        # is unaccounted for) — a >10% gap means an instrumentation hole
+        phase_ms = tracer.phase_totals_ms("compile_pipeline")
+        phase_total = sum(phase_ms.values())
+        assert abs(phase_total - pipeline_s * 1e3) <= 0.10 * pipeline_s * 1e3, (
+            f"{name}: phase sum {phase_total:.1f}ms vs pipeline "
+            f"{pipeline_s * 1e3:.1f}ms (>10% unaccounted)"
+        )
         compiled = compile_graph(og)
         first, steady = _time_runner(compiled, args, reps)
         # VM baseline: the same optimized graph traced through the
@@ -93,6 +105,8 @@ def run(reps: int = 30) -> list[dict]:
                 "workload": name,
                 "vm_fallback": 0 if compiled.lowered else 1,
                 "pipeline_ms": round(pipeline_s * 1e3, 1),
+                "pipeline_phase_ms": {k: round(v, 1) for k, v in phase_ms.items()},
+                "pipeline_phase_total_ms": round(phase_total, 1),
                 "compile_first_ms": round(first * 1e3, 2),
                 "steady_us": round(steady * 1e6, 1),
                 "vm_trace_first_ms": round(vm_first * 1e3, 2),

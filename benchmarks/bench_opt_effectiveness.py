@@ -19,6 +19,7 @@ from repro.core.infer import abstract_of_value
 from repro.core.lowering import lowering_blockers
 from repro.core.opt import OptStats, count_nodes
 from repro.core.primitives import tanh as _tanh
+from repro.obs import metrics as obs_metrics
 
 
 def cube(x):
@@ -87,15 +88,29 @@ def run() -> list[dict]:
             g_opt.graph, (abstract_of_value(arg),), stats=stats
         )
         after = count_nodes(opt_graph)
+        # one read through the unified schema instead of four attribute
+        # spellings: OptStats is absorbed via its as_dict(), keys come out
+        # flat and dotted (opt.total_rewrites, opt.rule_hits.<rule>, ...)
+        snap = obs_metrics.snapshot(opt=stats)
         row = {
             "case": name,
             "nodes_after_ad": before,
             "nodes_after_opt": after,
             "reduction": f"{before / after:.1f}×",
-            "rewrites": stats.total_rewrites,
-            "inlined_calls": stats.inlined_calls,
-            "worklist_pops": stats.worklist_pops,
-            "verify_sweep_hits": stats.verify_sweep_hits,
+            "rewrites": snap["opt.total_rewrites"],
+            "inlined_calls": snap["opt.inlined_calls"],
+            "worklist_pops": snap["opt.worklist_pops"],
+            "verify_sweep_hits": snap["opt.verify_sweep_hits"],
+            "top_rules": dict(
+                sorted(
+                    (
+                        (k.split(".", 2)[2], v)
+                        for k, v in snap.items()
+                        if k.startswith("opt.rule_hits.")
+                    ),
+                    key=lambda kv: -kv[1],
+                )[:5]
+            ),
             "lowerable": not lowering_blockers(opt_graph),
         }
         if hand is not None:

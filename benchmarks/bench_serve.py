@@ -34,6 +34,7 @@ import numpy as np
 import jax
 
 from repro.core.jax_backend import ProgramCache
+from repro.obs import metrics as obs_metrics
 from repro.serve import (
     CacheFault,
     CompileFault,
@@ -71,35 +72,37 @@ def _run_once(cache_dir: str) -> tuple[dict, dict]:
     t0 = time.monotonic()
     results = engine.run()
     wall = time.monotonic() - t0
-    stats = engine.stats()
-    cs = cache.stats
+    # every counter below comes off the unified dotted-key snapshot —
+    # CacheStats and the engine stats dict are absorbed through one schema
+    # (the row keys stay as-is: check_bench gates them by exact name)
+    snap = obs_metrics.snapshot(cache=cache.stats, serve=engine.stats())
     ttfts = [r["ttft_s"] for r in results.values() if r["ttft_s"] is not None]
     row = {
         "n_slots": _N_SLOTS,
         "min_bucket": _MIN_BUCKET,
         "n_requests": len(_REQUESTS),
-        "buckets": stats["buckets_in_use"],
-        "compilations": stats["total_compilations"],
-        "decode_compilations": stats["compilations"]["decode"],
-        "compilation_floor": stats["compilation_floor"],
-        "xla_compiles": cs.xla_compiles,
-        "cache_hit_rate": round(cs.hit_rate, 4),
-        "cache_hits": cs.hits,
-        "cache_misses": cs.misses,
-        "tokens_generated": stats["tokens_generated"],
-        "decode_steps": stats["decode_steps"],
-        "tokens_per_s": round(stats["tokens_generated"] / max(wall, 1e-9), 1),
+        "buckets": snap["serve.buckets_in_use"],
+        "compilations": snap["serve.total_compilations"],
+        "decode_compilations": snap["serve.compilations.decode"],
+        "compilation_floor": snap["serve.compilation_floor"],
+        "xla_compiles": snap["cache.xla_compiles"],
+        "cache_hit_rate": snap["cache.hit_rate"],
+        "cache_hits": snap["cache.hits"],
+        "cache_misses": snap["cache.misses"],
+        "tokens_generated": snap["serve.tokens_generated"],
+        "decode_steps": snap["serve.decode_steps"],
+        "tokens_per_s": round(snap["serve.tokens_generated"] / max(wall, 1e-9), 1),
         "ttft_ms": round(min(ttfts) * 1e3, 2) if ttfts else None,
         "wall_s": round(wall, 3),
         # robustness telemetry (all-zero on the fault-free rows)
-        "timeouts": stats["statuses"]["timeout"],
-        "failed": stats["statuses"]["failed"],
-        "corrupt_entries": cs.corrupt_entries,
-        "quarantined": cs.quarantined,
-        "compile_retries": cs.compile_retries,
-        "vm_fallbacks": cs.vm_fallbacks,
-        "budget_exhausted": stats["budget_exhausted"],
-        "completed_pct": round(100.0 * stats["statuses"]["ok"] / len(rids), 1),
+        "timeouts": snap["serve.statuses.timeout"],
+        "failed": snap["serve.statuses.failed"],
+        "corrupt_entries": snap["cache.corrupt_entries"],
+        "quarantined": snap["cache.quarantined"],
+        "compile_retries": snap["cache.compile_retries"],
+        "vm_fallbacks": snap["cache.vm_fallbacks"],
+        "budget_exhausted": snap["serve.budget_exhausted"],
+        "completed_pct": round(100.0 * snap["serve.statuses.ok"] / len(rids), 1),
     }
     tokens = {rid: results[rid]["tokens"] for rid in rids}
     return row, tokens

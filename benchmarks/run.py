@@ -17,6 +17,7 @@ import argparse
 import json
 import os
 import random
+import time
 
 import numpy as np
 
@@ -38,6 +39,14 @@ def main(argv=None) -> int:
         "--quick",
         action="store_true",
         help="reduced reps; still refreshes the BENCH_*.json trajectory files",
+    )
+    ap.add_argument(
+        "--trace",
+        default=None,
+        metavar="OUT.json",
+        help="arm the tracer across the sweep and write a Chrome trace-event "
+        "file (open in https://ui.perfetto.dev) covering every compile the "
+        "benches trigger",
     )
     args = ap.parse_args(argv)
 
@@ -65,6 +74,9 @@ def main(argv=None) -> int:
     if args.quick and not args.only:
         # kernels are the slow outlier and have no trajectory file
         benches.pop("kernels")
+    from repro.obs import trace as obs_trace
+
+    tracer = obs_trace.Tracer() if args.trace else None
     os.makedirs("artifacts/bench", exist_ok=True)
     for name, fn in benches.items():
         if args.only and name != args.only:
@@ -76,7 +88,17 @@ def main(argv=None) -> int:
         # state, making BENCH json diffs ordering-dependent).
         random.seed(0)
         np.random.seed(0)
-        rows = fn()
+        t0 = time.perf_counter()
+        with obs_trace.tracing(tracer):
+            rows = fn()
+        wall = time.perf_counter() - t0
+        for row in rows:
+            # ride-along provenance: how long the whole bench took, and
+            # how heavy its instrumentation got (peak tracer occupancy) —
+            # a trajectory diff can then tell "bench got slower" from
+            # "tracing got heavier".  Not CI-gated (wall time is noisy).
+            row["bench_wall_s"] = round(wall, 3)
+            row["trace_buffer_peak"] = tracer.high_water if tracer else 0
         for row in rows:
             print("  ", row)
         with open(f"artifacts/bench/{name}.json", "w") as f:
@@ -94,6 +116,12 @@ def main(argv=None) -> int:
             from . import roofline
 
             roofline.main(["--md", "artifacts/roofline.md"])
+    if tracer is not None:
+        tracer.write_chrome_trace(args.trace)
+        print(
+            f"\nwrote {len(tracer.events)} spans to {args.trace} "
+            f"(open in https://ui.perfetto.dev)"
+        )
     return 0
 
 

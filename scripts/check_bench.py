@@ -13,7 +13,9 @@ Guarded metrics (rows matched by workload/signature/mesh key):
   and ``vm_fallbacks`` (closure-elimination tier: corpus graphs failing
   ``try_lower`` — deterministic, may never rise),
 * ``BENCH_higher_order.json`` — ``vm_fallback`` per workload (grad-of-grad
-  and the MLP HVP must stay on the lowered path) + floored ``steady_us``,
+  and the MLP HVP must stay on the lowered path) + floored ``steady_us``
+  + floored ``pipeline_phase_total_ms`` (the tracer's per-phase compile
+  breakdown summed; catches a compile-time blowup inside any one phase),
 * ``BENCH_ad_overhead.json`` — ``st_over_jax`` (the AD overhead ratio),
 * ``BENCH_fusion.json``    — ``launches_after`` (fused launch counts;
   deterministic, any >tol increase is a real partitioner regression),
@@ -81,10 +83,19 @@ GUARDS: dict[str, tuple[tuple[str, ...], list[tuple[str, float]]]] = {
         [("launches_fused", 0.0), ("n_psum", 0.0), ("n_all_gather", 0.0)],
     ),
     # higher-order workloads must stay on the lowered path (vm_fallback
-    # 0/1 per row, deterministic); steady-state latency is noise-floored
+    # 0/1 per row, deterministic); steady-state latency is noise-floored.
+    # pipeline_phase_total_ms is the span-derived sum of the per-phase
+    # compile breakdown (pipeline_phase_ms) the tracer records — gated
+    # may-only-fall with a generous absolute floor: the MLP grad-of-grad
+    # pipelines run 10-20 s, so the floor absorbs run-to-run load noise
+    # while a superlinear blowup in any single phase still trips
     "BENCH_higher_order.json": (
         ("workload",),
-        [("vm_fallback", 0.0), ("steady_us", 150.0)],
+        [
+            ("vm_fallback", 0.0),
+            ("steady_us", 150.0),
+            ("pipeline_phase_total_ms", 2500.0),
+        ],
     ),
     # serve: compilations pinned at the bucket-derived floor (cold row),
     # warm row must keep xla_compiles at 0 and its hit rate may only rise

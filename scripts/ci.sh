@@ -64,4 +64,10 @@ if [ "${SKIP_BENCH:-0}" != "1" ]; then
   python -m benchmarks.run --quick
   echo "== bench regression gate =="
   python scripts/check_bench.py
+  echo "== traced bench (Perfetto trace uploaded via artifacts/bench/) =="
+  # one traced --quick rerun of the higher-order bench: the trace lands in
+  # artifacts/bench/ which ci.yml already uploads, so every full CI run
+  # leaves a loadable compile-pipeline profile next to the BENCH numbers
+  python -m benchmarks.run --quick --only higher_order \
+    --trace artifacts/bench/trace_higher_order.json
 fi

@@ -342,6 +342,13 @@ def _seed_cotangent(gg: Graph, out: Node) -> Node:
 
 def build_grad_graph(g: Graph, wrt: int | tuple[int, ...] = 0) -> Graph:
     """``grad(f)``: a graph computing df/dx_wrt for a scalar-output ``f``."""
+    from repro.obs import trace as obs_trace
+
+    with obs_trace.span("ad.grad", graph=g.name):
+        return _build_grad_graph_body(g, wrt)
+
+
+def _build_grad_graph_body(g: Graph, wrt: int | tuple[int, ...]) -> Graph:
     jg = J(g)
     gg = Graph(f"grad_{g.name}")
     params = [gg.add_parameter(p.debug_name) for p in g.parameters]

@@ -23,6 +23,8 @@ from typing import Any, Callable
 import jax
 import numpy as np
 
+from repro.obs import trace as obs_trace
+
 from .ad import build_grad_graph, build_value_and_grad_graph, build_vjp_graph
 from .infer import InferenceError, abstract_of_value, infer
 from .ir import Constant, Graph, clone_graph
@@ -96,30 +98,35 @@ def compile_pipeline(
     given, any remaining fallback reasons land in
     ``stats.fallback_reasons`` (structured, see ``FallbackReason``).
     """
-    g = clone_graph(graph)
-    if not opt:
+    # every phase below opens a span (see docs/observability.md for the
+    # taxonomy); disarmed, span() is a single global None-check
+    with obs_trace.span("compile_pipeline", graph=graph.name):
+        with obs_trace.span("clone"):
+            g = clone_graph(graph)
+        if not opt:
+            return g
+        optimize(g, engine=engine, stats=stats)  # structural pass (no abstracts)
+        if infer_types and example_args is not None:
+            try:
+                infer(g, *example_args)
+            except InferenceError:
+                pass  # dynamic program: shape-directed rules simply won't fire
+            # shape-directed pass (kernel patterns need inferred shapes)
+            optimize(g, engine=engine, stats=stats, patterns=patterns)
+            if loops:
+                from .closure import lower_loops
+
+                report = lower_loops(g, stats=stats)
+                if report.lowered:
+                    # the rewrite leaves dead families and foldable glue; the
+                    # cleanup pass also optimizes *inside* the loop subgraphs
+                    optimize(g, engine=engine, stats=stats, patterns=patterns)
+        if stats is not None:
+            from .closure import analyze_blockers
+
+            with obs_trace.span("closure.analyze_blockers"):
+                stats.fallback_reasons = [r.as_dict() for r in analyze_blockers(g)]
         return g
-    optimize(g, engine=engine, stats=stats)  # structural pass (no abstracts)
-    if infer_types and example_args is not None:
-        try:
-            infer(g, *example_args)
-        except InferenceError:
-            pass  # dynamic program: shape-directed rules simply won't fire
-        # shape-directed pass (kernel patterns need inferred shapes)
-        optimize(g, engine=engine, stats=stats, patterns=patterns)
-        if loops:
-            from .closure import lower_loops
-
-            report = lower_loops(g, stats=stats)
-            if report.lowered:
-                # the rewrite leaves dead families and foldable glue; the
-                # cleanup pass also optimizes *inside* the loop subgraphs
-                optimize(g, engine=engine, stats=stats, patterns=patterns)
-    if stats is not None:
-        from .closure import analyze_blockers
-
-        stats.fallback_reasons = [r.as_dict() for r in analyze_blockers(g)]
-    return g
 
 
 class MyiaFunction:
@@ -137,6 +144,7 @@ class MyiaFunction:
         patterns: bool = False,
         in_specs: tuple | None = None,
         program_cache=None,
+        trace=None,
         name: str | None = None,
     ) -> None:
         if fn is None and graph is None:
@@ -165,6 +173,12 @@ class MyiaFunction:
         #: by ``repro.core.spmd`` and run under ``shard_map``.  With no
         #: active mesh this is inert: the single-device tiers run unchanged.
         self.in_specs = in_specs
+        #: observability tier: a :class:`repro.obs.Tracer` armed for the
+        #: dynamic extent of every specialization this function compiles
+        #: (pipeline phases, inline waves, XLA compiles all land in it).
+        #: None (the default) keeps the hot path on the global
+        #: ``obs.trace`` arming — zero overhead unless someone armed it.
+        self.trace = trace
         self._specializations: dict[tuple, Callable] = {}
         self.__name__ = name or (fn.__name__ if fn is not None else graph.name)
         if fn is not None:
@@ -237,18 +251,23 @@ class MyiaFunction:
         hit = self._specializations.get(key)
         if hit is not None:
             return hit
-        try:
-            example = tuple(abstract_of_value(a) for a in args)
-        except InferenceError:
-            example = None  # e.g. a list static: skip inference, VM handles it
-        g = compile_pipeline(self.graph, example, opt=self.opt, patterns=self.patterns)
-        runner = None
-        if mesh is not None:
-            runner = self._make_spmd_runner(g, args, mesh)
-        if runner is None:
-            runner = self._make_runner(g, args)
-        self._specializations[key] = runner
-        return runner
+        with obs_trace.tracing(self.trace), obs_trace.span(
+            "specialize", graph=self.__name__, fuse=self.fuse
+        ):
+            try:
+                example = tuple(abstract_of_value(a) for a in args)
+            except InferenceError:
+                example = None  # e.g. a list static: skip inference, VM handles it
+            g = compile_pipeline(
+                self.graph, example, opt=self.opt, patterns=self.patterns
+            )
+            runner = None
+            if mesh is not None:
+                runner = self._make_spmd_runner(g, args, mesh)
+            if runner is None:
+                runner = self._make_runner(g, args)
+            self._specializations[key] = runner
+            return runner
 
     def _make_spmd_runner(self, g: Graph, example_args: tuple, mesh) -> Callable | None:
         """Sharded runner, or None → automatic single-device fallback (graph
@@ -366,9 +385,10 @@ class MyiaFunction:
                 if state["calls"] == 1:
                     fast = None
                     try:
-                        fast = jitted.lower(*arrs).compile(
-                            compiler_options=_TIER0_COMPILER_OPTIONS
-                        )
+                        with obs_trace.span("xla.tier0_compile"):
+                            fast = jitted.lower(*arrs).compile(
+                                compiler_options=_TIER0_COMPILER_OPTIONS
+                            )
                     except Exception:
                         pass  # unknown option/backend: use the full jit
                     if fast is not None:
@@ -410,6 +430,7 @@ def myia(
     patterns: bool = False,
     in_specs: tuple | None = None,
     program_cache=None,
+    trace=None,
 ):
     """Decorator: compile ``fn`` (pure Python subset) through the pipeline.
 
@@ -428,12 +449,17 @@ def myia(
     arms the AOT tier: all-array specializations of lowerable graphs are
     compiled ahead of time and persisted, so a warm process reloads the
     XLA executable instead of recompiling (see docs/serving.md).
+
+    ``trace`` (a :class:`repro.obs.Tracer`) arms the observability tier:
+    every specialization compiles with the tracer armed, so compile
+    pipeline phases, inline waves and XLA compiles land in its buffer
+    (export with ``tracer.write_chrome_trace``; see docs/observability.md).
     """
 
     def wrap(f: Callable) -> MyiaFunction:
         return MyiaFunction(
             f, backend=backend, opt=opt, fuse=fuse, patterns=patterns,
-            in_specs=in_specs, program_cache=program_cache,
+            in_specs=in_specs, program_cache=program_cache, trace=trace,
         )
 
     return wrap(fn) if fn is not None else wrap

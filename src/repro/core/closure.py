@@ -767,8 +767,20 @@ def lower_loops(root: Graph, stats: Any = None) -> LoopReport:
     into ``while_loop`` / ``scan_loop`` applies (in place).  One site is
     rewritten per scan so later sites see the updated graph; headers that
     fail to match are recorded once in the report and skipped."""
+    from repro.obs import trace as obs_trace
+
     report = LoopReport()
     failed: set[int] = set()
+    sp = obs_trace.span("closure.lower_loops", graph=root.name)
+    with sp:
+        _lower_loops_body(root, report, failed, stats)
+        sp.set(lowered=report.lowered, scans=report.scans, failed=len(failed))
+    return report
+
+
+def _lower_loops_body(
+    root: Graph, report: LoopReport, failed: set[int], stats: Any = None
+) -> None:
     for _ in range(64):
         site = _find_site(root, failed)
         if site is None:
@@ -816,4 +828,3 @@ def lower_loops(root: Graph, stats: Any = None) -> LoopReport:
         new.abstract = _widen_abstract(eg.return_.abstract)
         _replace(root, site, new)
         report.lowered += 1
-    return report

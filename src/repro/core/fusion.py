@@ -295,6 +295,16 @@ def partition_graph(graph: Graph, *, min_cluster_size: int = 3) -> FusionPlan:
     too-small regions are simply left out — the lowering keeps emitting
     them as individual jnp calls, so partitioning never fails.
     """
+    from repro.obs import trace as obs_trace
+
+    sp = obs_trace.span("fuse.partition", graph=graph.name)
+    with sp:
+        plan = _partition_graph_body(graph, min_cluster_size)
+        sp.set(n_applies=plan.n_applies, clusters=len(plan.clusters))
+    return plan
+
+
+def _partition_graph_body(graph: Graph, min_cluster_size: int) -> FusionPlan:
     topo = [n for n in toposort(graph) if isinstance(n, Apply)]
     topo_index = {n._id: i for i, n in enumerate(topo)}
     live = set(topo_index)

@@ -830,7 +830,10 @@ def infer(graph: Graph, *args: Any) -> AbstractValue:
     """Infer output abstract of ``graph`` for ``args`` (abstract values, or
     runtime values / ShapeDtypeStructs which are converted).  Annotates the
     graph family's nodes with inferred abstracts as a side effect."""
+    from repro.obs import trace as obs_trace
+
     abs_args = tuple(
         a if isinstance(a, AbstractValue) else abstract_of_value(a) for a in args
     )
-    return Inferencer().infer_graph(graph, abs_args)
+    with obs_trace.span("infer", graph=graph.name):
+        return Inferencer().infer_graph(graph, abs_args)

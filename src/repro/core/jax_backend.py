@@ -41,6 +41,8 @@ from typing import Any, Callable, Sequence
 
 import jax
 
+from repro.obs import trace as obs_trace
+
 from .ir import Graph
 from .lowering import lower_graph, lowering_blockers, try_lower
 from .serialize import (
@@ -419,20 +421,24 @@ class ProgramCache:
         """
         key = self.key(graph, example_args, fuse=fuse, mesh=mesh)
         avals = _avals(example_args)
-        entry = self._read(key)
-        if entry is not None:
-            runner = self._from_entry(entry, avals, fuse=fuse, fpath=self._file(key))
-            if runner is not None:
-                self.stats.hits += 1
-                runner.cache_key = key
-                return runner
+        with obs_trace.span("cache.lookup", graph=graph.name) as sp:
+            entry = self._read(key)
+            if entry is not None:
+                runner = self._from_entry(entry, avals, fuse=fuse, fpath=self._file(key))
+                if runner is not None:
+                    self.stats.hits += 1
+                    sp.set(verdict="hit")
+                    runner.cache_key = key
+                    return runner
+            self.stats.misses += 1
+            sp.set(verdict="miss")
         # miss: compile fresh from the live graph and persist
-        self.stats.misses += 1
         fn = lowered_fn if lowered_fn is not None else try_lower(graph, fuse=fuse)
         if fn is None:
             raise SerializeError(f"graph {graph.name} does not lower (VM fallback)")
         compiled = self._compile(fn, avals, tag=f"fresh:{graph.name}")
-        self._write(key, graph, compiled)
+        with obs_trace.span("cache.write", graph=graph.name):
+            self._write(key, graph, compiled)
         runner = _aot_runner(compiled)
         runner.cache_key = key
         return runner
@@ -453,7 +459,8 @@ class ProgramCache:
             try:
                 if fh is not None:
                     fh.on_compile(tag)
-                compiled = jax.jit(fn).lower(*avals).compile()
+                with obs_trace.span("xla.compile", tag=tag, attempt=attempt):
+                    compiled = jax.jit(fn).lower(*avals).compile()
             except Exception as e:
                 last = e
                 continue

@@ -113,10 +113,16 @@ def lower_graph(graph: Graph, *, fuse: bool = False) -> Callable:
     The fusion plan and kernels ride on the result as
     ``fn.__fusion_plan__`` / ``fn.__fused_kernels__``.
     """
+    from repro.obs import trace as obs_trace
+
     blockers = lowering_blockers(graph)
     if blockers:
         raise LoweringError("; ".join(blockers))
+    with obs_trace.span("lower", graph=graph.name, fuse=fuse):
+        return _lower_graph_body(graph, fuse)
 
+
+def _lower_graph_body(graph: Graph, fuse: bool) -> Callable:
     plan = None
     fused: dict[int, Any] = {}  # root node id -> FusedKernel
     skip: set[int] = set()  # interior member ids of emitted clusters

@@ -46,6 +46,8 @@ from typing import Any, Callable
 
 import numpy as np
 
+from repro.obs import trace as obs_trace
+
 from . import primitives as P
 from .ir import (
     Apply,
@@ -221,52 +223,82 @@ class _Rewriter:
         only the family set and stale descendant entries are updated, per
         clone (``FamilyIndex.note_clone``)."""
         changed = False
-        for _ in range(max_waves):
-            fam = self.family()
-            targets: list[Apply] = []
-            for n in dfs_nodes(self.root.return_):
-                if (
-                    isinstance(n, Apply)
-                    and n.graph in fam
-                    and is_constant_graph(n.fn)
-                    and n.fn.value is not n.graph
-                    and self.fam.inline_safe(n.fn.value)
-                ):
-                    callee = n.fn.value
-                    if callee.return_ is None:
-                        continue
+        for wave in range(max_waves):
+            # one span per wave: at trace level the "clone storms" of the
+            # superlinear compile-time item become directly visible as
+            # wide opt.inline_wave spans with large `inlined` counts
+            with obs_trace.span("opt.inline_wave", wave=wave) as sp:
+                fam = self.family()
+                targets: list[Apply] = []
+                for n in dfs_nodes(self.root.return_):
                     if (
-                        self.max_inline_size is not None
-                        and count_nodes(callee) > self.max_inline_size
+                        isinstance(n, Apply)
+                        and n.graph in fam
+                        and is_constant_graph(n.fn)
+                        and n.fn.value is not n.graph
+                        and self.fam.inline_safe(n.fn.value)
                     ):
-                        continue
-                    if len(callee.parameters) != len(n.args):
-                        continue  # arity error: leave for runtime
-                    targets.append(n)
-            if not targets:
-                return changed
-            self.stats.inline_waves += 1
-            for n in targets:
-                if not is_constant_graph(n.fn):
-                    continue  # rewritten by an earlier inline this wave
-                callee = n.fn.value
-                param_repl = dict(zip(callee.parameters, n.args))
-                cloner = GraphCloner(callee, inline_target=n.graph, param_repl=param_repl)
-                cloner.clone()  # (remaps symbolic env keys internally)
-                self.replace(n, cloner.inlined_return)
-                self.fam.note_clone(cloner)
-                self.stats.inlined_calls += 1
-                changed = True
-                self.changed = True
+                        callee = n.fn.value
+                        if callee.return_ is None:
+                            continue
+                        if (
+                            self.max_inline_size is not None
+                            and count_nodes(callee) > self.max_inline_size
+                        ):
+                            continue
+                        if len(callee.parameters) != len(n.args):
+                            continue  # arity error: leave for runtime
+                        targets.append(n)
+                if not targets:
+                    sp.set(inlined=0)
+                    return changed
+                self.stats.inline_waves += 1
+                inlined = 0
+                for n in targets:
+                    if not is_constant_graph(n.fn):
+                        continue  # rewritten by an earlier inline this wave
+                    callee = n.fn.value
+                    param_repl = dict(zip(callee.parameters, n.args))
+                    cloner = GraphCloner(
+                        callee, inline_target=n.graph, param_repl=param_repl
+                    )
+                    cloner.clone()  # (remaps symbolic env keys internally)
+                    self.replace(n, cloner.inlined_return)
+                    self.fam.note_clone(cloner)
+                    self.stats.inlined_calls += 1
+                    inlined += 1
+                    changed = True
+                    self.changed = True
+                sp.set(targets=len(targets), inlined=inlined)
         return changed
 
     # -- local rules ----------------------------------------------------------
     def rules_pass(self, engine: str = "worklist") -> bool:
-        if engine == "sweep":
-            return self._rules_sweep()
-        if engine == "worklist":
-            return self._rules_worklist()
-        raise ValueError(f"unknown rewrite engine {engine!r}")
+        if engine not in ("sweep", "worklist"):
+            raise ValueError(f"unknown rewrite engine {engine!r}")
+        # the per-rule-class breakdown rides on the span as a hit-count
+        # delta (rule spans per worklist pop would swamp the buffer AND
+        # the hot path; the drain-level delta costs two dict copies,
+        # armed-only)
+        sp = obs_trace.span("opt.rules", engine=engine)
+        before = dict(self.stats.rule_hits) if sp is not obs_trace.NULL_SPAN else None
+        pops0 = self.stats.worklist_pops
+        with sp:
+            changed = (
+                self._rules_sweep() if engine == "sweep" else self._rules_worklist()
+            )
+            if before is not None:
+                delta = {
+                    k: v - before.get(k, 0)
+                    for k, v in self.stats.rule_hits.items()
+                    if v != before.get(k, 0)
+                }
+                sp.set(
+                    rewrites=sum(delta.values()),
+                    pops=self.stats.worklist_pops - pops0,
+                    rule_hits=delta,
+                )
+        return changed
 
     def _rules_sweep(self) -> bool:
         """Reference engine: whole-family DFS sweeps to a fixed point."""
@@ -807,22 +839,34 @@ def optimize(
     """
     rw = _Rewriter(graph, max_inline_size, stats, patterns=patterns)
     spec_memo: dict = {}
-    for _ in range(max_iterations):
-        changed = False
-        if inline:
-            changed |= rw.inline_pass()
-        if inline and defunctionalize:
-            from .closure import specialize_recursive_calls
+    with obs_trace.span(
+        "optimize", graph=graph.name, engine=engine, patterns=patterns
+    ) as osp:
+        for _ in range(max_iterations):
+            changed = False
+            if inline:
+                changed |= rw.inline_pass()
+            if inline and defunctionalize:
+                from .closure import specialize_recursive_calls
 
-            if specialize_recursive_calls(graph, stats=rw.stats, memo=spec_memo):
-                # whole families were cloned and rewired: rebuild the index
-                rw.fam = FamilyIndex(graph)
-                changed = True
-        changed |= rw.rules_pass(engine)
-        rw.stats.iterations += 1
-        if not changed:
-            break
-        # rewrites may have cut graph references (e.g. switch-of-constant
-        # dropping a branch): refresh recursion facts before re-inlining
-        rw.fam.invalidate_rewrites()
+                with obs_trace.span("opt.defunctionalize"):
+                    specialized = specialize_recursive_calls(
+                        graph, stats=rw.stats, memo=spec_memo
+                    )
+                if specialized:
+                    # whole families were cloned and rewired: rebuild the index
+                    rw.fam = FamilyIndex(graph)
+                    changed = True
+            changed |= rw.rules_pass(engine)
+            rw.stats.iterations += 1
+            if not changed:
+                break
+            # rewrites may have cut graph references (e.g. switch-of-constant
+            # dropping a branch): refresh recursion facts before re-inlining
+            rw.fam.invalidate_rewrites()
+        osp.set(
+            iterations=rw.stats.iterations,
+            rewrites=rw.stats.total_rewrites,
+            inlined_calls=rw.stats.inlined_calls,
+        )
     return graph

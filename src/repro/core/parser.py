@@ -585,13 +585,16 @@ def parse_function(fn: Callable) -> Graph:
     The shell graph is registered in the cache BEFORE parsing the body, so
     module-level mutual recursion (f referencing g referencing f through
     their globals) resolves to the in-progress graph instead of looping."""
+    from repro.obs import trace as obs_trace
+
     key = getattr(fn, "__wrapped__", fn)
     if key in _PARSE_CACHE:
         return _PARSE_CACHE[key]
     g = Graph(getattr(key, "__name__", "<fn>"))
     _PARSE_CACHE[key] = g
     try:
-        Parser(key).parse(target=g)
+        with obs_trace.span("parse", fn=g.name):
+            Parser(key).parse(target=g)
     except BaseException:
         _PARSE_CACHE.pop(key, None)  # don't cache a half-parsed shell
         raise

@@ -85,6 +85,14 @@ def main(argv=None) -> int:
         help="myia: admission-control bound on queued requests; submits "
         "past it are rejected with reason 'queue_full' instead of queued",
     )
+    ap.add_argument(
+        "--trace",
+        default=None,
+        metavar="OUT.json",
+        help="myia: record compile + per-request lifecycle spans and write "
+        "a Chrome trace-event file (open in https://ui.perfetto.dev); also "
+        "prints one telemetry summary line per request",
+    )
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -147,8 +155,11 @@ def _serve_myia_engine(args, cfg) -> int:
     """The serving runtime: bucketed continuous batching, incremental
     decode (tuple-carried KV cache), persistent AOT program cache."""
     from repro.core.jax_backend import ProgramCache
+    from repro.obs import trace as obs_trace
     from repro.serve import ServeEngine, ServeLMDims, init_serve_params, oracle_generate
+    from repro.serve.engine import request_telemetry
 
+    tracer = obs_trace.Tracer() if args.trace else None
     dims = ServeLMDims.from_config(cfg)
     params = init_serve_params(dims, jax.random.PRNGKey(0))
     cache = ProgramCache(args.cache_dir) if args.cache_dir else None
@@ -160,6 +171,7 @@ def _serve_myia_engine(args, cfg) -> int:
         program_cache=cache,
         default_deadline_s=args.deadline,
         max_queue=args.max_queue,
+        trace=tracer,
     )
 
     rng = np.random.default_rng(0)
@@ -201,6 +213,31 @@ def _serve_myia_engine(args, cfg) -> int:
     print("sample generations (token ids):")
     for rid, _prompt in submitted[:2]:
         print("  ", results[rid]["tokens"][:16])
+
+    if tracer is not None:
+        # one line per request, reconstructed purely from lifecycle spans
+        tel = request_telemetry(tracer)
+        for rid, _prompt in submitted:
+            t = tel.get(rid)
+            if t is None:
+                continue
+            n_tok = len(results[rid]["tokens"])
+            tok_s = (
+                n_tok / (t["gen_ms"] / 1e3)
+                if t["gen_ms"] and n_tok
+                else None
+            )
+            fmt = lambda v, suf="": "n/a" if v is None else f"{v:.1f}{suf}"
+            print(
+                f"[myia/telemetry] rid={rid} status={t['status']} "
+                f"bucket={t['bucket']} ttft={fmt(t['ttft_ms'], 'ms')} "
+                f"queue={fmt(t['queue_ms'], 'ms')} tok/s={fmt(tok_s)}"
+            )
+        tracer.write_chrome_trace(args.trace)
+        print(
+            f"[myia/telemetry] wrote {len(tracer.events)} spans to "
+            f"{args.trace} (open in https://ui.perfetto.dev)"
+        )
 
     if args.check_oracle:
         fns: dict = {}

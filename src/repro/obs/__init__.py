@@ -1,0 +1,46 @@
+"""Process-wide observability: tracing spans + unified metrics.
+
+* ``repro.obs.trace`` — nested ``span()`` context managers over a bounded
+  in-memory buffer, armed via ``tracing(tracer)`` (module-global hook
+  with a None-check fast path: zero overhead disarmed), exported as
+  Chrome trace-event JSON (Perfetto) or a text phase summary.
+* ``repro.obs.metrics`` — counters / gauges / fixed-bucket histograms and
+  the flat dotted-key ``snapshot()`` schema absorbing ``OptStats``,
+  ``CacheStats`` and the serve engine's stats behind one surface.
+
+See ``docs/observability.md`` for the span taxonomy and worked examples.
+"""
+
+from .metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    flatten,
+    snapshot,
+)
+from .trace import (
+    NULL_SPAN,
+    SpanRecord,
+    Tracer,
+    active,
+    mark,
+    span,
+    tracing,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "flatten",
+    "snapshot",
+    "NULL_SPAN",
+    "SpanRecord",
+    "Tracer",
+    "active",
+    "mark",
+    "span",
+    "tracing",
+]

@@ -66,6 +66,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import api
+from repro.obs import metrics as obs_metrics, trace as obs_trace
 from . import faults
 from .model import (
     ServeLMDims,
@@ -85,6 +86,7 @@ __all__ = [
     "NumericalFault",
     "bucket_for",
     "oracle_generate",
+    "request_telemetry",
 ]
 
 
@@ -182,11 +184,18 @@ class _SlotBatch:
     def admit(self, req: Request, slot: int) -> list[tuple[Request, list[int]]]:
         eng = self.engine
         L = self.bucket
+        if obs_trace.active() is not None:
+            admitted_at = time.monotonic()
+            obs_trace.mark(
+                "serve.admitted", ts=admitted_at, rid=req.rid, bucket=L, slot=slot
+            )
+            eng._observe_ms("serve.queue_ms", L, admitted_at - req.submitted_at)
         padded = np.zeros((1, L), np.int32)
         padded[0, : len(req.prompt)] = req.prompt
-        logits, k, v = eng._call("prefill", L, eng._prefill_fn)(
-            *eng.params, jnp.asarray(padded), causal_mask(L)
-        )
+        with obs_trace.span("serve.prefill", rid=req.rid, bucket=L, slot=slot):
+            logits, k, v = eng._call("prefill", L, eng._prefill_fn)(
+                *eng.params, jnp.asarray(padded), causal_mask(L)
+            )
         logits = faults.poison_logits(logits, eng.admissions, site="prefill")
         eng.admissions += 1
         row = logits[0, len(req.prompt) - 1]
@@ -196,6 +205,11 @@ class _SlotBatch:
             return [(req, [])]
         first = int(jnp.argmax(row))
         req.first_token_at = time.monotonic()
+        if obs_trace.active() is not None:
+            obs_trace.mark("serve.first_token", ts=req.first_token_at, rid=req.rid)
+            eng._observe_ms(
+                "serve.ttft_ms", L, req.first_token_at - req.submitted_at
+            )
         self.kcache = self.kcache.at[slot].set(k[0])
         self.vcache = self.vcache.at[slot].set(v[0])
         self.tok[slot] = first
@@ -231,6 +245,17 @@ class _SlotBatch:
     def step(self) -> list[tuple[Request, list[int]]]:
         if self.n_active == 0:
             return []
+        eng = self.engine
+        sp = obs_trace.span(
+            "serve.decode_step", bucket=self.bucket, n_active=self.n_active
+        )
+        with sp:
+            finished = self._step_body()
+        if sp is not obs_trace.NULL_SPAN:
+            eng._observe_ms("serve.decode_step_ms", self.bucket, sp.dur_s)
+        return finished
+
+    def _step_body(self) -> list[tuple[Request, list[int]]]:
         eng = self.engine
         faults.on_decode_step(self.bucket)
         wcol, amask = decode_masks(self.pos, self.bucket)
@@ -297,6 +322,7 @@ class ServeEngine:
         max_queue: int | None = None,
         default_deadline_s: float | None = None,
         step_budget: int | None = None,
+        trace: Any = None,
     ) -> None:
         self.dims = dims
         self.params = tuple(params)
@@ -307,6 +333,16 @@ class ServeEngine:
         self.max_queue = max_queue
         self.default_deadline_s = default_deadline_s
         self.step_budget = step_budget
+        #: engine-owned tracer (``repro.obs.trace.Tracer``); armed for the
+        #: extent of every ``submit``/``run`` call so lifecycle spans land
+        #: without the caller managing a ``tracing(...)`` block.  An
+        #: ambient tracer armed by the caller works too — ``trace=None``
+        #: simply defers to it.
+        self.trace = trace
+        #: per-bucket latency histograms (TTFT / time-in-queue /
+        #: decode-step), populated only while a tracer is armed — the
+        #: disarmed serve hot path does zero telemetry work
+        self.telemetry = obs_metrics.MetricsRegistry()
         self._prefill_fn = api.myia(
             build_prefill(dims), program_cache=program_cache, fuse=fuse
         )
@@ -335,6 +371,13 @@ class ServeEngine:
         self.last_step_budget: int | None = None
         self.rejected = {"oversize": 0, "zero_budget": 0, "queue_full": 0}
         self.status_counts = {"ok": 0, "rejected": 0, "timeout": 0, "failed": 0}
+
+    # -- telemetry ---------------------------------------------------------
+    def _observe_ms(self, name: str, bucket: int, value_s: float) -> None:
+        """Record ``value_s`` (seconds) into the per-bucket latency
+        histogram ``name.b<bucket>`` — call sites gate on an armed tracer,
+        so this never runs in the disarmed configuration."""
+        self.telemetry.histogram(f"{name}.b{bucket}").observe(value_s * 1e3)
 
     # -- compiled-call bookkeeping ----------------------------------------
     def _call(self, kind: str, bucket: int, fn: Any) -> Any:
@@ -375,6 +418,9 @@ class ServeEngine:
             req.error = msg
         self.status_counts[req.status] += 1
         self._done[req.rid] = req
+        obs_trace.mark(
+            "serve.terminal", rid=req.rid, status=req.status, reason=req.reason
+        )
 
     def _reject(self, req: Request, kind: str, msg: str) -> int:
         self.rejected[kind] += 1
@@ -419,20 +465,28 @@ class ServeEngine:
         rid = next(self._rids)
         total = len(prompt) + max(int(max_new), 0)
         req = Request(rid, prompt, max_new, bucket=None, deadline_s=deadline_s)
-        if max_new <= 0:
-            return self._reject(
-                req, "zero_budget", f"max_new={max_new} requests no tokens"
+        with obs_trace.tracing(self.trace):
+            obs_trace.mark(
+                "serve.submit",
+                ts=req.submitted_at,
+                rid=rid,
+                prompt_len=len(req.prompt),
+                max_new=req.max_new,
             )
-        if total > self.max_bucket:
-            return self._reject(
-                req,
-                "oversize",
-                f"prompt+max_new={total} exceeds max bucket {self.max_bucket}",
-            )
-        if self.max_queue is not None and self.queued >= self.max_queue:
-            return self._reject(
-                req, "queue_full", f"queue at capacity ({self.max_queue})"
-            )
+            if max_new <= 0:
+                return self._reject(
+                    req, "zero_budget", f"max_new={max_new} requests no tokens"
+                )
+            if total > self.max_bucket:
+                return self._reject(
+                    req,
+                    "oversize",
+                    f"prompt+max_new={total} exceeds max bucket {self.max_bucket}",
+                )
+            if self.max_queue is not None and self.queued >= self.max_queue:
+                return self._reject(
+                    req, "queue_full", f"queue at capacity ({self.max_queue})"
+                )
         req.bucket = bucket_for(
             total, min_bucket=self.min_bucket, max_bucket=self.max_bucket
         )
@@ -460,6 +514,10 @@ class ServeEngine:
         including requests rejected at ``submit`` time.  Guaranteed to
         terminate: bounded by the step budget even under injected hangs,
         poisoned numerics, or compiled-call exceptions."""
+        with obs_trace.tracing(self.trace):
+            return self._run_body(step_budget)
+
+    def _run_body(self, step_budget: int | None) -> dict[int, dict]:
         results: dict[int, dict] = {}
 
         def record(pairs: list[tuple[Request, list[int]]]) -> None:
@@ -558,7 +616,67 @@ class ServeEngine:
         }
         if self.program_cache is not None:
             out["program_cache"] = self.program_cache.stats.as_dict()
+        telemetry = self.telemetry.as_dict()
+        if telemetry:
+            out["telemetry"] = telemetry
         return out
+
+
+def request_telemetry(tracer: Any) -> dict[int, dict]:
+    """Rebuild per-request lifecycle timings from a tracer's serve spans.
+
+    Returns ``{rid: {status, reason, bucket, ttft_ms, queue_ms, gen_ms}}``
+    assembled purely from the ``serve.submit`` / ``serve.admitted`` /
+    ``serve.first_token`` / ``serve.terminal`` marks the engine emits.
+    Because the submit and first-token marks carry the engine's own
+    ``time.monotonic()`` readings (``Request.submitted_at`` /
+    ``first_token_at``), the derived ``ttft_ms`` equals the engine's
+    reported ``ttft_s`` exactly — not approximately (pinned by
+    ``tests/obs/test_serve_telemetry.py``).  Timings a request never
+    reached (e.g. TTFT of a rejected request) are ``None``."""
+    rows: dict[int, dict] = {}
+
+    def row(rid: int) -> dict:
+        return rows.setdefault(
+            rid,
+            {
+                "rid": rid,
+                "status": None,
+                "reason": None,
+                "bucket": None,
+                "submitted_t": None,
+                "ttft_ms": None,
+                "queue_ms": None,
+                "gen_ms": None,
+                "_first_token_t": None,
+            },
+        )
+
+    for e in tracer.events:
+        if e.kind != "mark" or not e.name.startswith("serve."):
+            continue
+        rid = e.attrs.get("rid")
+        if rid is None:
+            continue
+        r = row(rid)
+        if e.name == "serve.submit":
+            r["submitted_t"] = e.t0
+        elif e.name == "serve.admitted":
+            r["bucket"] = e.attrs.get("bucket")
+            if r["submitted_t"] is not None:
+                r["queue_ms"] = (e.t0 - r["submitted_t"]) * 1e3
+        elif e.name == "serve.first_token":
+            r["_first_token_t"] = e.t0
+            if r["submitted_t"] is not None:
+                r["ttft_ms"] = (e.t0 - r["submitted_t"]) * 1e3
+        elif e.name == "serve.terminal":
+            r["status"] = e.attrs.get("status")
+            r["reason"] = e.attrs.get("reason")
+            if r["_first_token_t"] is not None:
+                r["gen_ms"] = (e.t0 - r["_first_token_t"]) * 1e3
+    for r in rows.values():
+        del r["_first_token_t"]
+    return rows
 
 
 def oracle_generate(

@@ -1,0 +1,87 @@
+"""Metrics schema: histogram quantile bounds, registry typing, and the
+unified ``snapshot()`` absorbing OptStats / CacheStats / engine stats."""
+
+import pytest
+
+from repro.core.jax_backend import CacheStats
+from repro.core.opt import OptStats
+from repro.obs import metrics as M
+
+
+def test_counter_and_gauge():
+    r = M.MetricsRegistry()
+    r.counter("reqs").inc()
+    r.counter("reqs").inc(4)
+    r.gauge("depth").set(2.5)
+    d = r.as_dict()
+    assert d["reqs"] == 5
+    assert d["depth"] == 2.5
+
+
+def test_histogram_quantile_upper_bounds():
+    h = M.Histogram(buckets=(1.0, 10.0, 100.0))
+    for v in (0.5, 0.7, 5.0, 50.0):
+        h.observe(v)
+    d = h.as_dict()
+    assert d["count"] == 4
+    assert d["min"] == 0.5 and d["max"] == 50.0
+    # quantile returns the UPPER BOUND of the bucket the quantile falls in
+    assert h.quantile(0.50) == 1.0
+    assert h.quantile(0.99) == 100.0
+    # overflow bucket reports the true max
+    h.observe(1e6)
+    assert h.quantile(0.999) == 1e6
+
+
+def test_histogram_empty():
+    h = M.Histogram()
+    assert h.as_dict() == {"count": 0}
+    assert h.quantile(0.5) is None
+
+
+def test_registry_kind_mismatch_raises():
+    r = M.MetricsRegistry()
+    r.counter("x")
+    with pytest.raises(TypeError):
+        r.gauge("x")
+    with pytest.raises(TypeError):
+        r.histogram("x")
+
+
+def test_flatten_nested_and_lists():
+    flat = M.flatten({"a": {"b": 1, "c": [2, 3]}, "d": "s"}, "p")
+    assert flat == {"p.a.b": 1, "p.a.c": [2, 3], "p.d": "s"}
+
+
+def test_snapshot_absorbs_opt_stats():
+    s = OptStats()
+    s.record_rule("gadd_zero")
+    s.record_rule("gadd_zero")
+    s.record_rule("mul_one")
+    s.inlined_calls = 3
+    snap = M.snapshot(opt=s)
+    assert snap["opt.rule_hits.gadd_zero"] == 2
+    assert snap["opt.rule_hits.mul_one"] == 1
+    assert snap["opt.total_rewrites"] == 3
+    assert snap["opt.inlined_calls"] == 3
+
+
+def test_snapshot_absorbs_cache_stats_and_dicts():
+    cs = CacheStats()
+    cs.hits = 4
+    cs.misses = 1
+    snap = M.snapshot(cache=cs, serve={"statuses": {"ok": 7}}, absent=None)
+    assert snap["cache.hits"] == 4
+    assert snap["cache.hit_rate"] == 0.8
+    assert snap["serve.statuses.ok"] == 7
+    assert not any(k.startswith("absent") for k in snap)
+
+
+def test_snapshot_leaves_are_json_scalars_or_scalar_lists():
+    class Weird:
+        pass
+
+    snap = M.snapshot(m={"obj": Weird(), "xs": [Weird()], "n": 1})
+    assert isinstance(snap["m.obj"], str)  # repr'd, never a raw object
+    assert isinstance(snap["m.xs"][0], str)
+    assert snap["m.n"] == 1

@@ -1,0 +1,104 @@
+"""Serve request telemetry: lifecycle spans, span-derived TTFT exactness,
+per-bucket latency histograms, and the launch driver's --trace flag."""
+
+import json
+
+import jax
+import pytest
+
+from repro.obs import trace as T
+from repro.serve import ServeEngine, ServeLMDims, init_serve_params
+from repro.serve.engine import request_telemetry
+
+_DIMS = ServeLMDims(vocab=48, d_model=8, d_hidden=16)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_serve_params(_DIMS, jax.random.PRNGKey(0))
+
+
+def _traced_run(params, **engine_kw):
+    tr = T.Tracer()
+    eng = ServeEngine(_DIMS, params, n_slots=2, min_bucket=16, trace=tr, **engine_kw)
+    rids = [eng.submit([1, 2, 3], 4), eng.submit([4, 5], 3)]
+    results = eng.run()
+    return tr, eng, rids, results
+
+
+def test_span_derived_ttft_equals_engine_ttft(params):
+    tr, eng, rids, results = _traced_run(params)
+    tel = request_telemetry(tr)
+    for rid in rids:
+        assert results[rid]["status"] == "ok"
+        # EXACT equality, not approximate: the submit / first-token marks
+        # carry the engine's own time.monotonic() readings, so the span
+        # arithmetic reproduces ttft_s bit for bit
+        assert tel[rid]["ttft_ms"] == results[rid]["ttft_s"] * 1e3
+        assert tel[rid]["status"] == "ok"
+        assert tel[rid]["bucket"] == results[rid]["bucket"]
+        assert tel[rid]["queue_ms"] is not None
+        assert 0 <= tel[rid]["queue_ms"] <= tel[rid]["ttft_ms"]
+
+
+def test_lifecycle_spans_per_request(params):
+    tr, eng, rids, results = _traced_run(params)
+    for name in ("serve.submit", "serve.admitted", "serve.first_token",
+                 "serve.terminal"):
+        got = {e.attrs["rid"] for e in tr.find(name)}
+        assert got == set(rids), f"{name} missing for some requests"
+    prefills = tr.find("serve.prefill")
+    assert {e.attrs["rid"] for e in prefills} == set(rids)
+    assert all(e.dur_s > 0 for e in prefills)
+    steps = tr.find("serve.decode_step")
+    assert steps and all(e.attrs["n_active"] >= 1 for e in steps)
+    # chrome export carries the request spans
+    names = {e["name"] for e in tr.chrome_trace()["traceEvents"]}
+    assert {"serve.prefill", "serve.decode_step", "serve.terminal"} <= names
+
+
+def test_rejected_request_reaches_terminal_mark(params):
+    tr = T.Tracer()
+    eng = ServeEngine(_DIMS, params, n_slots=2, min_bucket=16, max_bucket=32,
+                      trace=tr)
+    rid = eng.submit([0] * 10, 100)  # oversize for max_bucket=32
+    results = eng.run()
+    assert results[rid]["status"] == "rejected"
+    tel = request_telemetry(tr)
+    assert tel[rid]["status"] == "rejected"
+    assert tel[rid]["ttft_ms"] is None and tel[rid]["queue_ms"] is None
+
+
+def test_per_bucket_latency_histograms(params):
+    tr, eng, rids, results = _traced_run(params)
+    telemetry = eng.stats()["telemetry"]
+    for name in ("serve.ttft_ms.b16", "serve.queue_ms.b16",
+                 "serve.decode_step_ms.b16"):
+        assert telemetry[name]["count"] >= 1, name
+        assert telemetry[name]["p50"] is not None
+    assert telemetry["serve.ttft_ms.b16"]["count"] == len(rids)
+
+
+def test_disarmed_engine_records_nothing(params):
+    eng = ServeEngine(_DIMS, params, n_slots=2, min_bucket=16)
+    rid = eng.submit([1, 2], 2)
+    results = eng.run()
+    assert results[rid]["status"] == "ok"
+    assert "telemetry" not in eng.stats(), "disarmed run must do no telemetry"
+
+
+def test_launch_serve_trace_flag(tmp_path):
+    from repro.launch.serve import main
+
+    out = tmp_path / "serve_trace.json"
+    rc = main([
+        "--arch", "gemma3-1b", "--reduced", "--compiler", "myia",
+        "--batch", "2", "--prompt-len", "4", "--gen", "2",
+        "--min-bucket", "16", "--cache-dir", "", "--trace", str(out),
+    ])
+    assert rc == 0
+    doc = json.loads(out.read_text())
+    names = {e["name"] for e in doc["traceEvents"]}
+    # compile pipeline AND request lifecycle in one trace
+    assert "compile_pipeline" in names
+    assert {"serve.submit", "serve.prefill", "serve.terminal"} <= names

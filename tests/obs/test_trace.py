@@ -1,0 +1,148 @@
+"""Tracer contract: nesting, exception safety, Chrome export, bounded
+buffer, and — the load-bearing one — zero work on the disarmed path."""
+
+import json
+
+import pytest
+
+from repro.obs import trace as T
+
+
+def test_nested_spans_depth_and_order():
+    tr = T.Tracer()
+    with T.tracing(tr):
+        with T.span("outer", k=1):
+            with T.span("inner_a"):
+                pass
+            with T.span("inner_b"):
+                pass
+    # children close before the parent → buffer order is close order
+    names = [e.name for e in tr.events]
+    assert names == ["inner_a", "inner_b", "outer"]
+    by_name = {e.name: e for e in tr.events}
+    assert by_name["outer"].depth == 0
+    assert by_name["inner_a"].depth == by_name["inner_b"].depth == 1
+    assert by_name["outer"].attrs == {"k": 1}
+    # intervals nest
+    assert by_name["outer"].t0 <= by_name["inner_a"].t0
+    assert by_name["inner_b"].t1 <= by_name["outer"].t1
+
+
+def test_phase_totals_direct_children_only():
+    tr = T.Tracer()
+    with T.tracing(tr):
+        with T.span("root"):
+            with T.span("phase_a"):
+                with T.span("sub"):  # depth 2: excluded from the breakdown
+                    pass
+            with T.span("phase_b"):
+                pass
+    totals = tr.phase_totals_ms("root")
+    assert set(totals) == {"phase_a", "phase_b"}
+    root = tr.find("root")[0]
+    assert sum(totals.values()) <= root.dur_s * 1e3 + 1e-6
+
+
+def test_span_exception_safety():
+    tr = T.Tracer()
+    with T.tracing(tr):
+        with pytest.raises(ValueError):
+            with T.span("boom"):
+                raise ValueError("x")
+    assert T.active() is None, "tracing() must disarm on raise"
+    (rec,) = tr.events
+    assert rec.name == "boom"
+    assert rec.t1 is not None, "record must close on raise"
+    assert rec.attrs["error"] == "ValueError"
+
+
+def test_set_attrs_mid_span():
+    tr = T.Tracer()
+    with T.tracing(tr):
+        with T.span("s") as sp:
+            sp.set(count=7)
+    assert tr.events[0].attrs["count"] == 7
+
+
+def test_mark_with_explicit_timestamp():
+    tr = T.Tracer()
+    with T.tracing(tr):
+        T.mark("evt", ts=123.456, rid=9)
+    (rec,) = tr.events
+    assert rec.kind == "mark"
+    assert rec.t0 == rec.t1 == 123.456
+    assert rec.attrs["rid"] == 9
+
+
+def test_chrome_trace_round_trip(tmp_path):
+    tr = T.Tracer()
+    with T.tracing(tr):
+        with T.span("compile_pipeline", graph="g"):
+            with T.span("optimize"):
+                pass
+        T.mark("serve.submit", rid=0)
+    path = tmp_path / "trace.json"
+    tr.write_chrome_trace(str(path))
+    doc = json.loads(path.read_text())  # must be valid JSON end to end
+    assert doc["displayTimeUnit"] == "ms"
+    evs = doc["traceEvents"]
+    assert len(evs) == 3
+    by_name = {e["name"]: e for e in evs}
+    x = by_name["optimize"]
+    assert x["ph"] == "X" and x["dur"] >= 0 and x["ts"] >= 0
+    i = by_name["serve.submit"]
+    assert i["ph"] == "i" and i["cat"] == "serve" and i["args"]["rid"] == 0
+    # timestamps are rebased: the earliest event opens at t=0
+    assert min(e["ts"] for e in evs) == 0
+
+
+def test_bounded_buffer_drops_and_high_water():
+    tr = T.Tracer(max_events=3)
+    with T.tracing(tr):
+        for i in range(5):
+            with T.span(f"s{i}"):
+                pass
+    assert len(tr.events) == 3
+    assert tr.dropped == 2
+    assert tr.high_water == 3
+    assert tr.chrome_trace()["otherData"]["dropped"] == 2
+
+
+def test_disarmed_overhead_is_one_global_read():
+    # the production state: no tracer armed.  span() must return the
+    # SHARED singleton — no allocation, no clock read, no buffer append —
+    # and mark() must be a no-op.  Structural identity (not timing) pins
+    # the fast path deterministically.
+    assert T.active() is None
+    s1 = T.span("anything", big_attr="ignored")
+    s2 = T.span("other")
+    assert s1 is T.NULL_SPAN and s2 is T.NULL_SPAN
+    with s1:
+        s1.set(x=1)  # all no-ops
+    assert s1.dur_s == 0.0
+    T.mark("nothing", rid=1)
+    # and a disarmed block leaves zero residue in a later-armed tracer
+    tr = T.Tracer()
+    with T.tracing(tr):
+        pass
+    assert tr.events == [] and tr.high_water == 0
+
+
+def test_tracing_none_is_passthrough():
+    tr = T.Tracer()
+    with T.tracing(tr):
+        with T.tracing(None):  # optional-tracer call sites: keep ambient
+            with T.span("kept"):
+                pass
+    assert [e.name for e in tr.events] == ["kept"]
+
+
+def test_total_s_and_summary():
+    tr = T.Tracer()
+    with T.tracing(tr):
+        for _ in range(3):
+            with T.span("opt.rules"):
+                pass
+    assert tr.total_s("opt.rules") >= 0
+    text = tr.phase_summary()
+    assert "opt.rules" in text and "count" in text

@@ -119,6 +119,61 @@ def test_unchanged_rows_pass(cb, repo):
     assert cb.check_file("BENCH_serve.json", tol=0.25) == []
 
 
+HO_ROWS = [
+    {
+        "workload": "grad2_mlp",
+        "vm_fallback": 0,
+        "steady_us": 70.0,
+        "pipeline_phase_total_ms": 12000.0,
+        "pipeline_phase_ms": {"optimize": 11800.0, "infer": 150.0},
+    }
+]
+
+
+def _write_ho(repo, rows):
+    (repo / "BENCH_higher_order.json").write_text(json.dumps(rows))
+
+
+def _commit_ho(repo, rows):
+    _write_ho(repo, rows)
+    _git(repo, "add", "BENCH_higher_order.json")
+    _git(repo, "commit", "-q", "-m", "ho baseline")
+
+
+def test_phase_total_within_floor_passes(cb, repo):
+    """pipeline_phase_total_ms is noise-floored (2500 ms): wiggle under
+    the floor AND under tol must pass."""
+    _commit_ho(repo, HO_ROWS)
+    _write_ho(repo, [dict(HO_ROWS[0], pipeline_phase_total_ms=13500.0)])
+    assert cb.check_file("BENCH_higher_order.json", tol=0.25) == []
+
+
+def test_phase_total_blowup_fails(cb, repo):
+    """A genuine compile-time blowup (beyond tol AND the absolute floor)
+    must trip the new pipeline_phase_total_ms gate."""
+    _commit_ho(repo, HO_ROWS)
+    _write_ho(repo, [dict(HO_ROWS[0], pipeline_phase_total_ms=40000.0)])
+    failures = cb.check_file("BENCH_higher_order.json", tol=0.25)
+    assert len(failures) == 1
+    assert "pipeline_phase_total_ms regressed" in failures[0]
+
+
+def test_phase_total_improvement_passes(cb, repo):
+    _commit_ho(repo, HO_ROWS)
+    _write_ho(repo, [dict(HO_ROWS[0], pipeline_phase_total_ms=6000.0)])
+    assert cb.check_file("BENCH_higher_order.json", tol=0.25) == []
+
+
+def test_phase_total_missing_on_old_baseline_skipped(cb, repo):
+    """A baseline committed before the tracer existed has no
+    pipeline_phase_total_ms — the gate skips the metric (arms on the next
+    commit) instead of failing on None."""
+    old = [{k: v for k, v in HO_ROWS[0].items() if not k.startswith("pipeline_")}]
+    _commit_ho(repo, old)
+    _write_ho(repo, HO_ROWS)
+    assert cb.check_file("BENCH_higher_order.json", tol=0.25) == []
+
+
 def test_no_git_repo_is_report_only(cb, tmp_path, monkeypatch):
     """Outside any git repo, _baseline returns None and the gate runs in
     report-only mode instead of crashing."""
