@@ -13,11 +13,12 @@ Measures, per signature:
 * ``specializations`` — cache isolation across signatures.
 
 Additionally reports the **VM-fallback counter**: how many programs of a
-fixed corpus (straight-line, first- and second-order adjoints, loops,
-higher-order/defunctionalized calls, plus the documented VM-only shapes)
-fail ``try_lower`` after the full pipeline.  The count is deterministic —
-``scripts/check_bench.py`` fails CI if it ever rises above the committed
-trajectory, which is the teeth that keep the fallback set from regrowing.
+fixed corpus (straight-line, first- and second-order adjoints, loops and
+loop adjoints, nested loops, non-tail recursion, higher-order /
+defunctionalized calls) fail ``try_lower`` after the full pipeline.  The
+corpus now lowers completely — ``vm_fallbacks`` is 0 and
+``scripts/check_bench.py`` hard-fails CI on *any* nonzero count, which is
+the teeth that keep the fallback set from regrowing.
 """
 
 from __future__ import annotations
@@ -91,13 +92,13 @@ def _compose_use(x):
     return h(x)
 
 
-def _fold_rec(x, n):  # non-tail self-call: documented VM resident
+def _fold_rec(x, n):  # non-tail self-call: lowers via count + unwind loops
     if n == 0:
         return 1.0
     return x * _fold_rec(x, n - 1)
 
 
-def _nested(x, n):  # nested loops: one SCC, documented VM resident
+def _nested(x, n):  # nested loops: one SCC, lowers to loop-in-loop-step
     i = 0
     s = 0.0
     while i < n:
@@ -115,10 +116,12 @@ _WM = jnp.ones((4, 4), jnp.float32) * 0.3
 _XM = jnp.ones((2, 4), jnp.float32)
 
 
-def _grad(fn, wrt=0, order=1):
+def _grad(fn, wrt=0, order=1, example_args=None):
+    # example_args arm the pre-grad pipeline for loop/recursive primals
+    # (loops lower before J, so the adjoint is itself loop-shaped)
     g = parse_function(fn)
     for _ in range(order):
-        g = build_grad_graph(g, wrt)
+        g = build_grad_graph(g, wrt, example_args=example_args)
     return g
 
 
@@ -137,8 +140,8 @@ def _fallback_corpus() -> list[tuple[str, object, tuple]]:
         ("defunc_iterate", parse_function(_defunc), (_F, _N)),
         ("partial_application", parse_function(_partial), (_F, _F, _N)),
         ("compose", parse_function(_compose_use), (_F,)),
-        ("grad_while_pow", _grad(_while_pow), (_F, _N)),
-        ("fold_rec_grad", _grad(_fold_rec), (_F, 5)),
+        ("grad_while_pow", _grad(_while_pow, example_args=(_F, _N)), (_F, _N)),
+        ("fold_rec_grad", _grad(_fold_rec, example_args=(_F, 5)), (_F, 5)),
         ("nested_loops", parse_function(_nested), (_F, _N)),
     ]
 

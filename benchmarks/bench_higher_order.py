@@ -20,12 +20,26 @@ from repro.core import Graph, P, build_grad_graph, parse_function
 from repro.core.api import compile_pipeline
 from repro.core.infer import abstract_of_value
 from repro.core.jax_backend import compile_graph
+from repro.core.primitives import reduce_sum as _rsum, tanh as _tanh
 from repro.launch.myia_step import MyiaLMDims, build_lm_loss, init_lm_params
 from repro.obs import trace as obs_trace
 
 
 def _cube(x):
     return x * x * x
+
+
+def _scan_mlp_loss(w, x):
+    # static-trip loop → scan_loop; its adjoint is a reversed scan over
+    # the saved-carry stack (the loop-AD tier's flagship workload)
+    h = x
+    for i in range(4):
+        h = _tanh(h @ w)
+    return _rsum(h, None, False)
+
+
+_SW = jnp.ones((4, 4), jnp.float32) * 0.3
+_SX = jnp.ones((2, 4), jnp.float32)
 
 
 def _hvp_graph(f_graph, nargs):
@@ -75,7 +89,14 @@ def run(reps: int = 30) -> list[dict]:
             "grad2_cube",
             build_grad_graph(build_grad_graph(parse_function(_cube))),
             (jnp.asarray(1.3, jnp.float32),),
-        )
+        ),
+        (
+            "grad_scan_mlp",
+            build_grad_graph(
+                parse_function(_scan_mlp_loss), 0, example_args=(_SW, _SX)
+            ),
+            (_SW, _SX),
+        ),
     ] + _mlp_workloads()
 
     rows = []

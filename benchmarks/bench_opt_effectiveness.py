@@ -80,8 +80,8 @@ def run() -> list[dict]:
         ("2x³+4x²+x+1", poly, poly_hand, 2.0),
         ("tanh∘tanh∘tanh", chain, None, 0.5),
     ]:
-        g_noopt = myia.grad(fn, opt=False)
-        g_opt = myia.grad(fn, opt=True)
+        g_noopt = myia.grad(fn, options=myia.CompileOptions(opt=False))
+        g_opt = myia.grad(fn, options=myia.CompileOptions(opt=True))
         before = g_noopt.node_count(arg, optimized=False)
         stats = OptStats()
         opt_graph = myia.compile_pipeline(

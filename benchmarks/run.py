@@ -32,6 +32,41 @@ TRAJECTORY = {
 }
 
 
+def _quick_selection(benches: dict) -> dict:
+    """Narrow a ``--quick`` sweep to the benches whose module actually
+    changed vs HEAD.  Only applies when *every* uncommitted change is a
+    ``benchmarks/bench_*.py`` file — anything else (src/, run.py, configs)
+    can shift any trajectory, so the full sweep runs.  This stops a
+    serve-only bench edit from re-running the whole compile-time corpus."""
+    import subprocess
+
+    try:
+        out = subprocess.run(
+            ["git", "diff", "--name-only", "HEAD"],
+            capture_output=True, text=True, check=True,
+        ).stdout
+    except Exception:
+        return benches  # not a git checkout: run everything
+    changed = {line.strip() for line in out.splitlines() if line.strip()}
+    if not changed:
+        return benches
+    if any(
+        not (c.startswith("benchmarks/bench_") and c.endswith(".py"))
+        for c in changed
+    ):
+        return benches
+    keep = {
+        name: fn
+        for name, fn in benches.items()
+        if f"benchmarks/bench_{name}.py" in changed
+    }
+    if not keep:
+        return benches
+    skipped = sorted(set(benches) - set(keep))
+    print(f"--quick: only {sorted(keep)} changed; skipping {skipped}")
+    return keep
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
@@ -74,6 +109,7 @@ def main(argv=None) -> int:
     if args.quick and not args.only:
         # kernels are the slow outlier and have no trajectory file
         benches.pop("kernels")
+        benches = _quick_selection(benches)
     from repro.obs import trace as obs_trace
 
     tracer = obs_trace.Tracer() if args.trace else None

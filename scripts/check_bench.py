@@ -11,7 +11,8 @@ Guarded metrics (rows matched by workload/signature/mesh key):
 * ``BENCH_compile.json``   — ``compile_call_ms`` (compile time; lower is
   better, with a small absolute floor so sub-noise wiggle never trips)
   and ``vm_fallbacks`` (closure-elimination tier: corpus graphs failing
-  ``try_lower`` — deterministic, may never rise),
+  ``try_lower`` — deterministic, and HARD-pinned at 0: the fresh value is
+  gated absolutely, baseline or not, see ``HARD_CEILINGS``),
 * ``BENCH_higher_order.json`` — ``vm_fallback`` per workload (grad-of-grad
   and the MLP HVP must stay on the lowered path) + floored ``steady_us``
   + floored ``pipeline_phase_total_ms`` (the tracer's per-phase compile
@@ -119,6 +120,16 @@ GUARDS: dict[str, tuple[tuple[str, ...], list[tuple[str, float]]]] = {
 }
 
 
+#: (file, metric) -> absolute ceiling the FRESH value may never exceed —
+#: enforced even with no committed baseline (a regressed baseline being
+#: committed alongside the regression must not green the gate).
+#: ``vm_fallbacks`` hit 0 when loop adjoints / nested SCCs / affine
+#: non-tail recursion learned to lower; the corpus is pinned there.
+HARD_CEILINGS: dict[tuple[str, str], float] = {
+    ("BENCH_compile.json", "vm_fallbacks"): 0.0,
+}
+
+
 def _baseline(fname: str) -> list[dict] | None:
     """The committed rows for ``fname``, or None when there is nothing to
     gate against: a fresh BENCH_*.json not yet at HEAD (a brand-new
@@ -148,15 +159,28 @@ def check_file(fname: str, tol: float) -> list[str]:
         return [f"{fname}: fresh file missing (did benchmarks/run.py run?)"]
     with open(fname) as f:
         fresh = _rows_by_key(json.load(f), key_fields)
+    failures: list[str] = []
+    # absolute hard floors first: baseline-independent, checked on the
+    # FRESH rows alone — committing a regressed trajectory cannot green it
+    for (gf, metric), ceiling in HARD_CEILINGS.items():
+        if gf != fname:
+            continue
+        for key, frow in fresh.items():
+            val = frow.get(metric)
+            if val is not None and float(val) > ceiling:
+                failures.append(
+                    f"{fname}: {metric} = {float(val):g} for {key} exceeds "
+                    f"the hard floor {ceiling:g} (absolute gate, "
+                    "baseline-independent)"
+                )
     base_rows = _baseline(fname)
     if base_rows is None:
         print(
             f"  {fname}: no committed baseline (new metric family or no "
-            "git history) — reporting only, gate arms on next commit"
+            "git history) — relative gates report-only, arm on next commit"
         )
-        return []
+        return failures
     base = _rows_by_key(base_rows, key_fields)
-    failures: list[str] = []
     for key, brow in base.items():
         frow = fresh.get(key)
         if frow is None:

@@ -12,12 +12,41 @@
 * ``grad`` / ``value_and_grad`` / ``vjp`` — the ST AD transforms of §3.2.
   ``grad`` is also a *macro*: used inside ``@myia`` code it expands at parse
   time (paper Figure 1: "After the grad macro is expanded …").
+
+Compile configuration — migration note
+--------------------------------------
+
+All four entry points (and ``compile_pipeline``) take a single frozen
+:class:`CompileOptions` carrying the full tier set::
+
+    opts = CompileOptions(fuse=True, program_cache=cache,
+                          checkpoint_policy="auto")
+    f  = myia(fn, options=opts)
+    df = grad(fn, options=opts)          # same tiers — full parity
+
+The historical per-kwarg spelling (``myia(fn, fuse=True, ...)``) still
+works through a shim that assembles the same ``CompileOptions`` and emits
+a ``DeprecationWarning``; both spellings produce identical compiled
+artifacts (same structural hash — pinned by tests).  ``checkpoint_policy``
+(loop-adjoint recording: ``"auto"`` / ``"save_all"`` / ``"recompute"`` /
+int slot count, see ``repro.core.ad``) is only reachable through
+``CompileOptions``.  ``MyiaFunction.options`` holds the resolved object;
+the legacy attributes (``.fuse``, ``.program_cache``, ...) remain as
+delegating properties.
+
+``grad``/``value_and_grad``/``vjp`` of a program containing loops or
+recursion defer the AD transform to specialization time: the primal runs
+the full pipeline (so parsed loops become ``while_loop``/``scan_loop``
+primitives) *before* the adjoint is built, which is what lets grad-of-loop
+programs compile VM-free instead of leaving residual ▶-closures.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 import hashlib
+import warnings
 from typing import Any, Callable
 
 import jax
@@ -25,7 +54,12 @@ import numpy as np
 
 from repro.obs import trace as obs_trace
 
-from .ad import build_grad_graph, build_value_and_grad_graph, build_vjp_graph
+from .ad import (
+    _needs_loop_pipeline,
+    build_grad_graph,
+    build_value_and_grad_graph,
+    build_vjp_graph,
+)
 from .infer import InferenceError, abstract_of_value, infer
 from .ir import Constant, Graph, clone_graph
 from .lowering import try_lower
@@ -34,7 +68,80 @@ from .parser import MyiaSyntaxError, parse_function
 from .values import is_array_like
 from .vm import VM
 
-__all__ = ["myia", "grad", "value_and_grad", "vjp", "MyiaFunction", "compile_pipeline"]
+__all__ = [
+    "myia",
+    "grad",
+    "value_and_grad",
+    "vjp",
+    "MyiaFunction",
+    "CompileOptions",
+    "compile_pipeline",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompileOptions:
+    """One immutable object carrying every compile tier configuration.
+
+    Replaces the seven loose kwargs that accreted onto the entry points;
+    every entry point accepts ``options=CompileOptions(...)`` and threads
+    it whole, so each tier (fusion, patterns, SPMD, AOT cache, tracing,
+    loop-adjoint checkpointing) is reachable from *all* of
+    ``myia``/``grad``/``value_and_grad``/``vjp``.
+    """
+
+    #: execution backend: "jax" (lowered/jit tiers) or "vm" (reference)
+    backend: str = "jax"
+    #: run the optimizer (False: parse-and-execute, debugging only)
+    opt: bool = True
+    #: fusion tier — clustered regions run as generated Pallas kernels
+    fuse: bool = False
+    #: kernel-pattern rewrites (rmsnorm / attention → Pallas prims)
+    patterns: bool = False
+    #: SPMD tier — per-argument sharding specs (active under a mesh)
+    in_specs: tuple | None = None
+    #: AOT tier — a ProgramCache making compiled specializations durable
+    program_cache: Any = None
+    #: observability tier — a Tracer armed for every specialization
+    trace: Any = None
+    #: loop-adjoint carry recording: "auto" / "save_all" / "recompute"
+    #: or an int slot count (see ``repro.core.ad._CHECKPOINT_SLOTS``)
+    checkpoint_policy: str | int = "auto"
+
+
+_UNSET: Any = object()
+
+#: the legacy kwargs the shim still accepts (checkpoint_policy is new and
+#: reachable only through CompileOptions — no legacy spelling to support)
+_LEGACY_FIELDS = (
+    "backend", "opt", "fuse", "patterns", "in_specs", "program_cache", "trace",
+)
+
+
+def _resolve_options(
+    options: CompileOptions | None, caller: str, legacy: dict[str, Any]
+) -> CompileOptions:
+    """The legacy-kwarg shim: fold explicitly-passed per-tier kwargs into
+    a ``CompileOptions`` (with a ``DeprecationWarning``), or pass the
+    given options object through.  Mixing both spellings is an error —
+    silently preferring one would mask a config bug."""
+    passed = {k: v for k, v in legacy.items() if v is not _UNSET}
+    if options is not None:
+        if passed:
+            raise TypeError(
+                f"{caller}() got both options= and legacy compile kwargs "
+                f"{sorted(passed)}; pass everything in CompileOptions"
+            )
+        return options
+    if passed:
+        warnings.warn(
+            f"{caller}({', '.join(sorted(passed))}=...) is deprecated; pass "
+            f"options=CompileOptions(...) instead",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+        return CompileOptions(**passed)
+    return CompileOptions()
 
 #: XLA options for the throwaway first-call executable (tiered compilation):
 #: skip backend optimizations and expensive LLVM passes — on CPU this
@@ -82,10 +189,15 @@ def compile_pipeline(
     stats: OptStats | None = None,
     patterns: bool = False,
     loops: bool = True,
+    options: CompileOptions | None = None,
 ) -> Graph:
     """inline → infer → optimize → loop-lower, on a private clone of
     ``graph``.
 
+    ``options`` (a :class:`CompileOptions`) supplies ``opt``/``patterns``
+    when given — the same object the entry points thread — while the
+    pipeline-internal knobs (``engine``, ``stats``, ``infer_types``,
+    ``loops``) stay explicit kwargs.
     ``engine`` / ``stats`` are forwarded to :func:`repro.core.opt.optimize`
     (all optimize calls share the one stats object).  ``patterns=True``
     additionally enables the kernel-pattern rules of the fusion tier
@@ -98,6 +210,9 @@ def compile_pipeline(
     given, any remaining fallback reasons land in
     ``stats.fallback_reasons`` (structured, see ``FallbackReason``).
     """
+    if options is not None:
+        opt = options.opt
+        patterns = options.patterns
     # every phase below opens a span (see docs/observability.md for the
     # taxonomy); disarmed, span() is a single global None-check
     with obs_trace.span("compile_pipeline", graph=graph.name):
@@ -129,6 +244,26 @@ def compile_pipeline(
         return g
 
 
+def _apply_transform(
+    g: Graph, t: tuple, example: tuple | None, policy: str | int
+) -> Graph:
+    """Apply one pending AD stage.  ``example`` lets the builders run the
+    primal through the full pipeline first (loops lower before J), which
+    is what makes grad-of-loop adjoints closed first-order graphs."""
+    kind = t[0]
+    if kind == "grad":
+        return build_grad_graph(
+            g, t[1], example_args=example, checkpoint_policy=policy
+        )
+    if kind == "vag":
+        return build_value_and_grad_graph(
+            g, t[1], example_args=example, checkpoint_policy=policy
+        )
+    if kind == "vjp":
+        return build_vjp_graph(g, example_args=example, checkpoint_policy=policy)
+    raise ValueError(f"unknown transform {t!r}")
+
+
 class MyiaFunction:
     """A function compiled through the Myia pipeline, specialized and cached
     per call signature (the paper's call-site specialization)."""
@@ -138,51 +273,73 @@ class MyiaFunction:
         fn: Callable | None = None,
         graph: Graph | None = None,
         *,
-        backend: str = "jax",
-        opt: bool = True,
-        fuse: bool = False,
-        patterns: bool = False,
-        in_specs: tuple | None = None,
-        program_cache=None,
-        trace=None,
+        options: CompileOptions | None = None,
         name: str | None = None,
+        transforms: tuple = (),
+        backend: Any = _UNSET,
+        opt: Any = _UNSET,
+        fuse: Any = _UNSET,
+        patterns: Any = _UNSET,
+        in_specs: Any = _UNSET,
+        program_cache: Any = _UNSET,
+        trace: Any = _UNSET,
     ) -> None:
         if fn is None and graph is None:
             raise ValueError("need fn or graph")
         self._fn = fn
         self._graph = graph
-        self.backend = backend
-        self.opt = opt
-        #: AOT tier: a :class:`repro.core.jax_backend.ProgramCache` makes
-        #: compiled specializations durable — lowered straight-line graphs
-        #: are compiled via ``jit(...).lower().compile()`` and persisted
-        #: (graph payload + serialized executable), so a later process
-        #: serving the same program skips XLA entirely.  Graphs that fall
-        #: back to the VM, or calls with non-array statics, silently use
-        #: the ordinary tiers.
-        self.program_cache = program_cache
-        #: fusion tier: cluster the optimized graph and execute regions as
-        #: generated Pallas kernels (see docs/fusion.md)
-        self.fuse = fuse
-        #: kernel-pattern rewrites (rmsnorm / attention → Pallas prims)
-        self.patterns = patterns
-        #: SPMD tier: per-argument sharding specs (PartitionSpec / tuple of
-        #: axis names / None).  When set AND a concrete mesh context is
-        #: active (``repro.parallel.mesh_context``), specialization compiles
-        #: the sharded tier — the same optimized+fused graph, partitioned
-        #: by ``repro.core.spmd`` and run under ``shard_map``.  With no
-        #: active mesh this is inert: the single-device tiers run unchanged.
-        self.in_specs = in_specs
-        #: observability tier: a :class:`repro.obs.Tracer` armed for the
-        #: dynamic extent of every specialization this function compiles
-        #: (pipeline phases, inline waves, XLA compiles all land in it).
-        #: None (the default) keeps the hot path on the global
-        #: ``obs.trace`` arming — zero overhead unless someone armed it.
-        self.trace = trace
+        #: the resolved :class:`CompileOptions` — the single source of
+        #: truth for every tier (the legacy per-tier attributes below are
+        #: delegating properties over this object):
+        #:
+        #: * ``program_cache`` — AOT tier: a ProgramCache makes compiled
+        #:   specializations durable (``jit(...).lower().compile()`` +
+        #:   serialized executable), so a warm process skips XLA entirely.
+        #: * ``fuse`` / ``patterns`` — fusion tier: clustered regions run
+        #:   as generated Pallas kernels (docs/fusion.md).
+        #: * ``in_specs`` — SPMD tier: per-argument sharding specs; active
+        #:   only under a concrete mesh context, inert otherwise.
+        #: * ``trace`` — observability tier: a Tracer armed for the
+        #:   dynamic extent of every specialization.
+        #: * ``checkpoint_policy`` — loop-adjoint carry recording (used
+        #:   when pending AD ``transforms`` resolve at specialization).
+        self.options = _resolve_options(
+            options, "MyiaFunction", {
+                "backend": backend, "opt": opt, "fuse": fuse,
+                "patterns": patterns, "in_specs": in_specs,
+                "program_cache": program_cache, "trace": trace,
+            },
+        )
+        #: pending AD transforms, applied at specialization time *after*
+        #: the primal has run the loop-lowering pipeline: a tuple of
+        #: ``("grad", wrt)`` / ``("vag", wrt)`` / ``("vjp",)`` stages.
+        #: Empty for plain ``@myia`` functions and for AD of straight-line
+        #: programs (those build their adjoint graph eagerly).
+        self.transforms = tuple(transforms)
+        self._resolved: dict[tuple, Graph] = {}
         self._specializations: dict[tuple, Callable] = {}
         self.__name__ = name or (fn.__name__ if fn is not None else graph.name)
         if fn is not None:
             functools.update_wrapper(self, fn, updated=())
+
+    # -- legacy attribute surface (delegates to .options) -----------------
+    def _opt_property(field):  # noqa: N805 — descriptor factory, not a method
+        def get(self):
+            return getattr(self.options, field)
+
+        def set_(self, value):
+            self.options = dataclasses.replace(self.options, **{field: value})
+
+        return property(get, set_, doc=f"delegates to CompileOptions.{field}")
+
+    backend = _opt_property("backend")
+    opt = _opt_property("opt")
+    fuse = _opt_property("fuse")
+    patterns = _opt_property("patterns")
+    in_specs = _opt_property("in_specs")
+    program_cache = _opt_property("program_cache")
+    trace = _opt_property("trace")
+    del _opt_property
 
     # -- graph access ---------------------------------------------------
     @property
@@ -193,6 +350,29 @@ class MyiaFunction:
 
     def __myia_graph_factory__(self) -> Graph:
         return self.graph
+
+    # -- pending AD transforms -------------------------------------------
+    def _resolved_graph(self, example: tuple | None) -> Graph:
+        """The graph to compile: the primal with any pending AD transforms
+        applied.  ``example`` is the full abstract signature of *this*
+        function; each trailing ``vjp`` stage consumes one argument (the
+        output cotangent), so the primal's own signature is the prefix."""
+        if not self.transforms:
+            return self.graph
+        n_vjp = sum(1 for t in self.transforms if t[0] == "vjp")
+        base_ex = example[: len(example) - n_vjp] if example is not None else None
+        key = ("resolved", base_ex)
+        hit = self._resolved.get(key)
+        if hit is not None:
+            return hit
+        g = self.graph
+        ex = base_ex
+        for t in self.transforms:
+            g = _apply_transform(g, t, ex, self.options.checkpoint_policy)
+            # downstream stages differentiate the adjoint graph itself;
+            # its signature matches the primal's (grad) so ex carries over
+        self._resolved[key] = g
+        return g
 
     # -- compilation ------------------------------------------------------
     def _sigkey(self, args: tuple) -> tuple:
@@ -258,8 +438,9 @@ class MyiaFunction:
                 example = tuple(abstract_of_value(a) for a in args)
             except InferenceError:
                 example = None  # e.g. a list static: skip inference, VM handles it
+            base = self._resolved_graph(example) if self.transforms else self.graph
             g = compile_pipeline(
-                self.graph, example, opt=self.opt, patterns=self.patterns
+                base, example, opt=self.opt, patterns=self.patterns
             )
             runner = None
             if mesh is not None:
@@ -409,11 +590,10 @@ class MyiaFunction:
 
     # -- introspection (benchmarks / tests) --------------------------------
     def optimized_graph(self, *args: Any) -> Graph:
+        example = tuple(abstract_of_value(a) for a in args)
+        base = self._resolved_graph(example) if self.transforms else self.graph
         return compile_pipeline(
-            self.graph,
-            tuple(abstract_of_value(a) for a in args),
-            opt=self.opt,
-            patterns=self.patterns,
+            base, example, opt=self.opt, patterns=self.patterns
         )
 
     def node_count(self, *args: Any, optimized: bool = True) -> int:
@@ -424,43 +604,45 @@ class MyiaFunction:
 def myia(
     fn: Callable | None = None,
     *,
-    backend: str = "jax",
-    opt: bool = True,
-    fuse: bool = False,
-    patterns: bool = False,
-    in_specs: tuple | None = None,
-    program_cache=None,
-    trace=None,
+    options: CompileOptions | None = None,
+    backend: Any = _UNSET,
+    opt: Any = _UNSET,
+    fuse: Any = _UNSET,
+    patterns: Any = _UNSET,
+    in_specs: Any = _UNSET,
+    program_cache: Any = _UNSET,
+    trace: Any = _UNSET,
 ):
     """Decorator: compile ``fn`` (pure Python subset) through the pipeline.
 
-    ``fuse=True`` turns on the fusion tier (clustered regions run as
-    generated Pallas kernels); ``patterns=True`` additionally rewrites
-    kernel-shaped subgraphs (rmsnorm, softmax-attention core) to the
-    hand-written Pallas primitives.  Both default off: the unfused
-    straight-line lowering remains the bit-exact reference.
+    Tier configuration arrives as one ``options=CompileOptions(...)``
+    (the per-kwarg spelling still works but is deprecated — see the
+    module docstring's migration note):
 
-    ``in_specs`` (one sharding spec per argument) arms the SPMD tier:
-    under an active concrete mesh context the optimized+fused graph is
-    partitioned per-shard and executed under ``shard_map``; with no mesh
-    active the single-device tiers run unchanged (see docs/pipeline.md).
-
-    ``program_cache`` (a :class:`repro.core.jax_backend.ProgramCache`)
-    arms the AOT tier: all-array specializations of lowerable graphs are
-    compiled ahead of time and persisted, so a warm process reloads the
-    XLA executable instead of recompiling (see docs/serving.md).
-
-    ``trace`` (a :class:`repro.obs.Tracer`) arms the observability tier:
-    every specialization compiles with the tracer armed, so compile
-    pipeline phases, inline waves and XLA compiles land in its buffer
-    (export with ``tracer.write_chrome_trace``; see docs/observability.md).
+    * ``fuse=True`` turns on the fusion tier (clustered regions run as
+      generated Pallas kernels); ``patterns=True`` additionally rewrites
+      kernel-shaped subgraphs (rmsnorm, softmax-attention core) to the
+      hand-written Pallas primitives.  Both default off: the unfused
+      straight-line lowering remains the bit-exact reference.
+    * ``in_specs`` (one sharding spec per argument) arms the SPMD tier:
+      under an active concrete mesh context the optimized+fused graph is
+      partitioned per-shard and executed under ``shard_map``; with no
+      mesh active the single-device tiers run unchanged.
+    * ``program_cache`` (a :class:`repro.core.jax_backend.ProgramCache`)
+      arms the AOT tier: all-array specializations of lowerable graphs
+      are compiled ahead of time and persisted, so a warm process reloads
+      the XLA executable instead of recompiling (see docs/serving.md).
+    * ``trace`` (a :class:`repro.obs.Tracer`) arms the observability
+      tier: every specialization compiles with the tracer armed, so
+      pipeline phases, inline waves and XLA compiles land in its buffer.
     """
+    opts = _resolve_options(options, "myia", {
+        "backend": backend, "opt": opt, "fuse": fuse, "patterns": patterns,
+        "in_specs": in_specs, "program_cache": program_cache, "trace": trace,
+    })
 
     def wrap(f: Callable) -> MyiaFunction:
-        return MyiaFunction(
-            f, backend=backend, opt=opt, fuse=fuse, patterns=patterns,
-            in_specs=in_specs, program_cache=program_cache, trace=trace,
-        )
+        return MyiaFunction(f, options=opts)
 
     return wrap(fn) if fn is not None else wrap
 
@@ -505,56 +687,96 @@ def _macro_expand_vag(parser, block, ast_args):
     return Constant(build_value_and_grad_graph(fn_node.value))
 
 
+def _transform_entry(
+    fn: Any, transform: tuple, opts: CompileOptions, caller: str
+) -> MyiaFunction:
+    """Shared construction path of the AD entry points.
+
+    Straight-line primals build their adjoint graph eagerly (back-compat:
+    ``grad(f).graph`` is the adjoint, and the grad *macro* path stays
+    parse-time).  Primals containing loops or recursion defer the
+    transform to specialization (``MyiaFunction.transforms``), so the
+    primal runs the loop-lowering pipeline — with the concrete signature
+    — before J sees it; that ordering is what keeps grad-of-loop programs
+    off the VM.  Chaining (``grad(grad(f))``) extends the pending tuple."""
+    if isinstance(fn, MyiaFunction) and fn.transforms:
+        return MyiaFunction(
+            fn=fn._fn, graph=fn._graph, options=opts,
+            transforms=fn.transforms + (transform,),
+            name=f"{transform[0]}_{fn.__name__}",
+        )
+    primal = _as_graph(fn)
+    if _needs_loop_pipeline(primal):
+        return MyiaFunction(
+            graph=primal, options=opts, transforms=(transform,),
+            name=f"{transform[0]}_{primal.name}",
+        )
+    g = _apply_transform(primal, transform, None, opts.checkpoint_policy)
+    return MyiaFunction(graph=g, options=opts, name=g.name)
+
+
 def grad(
     fn: Any,
     wrt: int | tuple[int, ...] = 0,
     *,
-    backend: str = "jax",
-    opt: bool = True,
-    fuse: bool = False,
-    patterns: bool = False,
-    in_specs: tuple | None = None,
+    options: CompileOptions | None = None,
+    backend: Any = _UNSET,
+    opt: Any = _UNSET,
+    fuse: Any = _UNSET,
+    patterns: Any = _UNSET,
+    in_specs: Any = _UNSET,
+    program_cache: Any = _UNSET,
+    trace: Any = _UNSET,
 ):
     """Reverse-mode gradient of a scalar-output function (paper §3.2).
 
-    The adjoint takes the same arguments as ``fn``, so ``in_specs``
-    (the SPMD tier) carries over unchanged."""
-    g = build_grad_graph(_as_graph(fn), wrt)
-    return MyiaFunction(
-        graph=g, backend=backend, opt=opt, fuse=fuse, patterns=patterns,
-        in_specs=in_specs, name=g.name,
-    )
+    The adjoint takes the same arguments as ``fn``, so every tier in
+    ``options`` (SPMD ``in_specs``, the AOT ``program_cache``, ``trace``)
+    carries over unchanged — full parity with ``myia``."""
+    opts = _resolve_options(options, "grad", {
+        "backend": backend, "opt": opt, "fuse": fuse, "patterns": patterns,
+        "in_specs": in_specs, "program_cache": program_cache, "trace": trace,
+    })
+    return _transform_entry(fn, ("grad", wrt), opts, "grad")
 
 
 def value_and_grad(
     fn: Any,
     wrt: int | tuple[int, ...] = 0,
     *,
-    backend: str = "jax",
-    opt: bool = True,
-    fuse: bool = False,
-    patterns: bool = False,
-    in_specs: tuple | None = None,
+    options: CompileOptions | None = None,
+    backend: Any = _UNSET,
+    opt: Any = _UNSET,
+    fuse: Any = _UNSET,
+    patterns: Any = _UNSET,
+    in_specs: Any = _UNSET,
+    program_cache: Any = _UNSET,
+    trace: Any = _UNSET,
 ):
-    g = build_value_and_grad_graph(_as_graph(fn), wrt)
-    return MyiaFunction(
-        graph=g, backend=backend, opt=opt, fuse=fuse, patterns=patterns,
-        in_specs=in_specs, name=g.name,
-    )
+    opts = _resolve_options(options, "value_and_grad", {
+        "backend": backend, "opt": opt, "fuse": fuse, "patterns": patterns,
+        "in_specs": in_specs, "program_cache": program_cache, "trace": trace,
+    })
+    return _transform_entry(fn, ("vag", wrt), opts, "value_and_grad")
 
 
 def vjp(
     fn: Any,
     *,
-    backend: str = "jax",
-    opt: bool = True,
-    fuse: bool = False,
-    patterns: bool = False,
+    options: CompileOptions | None = None,
+    backend: Any = _UNSET,
+    opt: Any = _UNSET,
+    fuse: Any = _UNSET,
+    patterns: Any = _UNSET,
+    in_specs: Any = _UNSET,
+    program_cache: Any = _UNSET,
+    trace: Any = _UNSET,
 ):
-    g = build_vjp_graph(_as_graph(fn))
-    return MyiaFunction(
-        graph=g, backend=backend, opt=opt, fuse=fuse, patterns=patterns, name=g.name
-    )
+    opts = _resolve_options(options, "vjp", {
+        "backend": backend, "opt": opt, "fuse": fuse, "patterns": patterns,
+        "in_specs": in_specs, "program_cache": program_cache, "trace": trace,
+    })
+    return _transform_entry(fn, ("vjp",), opts, "vjp")
 
 
 grad.__is_myia_macro__ = True

@@ -36,11 +36,14 @@ VM.  This module closes most of that gap:
   ``for i in range(...)`` case); everything else becomes
   ``jax.lax.while_loop``.
 
-What still genuinely needs the VM: non-tail self-calls (the recursive
-result feeds another op — ``x * f(x, n-1)``), break-style conditional
-exits from a loop body, nested loops (the inner family tail-calls the
-outer header, so both live in one SCC), and closures selected by
-``switch`` on traced conditions.  ``docs/pipeline.md`` keeps the matrix.
+Nested loops (the inner family tail-calls the outer header, so both
+live in one SCC) lower by emitting the inner ``while_loop``/``scan_loop``
+*inside* the outer step graph, and non-tail self-recursion in the
+single-call affine shape (``x * f(x, n-1)``) lowers as a forward
+trip-count loop plus a reversed accumulator loop.  What still genuinely
+needs the VM: break-style conditional exits from a loop body, non-affine
+or multi-call non-tail recursion, and closures selected by ``switch`` on
+traced conditions.  ``docs/pipeline.md`` keeps the matrix.
 """
 
 from __future__ import annotations
@@ -479,6 +482,110 @@ class _CloneEnv:
         return cloner.clone()
 
 
+def _graph_succs(g: Graph) -> set[Graph]:
+    """Graphs referenced as constants by applies *owned* by ``g``."""
+    out: set[Graph] = set()
+    if g.return_ is None:
+        return out
+    for n in dfs_nodes(g.return_):
+        if isinstance(n, Apply) and n.graph is g:
+            for inp in n.inputs:
+                if is_constant_graph(inp):
+                    out.add(inp.value)
+    return out
+
+
+def _reach_excluding(starts: list[Graph], h: Graph) -> set[Graph]:
+    """Graphs reachable from ``starts`` through graph constants, never
+    entering ``h`` (the enclosing loop header)."""
+    seen: set[Graph] = set()
+    stack = list(starts)
+    while stack:
+        g = stack.pop()
+        if g in seen or g is h:
+            continue
+        seen.add(g)
+        stack.extend(_graph_succs(g))
+    return seen
+
+
+def _inner_family(c: Graph, h: Graph) -> set[Graph]:
+    """The inner loop family headed by ``c``: graphs on a ``c``-cycle that
+    avoids the enclosing header ``h``.  Empty when ``c`` only re-enters
+    the outer loop (i.e. it is not itself a loop header)."""
+    fwd = _reach_excluding(list(_graph_succs(c)), h)
+    if c not in fwd:
+        return set()
+    return {g for g in fwd if c in _reach_excluding(list(_graph_succs(g)), h)}
+
+
+def _family_free_vars(fam: set[Graph]) -> list[Node]:
+    """Free variables of an *inner* loop family: nodes referenced from the
+    family's bodies but owned outside it.  Unlike :func:`free_variables`
+    this does not descend into graph constants outside ``fam`` (the
+    continuation block that jumps back to the outer header is not part of
+    the inner loop), so the outer back-edge never pollutes the capture
+    set.  Deterministic order (DFS from each header, sorted by id)."""
+    out: list[Node] = []
+    seen: set[int] = set()
+    stack: list[Node] = [
+        g.return_ for g in sorted(fam, key=lambda g: g._id) if g.return_ is not None
+    ]
+    while stack:
+        n = stack.pop()
+        if n._id in seen:
+            continue
+        seen.add(n._id)
+        if isinstance(n, Constant):
+            if isinstance(n.value, Graph) and n.value in fam:
+                if n.value.return_ is not None:
+                    stack.append(n.value.return_)
+            continue
+        if n.graph not in fam:
+            out.append(n)
+            continue
+        if isinstance(n, Apply):
+            stack.extend(n.inputs)
+    return out
+
+
+def _match_header_switch(
+    h: Graph, fam: set[Graph]
+) -> tuple[Node, Graph, Graph, bool]:
+    """Match the canonical loop-header shape ``return switch(c, tb, fb)()``
+    and split the branches: returns ``(cond_node, loop_g, other_g,
+    negate)`` where ``loop_g`` is the in-family branch and ``negate``
+    records that the loop continues when the switch condition is false."""
+    ret = h.return_
+    if not (isinstance(ret, Apply) and len(ret.inputs) == 1):
+        raise _LoopMismatch(
+            FallbackReason.RECURSION, "header does not end in an applied switch"
+        )
+    sel = ret.inputs[0]
+    if not (is_apply(sel, P.switch) and len(sel.args) == 3):
+        raise _LoopMismatch(
+            FallbackReason.RECURSION, "header does not end in an applied switch"
+        )
+    cond_node, tb, fb = sel.args
+    if not (is_constant_graph(tb) and is_constant_graph(fb)):
+        raise _LoopMismatch(
+            FallbackReason.RECURSION, "switch branches are not graph constants"
+        )
+    t_loops = tb.value in fam
+    f_loops = fb.value in fam
+    if t_loops == f_loops:
+        raise _LoopMismatch(
+            FallbackReason.RECURSION,
+            "both switch branches re-enter the loop"
+            if t_loops
+            else "no switch branch re-enters the loop",
+        )
+    loop_g, other_g = (tb.value, fb.value) if t_loops else (fb.value, tb.value)
+    if loop_g.parameters or other_g.parameters:
+        raise _LoopMismatch(FallbackReason.RECURSION, "switch branch takes parameters")
+    return cond_node, loop_g, other_g, not t_loops
+
+
 #: trace budget: loop-block entries per site (guards against irreducible
 #: control flow — e.g. a nested loop whose family reaches this header)
 _MAX_TRACE = 200
@@ -488,51 +595,32 @@ class _LoopBuilder:
     """Match one entry call of a tail-recursive family and build the
     closed cond/step/exit graphs for the loop primitives."""
 
-    def __init__(self, site: Apply) -> None:
+    def __init__(
+        self,
+        site: Apply,
+        h: Graph | None = None,
+        fam: set[Graph] | None = None,
+        fvs: list[Node] | None = None,
+    ) -> None:
         self.site = site
-        self.h: Graph = site.fn.value
-        self.fam = _loop_family(self.h)
-        self.k = len(self.h.parameters)
-        self.fvs = free_variables(self.h)
+        self.h: Graph = h if h is not None else site.fn.value
+        self.fam = fam if fam is not None else _loop_family(self.h)
+        #: dead-carry elimination: a header parameter with no users (the
+        #: parser threads not-yet-bound variables as ``None`` placeholders
+        #: that are written on the back-edge but never read) is dropped
+        #: from the carry — it has no jax-typeable value and no effect
+        self.live = [i for i, p in enumerate(self.h.parameters) if p.users]
+        self.k = len(self.live)
+        self.fvs = fvs if fvs is not None else free_variables(self.h)
         self._steps = 0
 
-    def build(self) -> tuple[Graph, Graph, Graph]:
-        h = self.h
-        if len(self.site.args) != self.k:
-            raise _LoopMismatch(FallbackReason.RECURSION, "entry call arity mismatch")
-        ret = h.return_
-        if not (isinstance(ret, Apply) and len(ret.inputs) == 1):
-            raise _LoopMismatch(
-                FallbackReason.RECURSION,
-                "header does not end in an applied switch",
-            )
-        sel = ret.inputs[0]
-        if not (is_apply(sel, P.switch) and len(sel.args) == 3):
-            raise _LoopMismatch(
-                FallbackReason.RECURSION,
-                "header does not end in an applied switch",
-            )
-        cond_node, tb, fb = sel.args
-        if not (is_constant_graph(tb) and is_constant_graph(fb)):
-            raise _LoopMismatch(
-                FallbackReason.RECURSION, "switch branches are not graph constants"
-            )
-        t_loops = tb.value in self.fam
-        f_loops = fb.value in self.fam
-        if t_loops == f_loops:
-            raise _LoopMismatch(
-                FallbackReason.RECURSION,
-                "both switch branches re-enter the loop"
-                if t_loops
-                else "no switch branch re-enters the loop",
-            )
-        loop_g, exit_g = (tb.value, fb.value) if t_loops else (fb.value, tb.value)
-        negate = not t_loops
-        if loop_g.parameters or exit_g.parameters:
-            raise _LoopMismatch(
-                FallbackReason.RECURSION, "switch branch takes parameters"
-            )
-        for p in h.parameters:
+    def entry_args(self, args: list[Node]) -> list[Node]:
+        """Filter an entry argument list down to the live carry slots."""
+        return [args[i] for i in self.live]
+
+    def _check_carries(self) -> None:
+        for i in self.live:
+            p = self.h.parameters[i]
             if not _carryable(p.abstract):
                 raise _LoopMismatch(
                     FallbackReason.NON_ARRAY,
@@ -540,25 +628,13 @@ class _LoopBuilder:
                     f"({p.abstract!r})",
                 )
 
-        cg = self._fresh("loop_cond")
-        c = _CloneEnv(cg, self.fam, self._base_env(cg)).clone(cond_node)
-        if negate:
-            neg = cg.apply(P.bool_not, c)
-            neg.abstract = AScalar("bool")
-            c = neg
-        cg.set_return(c)
-
-        sg = self._fresh("loop_step")
-        exprs = self._trace(sg, self._base_env(sg), loop_g)
-        mt = sg.apply(P.make_tuple, *exprs)
-        mt.abstract = ATuple(
-            tuple(
-                e.abstract if e.abstract is not None else _widen_abstract(p.abstract)
-                for e, p in zip(exprs, self.h.parameters)
-            )
-        )
-        sg.set_return(mt)
-
+    def build(self) -> tuple[Graph, Graph, Graph]:
+        if len(self.site.args) != len(self.h.parameters):
+            raise _LoopMismatch(FallbackReason.RECURSION, "entry call arity mismatch")
+        cond_node, loop_g, exit_g, negate = _match_header_switch(self.h, self.fam)
+        self._check_carries()
+        cg = self._build_cond(cond_node, negate)
+        sg = self._build_step(loop_g)
         eg = self._fresh("loop_exit")
         eg.set_return(
             _CloneEnv(
@@ -567,9 +643,52 @@ class _LoopBuilder:
         )
         return cg, sg, eg
 
+    def build_inner(self) -> tuple[Graph, Graph, Graph, Graph]:
+        """Build cond/step graphs for an *inner* loop header reached while
+        tracing an enclosing loop body.  The non-looping switch branch is
+        not a value exit here — it is the continuation block that jumps
+        back to the outer header — so the exit graph is an identity
+        returning the final carry tuple, and the continuation is handed
+        back to the outer trace."""
+        cond_node, loop_g, cont_g, negate = _match_header_switch(self.h, self.fam)
+        self._check_carries()
+        cg = self._build_cond(cond_node, negate)
+        sg = self._build_step(loop_g)
+        eg = self._fresh("loop_exit")
+        mt = eg.apply(P.make_tuple, *eg.parameters[: self.k])
+        mt.abstract = ATuple(tuple(p.abstract for p in eg.parameters[: self.k]))
+        eg.set_return(mt)
+        return cg, sg, eg, cont_g
+
+    def _build_cond(self, cond_node: Node, negate: bool) -> Graph:
+        cg = self._fresh("loop_cond")
+        c = _CloneEnv(cg, self.fam, self._base_env(cg)).clone(cond_node)
+        if negate:
+            neg = cg.apply(P.bool_not, c)
+            neg.abstract = AScalar("bool")
+            c = neg
+        cg.set_return(c)
+        return cg
+
+    def _build_step(self, loop_g: Graph) -> Graph:
+        sg = self._fresh("loop_step")
+        exprs = self._trace(sg, self._base_env(sg), loop_g)
+        mt = sg.apply(P.make_tuple, *exprs)
+        mt.abstract = ATuple(
+            tuple(
+                e.abstract
+                if e.abstract is not None
+                else _widen_abstract(self.h.parameters[i].abstract)
+                for e, i in zip(exprs, self.live)
+            )
+        )
+        sg.set_return(mt)
+        return sg
+
     def _fresh(self, tag: str) -> Graph:
         g = Graph(f"{self.h.name}:{tag}")
-        for p in self.h.parameters:
+        for i in self.live:
+            p = self.h.parameters[i]
             np_ = g.add_parameter(p.debug_name)
             np_.abstract = _widen_abstract(p.abstract)
         for j, v in enumerate(self.fvs):
@@ -579,8 +698,8 @@ class _LoopBuilder:
 
     def _base_env(self, g: Graph) -> dict[int, Node]:
         env: dict[int, Node] = {}
-        for p, np_ in zip(self.h.parameters, g.parameters[: self.k]):
-            env[p._id] = np_
+        for i, np_ in zip(self.live, g.parameters[: self.k]):
+            env[self.h.parameters[i]._id] = np_
         for v, np_ in zip(self.fvs, g.parameters[self.k:]):
             env[v._id] = np_
         return env
@@ -607,16 +726,19 @@ class _LoopBuilder:
         if is_constant_graph(fn):
             callee = fn.value
             if callee is self.h:
-                if len(ret.args) != self.k:
+                if len(ret.args) != len(self.h.parameters):
                     raise _LoopMismatch(
                         FallbackReason.RECURSION, "back-edge arity mismatch"
                     )
-                return [ce.clone(a) for a in ret.args]
+                return [ce.clone(ret.args[i]) for i in self.live]
             if callee in self.fam:
                 if len(ret.args) != len(callee.parameters):
                     raise _LoopMismatch(
                         FallbackReason.RECURSION, "tail-call arity mismatch"
                     )
+                inner_fam = _inner_family(callee, self.h)
+                if inner_fam:
+                    return self._trace_inner(target, env, ce, ret, callee, inner_fam)
                 env2 = dict(env)
                 for p, a in zip(callee.parameters, [ce.clone(a) for a in ret.args]):
                     env2[p._id] = a
@@ -653,7 +775,7 @@ class _LoopBuilder:
             out: list[Node] = []
             for i, (x, y) in enumerate(zip(ta, fa)):
                 s = target.apply(P.switch, cnode, x, y)
-                s.abstract = _widen_abstract(self.h.parameters[i].abstract)
+                s.abstract = _widen_abstract(self.h.parameters[self.live[i]].abstract)
                 out.append(s)
             return out
         raise _LoopMismatch(
@@ -661,8 +783,64 @@ class _LoopBuilder:
             f"unrecognized loop-block return in {g.name!r}",
         )
 
+    def _trace_inner(
+        self,
+        target: Graph,
+        env: dict[int, Node],
+        ce: _CloneEnv,
+        ret: Apply,
+        callee: Graph,
+        inner_fam: set[Graph],
+    ) -> list[Node]:
+        """The loop body tail-calls an *inner* loop header: build the inner
+        loop's closed graphs, emit its ``while_loop``/``scan_loop`` apply
+        inside the outer step graph, bind the inner carries to getitems of
+        its result tuple, and continue the outer trace through the inner
+        loop's continuation block (which holds the outer back-edge)."""
+        ib = _LoopBuilder(ret, h=callee, fam=inner_fam, fvs=_family_free_vars(inner_fam))
+        icg, isg, ieg, cont_g = ib.build_inner()
+        if cont_g not in self.fam:
+            raise _LoopMismatch(
+                FallbackReason.RECURSION,
+                f"inner loop {callee.name!r} continues into {cont_g.name!r} "
+                "outside the loop family (break-style control flow)",
+            )
+        args = [ce.clone(a) for a in ib.entry_args(list(ret.args))]
+        fv_args = [ce.clone(v) for v in ib.fvs]
+        n_iters = _static_trip_count(ib.entry_args(list(ret.args)), icg, isg, ib.k)
+        if n_iters is not None:
+            inner = target.apply(
+                P.scan_loop,
+                Constant(isg, isg.name),
+                Constant(ieg, ieg.name),
+                n_iters,
+                ib.k,
+                *args,
+                *fv_args,
+                debug_name=f"scan_{callee.name}",
+            )
+        else:
+            inner = target.apply(
+                P.while_loop,
+                Constant(icg, icg.name),
+                Constant(isg, isg.name),
+                Constant(ieg, ieg.name),
+                ib.k,
+                *args,
+                *fv_args,
+                debug_name=f"while_{callee.name}",
+            )
+        inner.abstract = _widen_abstract(ieg.return_.abstract)
+        env2 = dict(env)
+        for j, i in enumerate(ib.live):
+            p = callee.parameters[i]
+            gi = target.apply(P.tuple_getitem, inner, j)
+            gi.abstract = _widen_abstract(p.abstract)
+            env2[p._id] = gi
+        return self._trace(target, env2, cont_g)
 
-def _static_int(node: Node, site: Apply, cg: Graph, k: int) -> int | None:
+
+def _static_int(node: Node, args: list[Node], cg: Graph, k: int) -> int | None:
     """Resolve a cond/step operand to a static int: a literal constant, or
     a loop parameter whose binding at the entry site is statically known."""
     if isinstance(node, Constant):
@@ -670,7 +848,7 @@ def _static_int(node: Node, site: Apply, cg: Graph, k: int) -> int | None:
         return v if isinstance(v, int) and not isinstance(v, bool) else None
     if isinstance(node, Parameter) and node.graph is cg:
         j = cg.parameters.index(node)
-        init = site.args[j] if j < k else None
+        init = args[j] if j < k else None
         if init is None:
             return None
         if isinstance(init, Constant):
@@ -682,10 +860,11 @@ def _static_int(node: Node, site: Apply, cg: Graph, k: int) -> int | None:
     return None
 
 
-def _static_trip_count(site: Apply, cg: Graph, sg: Graph, k: int) -> int | None:
+def _static_trip_count(args: list[Node], cg: Graph, sg: Graph, k: int) -> int | None:
     """Trip count when the loop is an affine counting loop with static
     bounds (``for i in range(...)``): cond ``lt/gt(i, stop)``, step
-    ``i + const``, static init — the scan-shaped case."""
+    ``i + const``, static init — the scan-shaped case.  ``args`` is the
+    entry argument list, already filtered to the live carry slots."""
     ret = cg.return_
     if not isinstance(ret, Apply) or len(ret.args) != 2:
         return None
@@ -717,8 +896,8 @@ def _static_trip_count(site: Apply, cg: Graph, sg: Graph, k: int) -> int | None:
                 and sg.parameters.index(upd_j) == j
             ):
                 return None
-    stop = _static_int(stop_n, site, cg, k)
-    start = _static_int(cg.parameters[idx], site, cg, k)
+    stop = _static_int(stop_n, args, cg, k)
+    start = _static_int(cg.parameters[idx], args, cg, k)
     if stop is None or start is None:
         return None
     upd = mt.args[idx]
@@ -745,6 +924,278 @@ def _static_trip_count(site: Apply, cg: Graph, sg: Graph, k: int) -> int | None:
     if step > 0:
         return None
     return max(0, math.ceil((start - stop) / (-step)))
+
+
+class _NonTailBuilder:
+    """Non-tail self-recursion in the single-call affine shape::
+
+        def f(p):  return base(p) if done(p) else E[p, f(step(p))]
+
+    where ``step`` advances each parameter by a constant integer delta
+    (``n - 1``, passthrough, ...).  The recursion unwinds into two loops,
+    both closed first-order graphs:
+
+    1. a forward *count* loop running ``p`` to the base case while
+       counting the recursion depth ``T``;
+    2. a reversed *accumulator* loop stepping ``p`` back toward the entry
+       (the inverse affine update) and folding ``acc = E[p, acc]`` — the
+       order the call stack would unwind in.
+
+    ``x * f(x, n - 1)`` — the canonical fold — becomes a trip-count loop
+    plus ``acc = x * acc`` repeated ``T`` times.  Anything non-affine,
+    with several self-calls, or with the call result feeding control flow
+    stays a :class:`_LoopMismatch` and falls back to the VM."""
+
+    def __init__(self, site: Apply) -> None:
+        self.site = site
+        self.h: Graph = site.fn.value
+        self.fam = _loop_family(self.h)
+        self.k = len(self.h.parameters)
+        self.fvs = free_variables(self.h)
+
+    # -- matching ----------------------------------------------------------
+
+    def _resolve_chain(self, g: Graph) -> tuple[Graph, set[Graph]]:
+        """Follow parameterless thunk tail-calls (``return block()``) down
+        to the graph that owns the branch's value expression."""
+        scope = {g}
+        for _ in range(32):
+            ret = g.return_
+            if (
+                isinstance(ret, Apply)
+                and is_constant_graph(ret.inputs[0])
+                and not ret.args
+                and ret.inputs[0].value is not self.h
+                and not ret.inputs[0].value.parameters
+                and ret.inputs[0].value.return_ is not None
+            ):
+                g = ret.inputs[0].value
+                scope.add(g)
+                continue
+            return g, scope
+        raise _LoopMismatch(
+            FallbackReason.RECURSION, "branch thunk chain too long"
+        )
+
+    @staticmethod
+    def _int_const(n: Node) -> int | None:
+        if isinstance(n, Constant):
+            v = n.value
+            if isinstance(v, int) and not isinstance(v, bool):
+                return v
+        return None
+
+    def _match_self_call(self, expr: Node) -> tuple[Apply, list[int]]:
+        """Find the unique self-call inside the recursive expression and
+        the per-parameter affine deltas of its argument list."""
+        calls: list[Apply] = []
+        seen: set[int] = set()
+        stack: list[Node] = [expr]
+        while stack:
+            n = stack.pop()
+            if n._id in seen:
+                continue
+            seen.add(n._id)
+            if isinstance(n, Constant):
+                # any graph referenced here that calls h is in the family
+                # (it is reachable from h through this very expression), so
+                # out-of-family constants are safe leaves
+                if isinstance(n.value, Graph) and n.value in self.fam:
+                    raise _LoopMismatch(
+                        FallbackReason.RECURSION,
+                        "loop graph escapes the recursive expression as a value",
+                    )
+                continue
+            if isinstance(n, Apply):
+                fn = n.fn
+                if is_constant_graph(fn) and fn.value in self.fam:
+                    if fn.value is not self.h:
+                        raise _LoopMismatch(
+                            FallbackReason.RECURSION,
+                            "recursive expression calls another family block",
+                        )
+                    calls.append(n)
+                    stack.extend(n.args)  # skip the callee constant itself
+                    continue
+                stack.extend(n.inputs)
+        if len(calls) != 1:
+            raise _LoopMismatch(
+                FallbackReason.RECURSION,
+                "non-tail recursion is not a single direct self-call",
+            )
+        sc = calls[0]
+        if len(sc.args) != self.k:
+            raise _LoopMismatch(FallbackReason.RECURSION, "self-call arity mismatch")
+        deltas: list[int] = []
+        for i, a in enumerate(sc.args):
+            p = self.h.parameters[i]
+            d: int | None = None
+            if a is p:
+                d = 0
+            elif is_apply(a, P.add) and len(a.args) == 2:
+                x, y = a.args
+                if x is p:
+                    d = self._int_const(y)
+                elif y is p:
+                    d = self._int_const(x)
+            elif is_apply(a, P.sub) and len(a.args) == 2:
+                x, y = a.args
+                if x is p:
+                    c = self._int_const(y)
+                    d = None if c is None else -c
+            if d is None:
+                raise _LoopMismatch(
+                    FallbackReason.RECURSION,
+                    f"self-call argument {i} is not an affine update of "
+                    f"parameter {p.debug_name or i}",
+                )
+            deltas.append(d)
+        return sc, deltas
+
+    # -- graph construction ------------------------------------------------
+
+    def _fresh(self, tag: str, extra: list[tuple[str, Any]]) -> Graph:
+        g = Graph(f"{self.h.name}:{tag}")
+        for p in self.h.parameters:
+            np_ = g.add_parameter(p.debug_name)
+            np_.abstract = _widen_abstract(p.abstract)
+        for name, ab in extra:
+            np_ = g.add_parameter(name)
+            np_.abstract = ab
+        for j, v in enumerate(self.fvs):
+            np_ = g.add_parameter(v.debug_name or f"fv{j}")
+            np_.abstract = _widen_abstract(v.abstract)
+        return g
+
+    def _env(self, g: Graph, n_extra: int) -> dict[int, Node]:
+        env: dict[int, Node] = {}
+        for p, np_ in zip(self.h.parameters, g.parameters[: self.k]):
+            env[p._id] = np_
+        for v, np_ in zip(self.fvs, g.parameters[self.k + n_extra:]):
+            env[v._id] = np_
+        return env
+
+    def _tuple(self, g: Graph, parts: list[Node]) -> Apply:
+        mt = g.apply(P.make_tuple, *parts)
+        mt.abstract = ATuple(tuple(p.abstract for p in parts))
+        return mt
+
+    def build(self, caller: Graph) -> Apply:
+        h = self.h
+        k = self.k
+        if len(self.site.args) != k:
+            raise _LoopMismatch(FallbackReason.RECURSION, "entry call arity mismatch")
+        cond_node, rec_g, base_g, negate = _match_header_switch(h, self.fam)
+        for p in h.parameters:
+            if not _carryable(p.abstract):
+                raise _LoopMismatch(
+                    FallbackReason.NON_ARRAY,
+                    f"recursion carry {p.debug_name or p!r} is not an array "
+                    f"value ({p.abstract!r})",
+                )
+        rec_owner, rec_scope = self._resolve_chain(rec_g)
+        expr = rec_owner.return_
+        sc, deltas = self._match_self_call(expr)
+        base_owner, base_scope = self._resolve_chain(base_g)
+
+        INT = AScalar("int")
+        p_abs = [_widen_abstract(p.abstract) for p in h.parameters]
+        acc_ab = _widen_abstract(self.site.abstract)
+
+        # 1. count loop: run p to the base case, counting the depth T
+        ccg = self._fresh("rec_count_cond", [("t", INT)])
+        c = _CloneEnv(ccg, self.fam, self._env(ccg, 1)).clone(cond_node)
+        if negate:
+            neg = ccg.apply(P.bool_not, c)
+            neg.abstract = AScalar("bool")
+            c = neg
+        ccg.set_return(c)
+
+        csg = self._fresh("rec_count_step", [("t", INT)])
+        ce = _CloneEnv(csg, self.fam, self._env(csg, 1))
+        nps = [ce.clone(a) for a in sc.args]
+        nt = csg.apply(P.add, csg.parameters[k], 1)
+        nt.abstract = INT
+        csg.set_return(self._tuple(csg, [*nps, nt]))
+
+        ceg = self._fresh("rec_count_exit", [("t", INT)])
+        ceg.set_return(self._tuple(ceg, list(ceg.parameters[: k + 1])))
+
+        fv_nodes = list(self.fvs)
+        p1 = caller.apply(
+            P.while_loop,
+            Constant(ccg, ccg.name),
+            Constant(csg, csg.name),
+            Constant(ceg, ceg.name),
+            k + 1,
+            *self.site.args,
+            0,
+            *fv_nodes,
+            debug_name=f"count_{h.name}",
+        )
+        p1.abstract = ATuple((*p_abs, INT))
+        pb: list[Node] = []
+        for i in range(k):
+            gi = caller.apply(P.tuple_getitem, p1, i)
+            gi.abstract = p_abs[i]
+            pb.append(gi)
+        tnode = caller.apply(P.tuple_getitem, p1, k)
+        tnode.abstract = INT
+
+        # 2. base value at the fixed point
+        benv: dict[int, Node] = {h.parameters[i]._id: pb[i] for i in range(k)}
+        for v in fv_nodes:
+            benv[v._id] = v
+        acc0 = _CloneEnv(
+            caller, self.fam, benv, scope=self.fam | base_scope
+        ).clone(base_owner.return_)
+
+        # 3. reversed accumulator loop: invert the affine step, fold E
+        extra = [("acc", acc_ab), ("j", INT), ("T", INT)]
+        rcg = self._fresh("rec_acc_cond", extra)
+        lt = rcg.apply(P.lt, rcg.parameters[k + 1], rcg.parameters[k + 2])
+        lt.abstract = AScalar("bool")
+        rcg.set_return(lt)
+
+        rsg = self._fresh("rec_acc_step", extra)
+        prev: list[Node] = []
+        for i, d in enumerate(deltas):
+            p = rsg.parameters[i]
+            if d == 0:
+                prev.append(p)
+            else:
+                inv = rsg.apply(P.sub, p, d)
+                inv.abstract = p.abstract
+                prev.append(inv)
+        eenv: dict[int, Node] = {h.parameters[i]._id: prev[i] for i in range(k)}
+        for v, np_ in zip(self.fvs, rsg.parameters[k + 3:]):
+            eenv[v._id] = np_
+        eenv[sc._id] = rsg.parameters[k]  # the unwound recursive result
+        nacc = _CloneEnv(
+            rsg, self.fam, eenv, scope=self.fam | rec_scope
+        ).clone(expr)
+        nj = rsg.apply(P.add, rsg.parameters[k + 1], 1)
+        nj.abstract = INT
+        rsg.set_return(self._tuple(rsg, [*prev, nacc, nj]))
+
+        reg = self._fresh("rec_acc_exit", extra)
+        reg.set_return(reg.parameters[k])
+
+        new = caller.apply(
+            P.while_loop,
+            Constant(rcg, rcg.name),
+            Constant(rsg, rsg.name),
+            Constant(reg, reg.name),
+            k + 2,
+            *pb,
+            acc0,
+            0,
+            tnode,
+            *fv_nodes,
+            debug_name=f"unwind_{h.name}",
+        )
+        new.abstract = acc_ab
+        return new
 
 
 def _find_site(root: Graph, failed: set[int]) -> Apply | None:
@@ -783,21 +1234,51 @@ def _lower_loops_body(
 ) -> None:
     for _ in range(64):
         site = _find_site(root, failed)
+        synthetic = False
         if site is None:
-            break
+            # A root-recursive function (``def f(x, n): ... f(x, n - 1)``)
+            # IS its own header, so no external entry call exists below
+            # root.  Synthesize one — args are the root's own parameters —
+            # and splice the loop in as the root's new return value.
+            if (
+                root._id not in failed
+                and root.return_ is not None
+                and _reaches_itself(root)
+            ):
+                site = Apply([Constant(root, root.name), *root.parameters], root)
+                site.abstract = root.return_.abstract
+                synthetic = True
+            else:
+                break
         h = site.fn.value
+
+        def splice(new: Apply) -> None:
+            if synthetic:
+                root.set_return(new)
+            else:
+                _replace(root, site, new)
+
         try:
             builder = _LoopBuilder(site)
             cg, sg, eg = builder.build()
         except _LoopMismatch as e:
-            failed.add(h._id)
-            report.reasons.append(
-                FallbackReason(e.kind, f"{h.name}: {e.detail}")
-            )
+            try:
+                new = _NonTailBuilder(site).build(site.graph)
+            except _LoopMismatch:
+                failed.add(h._id)
+                report.reasons.append(
+                    FallbackReason(e.kind, f"{h.name}: {e.detail}")
+                )
+                continue
+            splice(new)
+            report.lowered += 1
+            if stats is not None:
+                stats.record_rule("lower_loop_nontail")
             continue
         caller = site.graph
         fv_nodes = list(builder.fvs)
-        n_iters = _static_trip_count(site, cg, sg, builder.k)
+        args = builder.entry_args(list(site.args))
+        n_iters = _static_trip_count(args, cg, sg, builder.k)
         if n_iters is not None:
             new = caller.apply(
                 P.scan_loop,
@@ -805,7 +1286,7 @@ def _lower_loops_body(
                 Constant(eg, eg.name),
                 n_iters,
                 builder.k,
-                *site.args,
+                *args,
                 *fv_nodes,
                 debug_name=f"scan_{h.name}",
             )
@@ -819,12 +1300,12 @@ def _lower_loops_body(
                 Constant(sg, sg.name),
                 Constant(eg, eg.name),
                 builder.k,
-                *site.args,
+                *args,
                 *fv_nodes,
                 debug_name=f"while_{h.name}",
             )
             if stats is not None:
                 stats.record_rule("lower_loop_while")
         new.abstract = _widen_abstract(eg.return_.abstract)
-        _replace(root, site, new)
+        splice(new)
         report.lowered += 1

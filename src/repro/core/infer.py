@@ -773,12 +773,26 @@ def _loop_exit_closure(exit_ab: AbstractValue) -> AClosureSpec:
     raise InferenceError(f"loop exit must be a single closed graph, got {exit_ab!r}")
 
 
+def _annotate_loop_bodies(inf: Inferencer, subs: tuple, rest: tuple) -> None:
+    """Infer through a loop's cond/step closures for the annotation side
+    effect: their interior nodes (including *nested* loop applies emitted
+    by the while-adjoint's replay recomputation) need abstracts so a later
+    J pass can differentiate them (reverse-over-reverse).  Best-effort —
+    the loop's own result type comes from the exit graph alone."""
+    for s in subs:
+        try:
+            inf._call_closure(_loop_exit_closure(s), rest)
+        except InferenceError:
+            pass
+
+
 def _r_while_loop(inf: Inferencer, args: tuple, frame) -> AbstractValue:
     # (cond, step, exit, n_carry, *carry_and_extras).  The carry is
     # type-stable but its VALUES iterate — widen before applying the exit
     # graph so constant propagation can never fold across the back-edge.
     exit_spec = _loop_exit_closure(args[2])
     rest = tuple(_widen(a) for a in args[4:])
+    _annotate_loop_bodies(inf, args[:2], rest)
     return inf._call_closure(exit_spec, rest)
 
 
@@ -786,6 +800,7 @@ def _r_scan_loop(inf: Inferencer, args: tuple, frame) -> AbstractValue:
     # (step, exit, length, n_carry, *carry_and_extras)
     exit_spec = _loop_exit_closure(args[1])
     rest = tuple(_widen(a) for a in args[4:])
+    _annotate_loop_bodies(inf, args[:1], rest)
     return inf._call_closure(exit_spec, rest)
 
 

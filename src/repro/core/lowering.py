@@ -200,7 +200,7 @@ def _lower_graph_body(graph: Graph, fuse: bool) -> Callable:
             for sub in n.args[:n_sub]:
                 assert isinstance(sub, Constant) and isinstance(sub.value, Graph)
                 sname = f"_loop_{sub.value.name.split(':')[-1]}_{len(env)}"
-                env[sname] = lower_graph(sub.value)
+                env[sname] = lower_graph(sub.value, fuse=fuse)
                 subs.append(sname)
             rest = [ref(a) for a in n.args[n_sub:]]
             args = ", ".join(subs + rest)

@@ -313,13 +313,19 @@ COLLECTIVE_NAMES = frozenset(
 
 # ---------------------------------------------------------------------------
 # Structured loops (closure-elimination tier).  ``repro.core.closure``
-# rewrites residual tail-recursive families (parsed while/for loops) into
-# these primitives AFTER AD and optimization, so — like the collectives —
-# they carry no backpropagators: differentiating through one is a pipeline
-# ordering bug and must fail loudly.  ``cond``/``step``/``exit`` arrive as
-# *closed first-order graphs* (bound as lowered callables on the direct
-# path, as Closures on the VM path); the trailing arguments split at
-# ``n_carry`` into the loop carry (the header parameters) and the
+# rewrites residual recursive families (parsed while/for loops, nested
+# loop SCCs, affine non-tail self-recursion) into these primitives.
+# They register with ``bprop=None`` like the collectives, but for a
+# different reason: their adjoints are not pointwise VJP rules — they are
+# *loop-shaped* ("don't unroll the adjoint"), so ``repro.core.ad``'s
+# JTransformer differentiates the primitive applies directly, emitting a
+# reversed scan over saved-carry stacks (``scan_loop``) or a trip-counted,
+# checkpointed backward while (``while_loop``).  The pre-grad pipeline
+# (``ad._prepare_primal``) lowers parsed loops *before* J so grad sees
+# these primitives rather than raw recursion.  ``cond``/``step``/``exit``
+# arrive as *closed first-order graphs* (bound as lowered callables on the
+# direct path, as Closures on the VM path); the trailing arguments split
+# at ``n_carry`` into the loop carry (the header parameters) and the
 # loop-invariant closure environment (threaded unchanged to every call).
 # ---------------------------------------------------------------------------
 
@@ -481,7 +487,8 @@ pmax_axes = register_primitive("pmax_axes", _impl_pmax_axes)
 all_gather_axes = register_primitive("all_gather_axes", _impl_all_gather_axes)
 shard_slice = register_primitive("shard_slice", _impl_shard_slice)
 
-# structured loops: bprop=None — inserted after AD (see repro.core.closure)
+# structured loops: bprop=None — their adjoints are loop-shaped, built by
+# ad.JTransformer._j_while/_j_scan rather than a pointwise VJP rule
 while_loop = register_primitive("while_loop", _impl_while_loop, vararg=True)
 scan_loop = register_primitive("scan_loop", _impl_scan_loop, vararg=True)
 

@@ -327,6 +327,44 @@ class _Rules:
         elts[i] = v
         return _Res(_TSpec(tuple(elts)), [None, None, None])
 
+    # -- structured loops --------------------------------------------------
+    def _loop(self, n_graphs: int, node, arg_specs, arg_abs, out_ab) -> _Res:
+        """``while_loop`` / ``scan_loop``: the body is an opaque sub-graph
+        to this per-node propagation, so the sound contraction is to run
+        the whole loop replicated — sharded carries and extras are gathered
+        at entry and the exit tuple (including any saved-carry stacks the
+        adjoint threads) comes out replicated.  Per-shard loop bodies would
+        need a carry-spec fixpoint through the step graph; until then this
+        keeps loop-adjoint programs *eligible* for the SPMD tier (the rest
+        of the graph still shards) instead of failing propagation."""
+        reqs: list[Any] = []
+        for i, spec in enumerate(arg_specs):
+            if i < n_graphs or spec is _SCALAR:
+                reqs.append(None)  # sub-graphs / static ints / scalar operands
+            elif isinstance(spec, _TSpec):
+                if not _is_replicated(spec):
+                    raise SpmdError(
+                        f"cannot gather sharded tuple carry of {node!r}"
+                    )
+                reqs.append(None)
+            else:
+                reqs.append(tuple(() for _ in spec))
+        if isinstance(out_ab, ATuple):
+            out: Any = _TSpec(tuple(
+                _SCALAR if not isinstance(e, AArray) else tuple(() for _ in e.shape)
+                for e in out_ab.elements
+            ))
+        else:
+            shape = _shape_of(out_ab)
+            out = _SCALAR if shape is None else tuple(() for _ in shape)
+        return _Res(out, reqs)
+
+    def _r_while_loop(self, node, arg_specs, arg_abs, out_ab) -> _Res:
+        return self._loop(3, node, arg_specs, arg_abs, out_ab)
+
+    def _r_scan_loop(self, node, arg_specs, arg_abs, out_ab) -> _Res:
+        return self._loop(2, node, arg_specs, arg_abs, out_ab)
+
     # -- linear algebra ---------------------------------------------------
     def _r_matmul(self, node, arg_specs, arg_abs, out_ab) -> _Res:
         la, ra = arg_abs

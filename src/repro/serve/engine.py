@@ -343,12 +343,9 @@ class ServeEngine:
         #: decode-step), populated only while a tracer is armed — the
         #: disarmed serve hot path does zero telemetry work
         self.telemetry = obs_metrics.MetricsRegistry()
-        self._prefill_fn = api.myia(
-            build_prefill(dims), program_cache=program_cache, fuse=fuse
-        )
-        self._decode_fn = api.myia(
-            build_decode_step(dims, self.n_slots), program_cache=program_cache, fuse=fuse
-        )
+        opts = api.CompileOptions(program_cache=program_cache, fuse=fuse)
+        self._prefill_fn = api.myia(build_prefill(dims), options=opts)
+        self._decode_fn = api.myia(build_decode_step(dims, self.n_slots), options=opts)
         self._queues: dict[int, deque[Request]] = {}
         self._batches: dict[int, _SlotBatch] = {}
         self._rids = itertools.count()

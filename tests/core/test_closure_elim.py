@@ -126,7 +126,7 @@ def p_compose(x):
     return h(x)
 
 
-def p_fold_rec(x, n):  # non-tail: result feeds mul — stays on the VM
+def p_fold_rec(x, n):  # non-tail: lowers via count + reversed accumulator
     if n == 0:
         return 1.0
     return x * p_fold_rec(x, n - 1)
@@ -201,26 +201,40 @@ LOWERS = {
         (_X, jnp.asarray(0.9), _N),
     ),
     "compose": (lambda: parse_function(p_compose), (_X,)),
+    "nested_loops": (lambda: parse_function(p_nested_loops), (_X, 4)),
+    "fold_rec": (lambda: parse_function(p_fold_rec), (_X, 5)),
+    "grad_while_pow": (
+        lambda: build_grad_graph(
+            parse_function(p_while_pow), example_args=(_X, _N)
+        ),
+        (_X, _N),
+    ),
+    "fold_rec_grad": (
+        lambda: build_grad_graph(
+            parse_function(p_fold_rec), example_args=(_X, 5)
+        ),
+        (_X, 5),
+    ),
+    "grad_nested_loops": (
+        lambda: build_grad_graph(
+            parse_function(p_nested_loops), example_args=(_X, _N)
+        ),
+        (_X, _N),
+    ),
 }
 
 #: name -> (graph builder, args, expected reason kind)
 STAYS_VM = {
-    "fold_rec_grad": (
-        lambda: build_grad_graph(parse_function(p_fold_rec)),
-        (_X, 5),
-        FallbackReason.RECURSION,
-    ),
     "break_loop": (
         lambda: parse_function(p_break_loop),
         (_X, 7),
         FallbackReason.RECURSION,
     ),
-    "nested_loops": (
-        lambda: parse_function(p_nested_loops),
-        (_X, 4),
-        FallbackReason.RECURSION,
-    ),
-    "grad_of_loop": (
+    # grad built WITHOUT example_args never runs the pre-grad pipeline, so
+    # J sees raw parsed recursion and its ▶-closures survive optimization:
+    # loop AD requires loop-lowering *before* the transform (pass
+    # example_args, or go through the lazy `grad` entry point)
+    "grad_of_loop_unpipelined": (
         lambda: build_grad_graph(parse_function(p_while_pow)),
         (_X, 4),
         FallbackReason.HIGHER_ORDER,

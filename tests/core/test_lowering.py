@@ -52,6 +52,16 @@ def _use_recursion(x):
     return power_rec(x, 5)
 
 
+def fib_rec(x, n):
+    if n <= 1:
+        return x
+    return fib_rec(x, n - 1) + fib_rec(x, n - 2)
+
+
+def _use_double_rec(x):
+    return fib_rec(x, 5)
+
+
 _F32 = jax.ShapeDtypeStruct((), jnp.float32)
 
 CORPUS = [
@@ -155,14 +165,27 @@ class TestFallback:
         with pytest.raises(LoweringError):
             lower_graph(g)
 
-    def test_jax_backend_falls_back_to_vm(self):
+    def test_affine_recursion_now_lowers(self):
+        # power_rec is single-call affine non-tail recursion: the closure
+        # tier rewrites it to count + reversed-accumulator loops, so it no
+        # longer needs the VM (it used to be the documented fallback here)
         fn = myia.myia(_use_recursion, backend="jax")
         assert float(fn(2.0)) == pytest.approx(32.0)
+        assert fn.specialize((2.0,)).lowered is True
+        gr = myia.grad(_use_recursion)
+        assert float(gr(2.0)) == pytest.approx(80.0)
+        assert gr.specialize((2.0,)).lowered is True
+
+    def test_jax_backend_falls_back_to_vm(self):
+        # a double self-call is beyond the loop rewriter (no single
+        # back-edge): still the VM's job, traced under jit
+        fn = myia.myia(_use_double_rec, backend="jax")
+        assert float(fn(2.0)) == pytest.approx(16.0)
         runner = fn.specialize((2.0,))
         assert runner.lowered is False
         # and the fallback still computes correct grads
-        gr = myia.grad(_use_recursion)
-        assert float(gr(2.0)) == pytest.approx(80.0)
+        gr = myia.grad(_use_double_rec)
+        assert float(gr(2.0)) == pytest.approx(8.0)
         assert gr.specialize((2.0,)).lowered is False
 
     def test_compile_graph_flags(self):

@@ -183,3 +183,60 @@ def test_no_git_repo_is_report_only(cb, tmp_path, monkeypatch):
     _write(plain, BASE_ROWS)
     assert cb._baseline("BENCH_serve.json") is None
     assert cb.check_file("BENCH_serve.json", tol=0.25) == []
+
+
+# -- vm_fallbacks hard floor (BENCH_compile.json) ---------------------------
+
+COMPILE_ROWS = [
+    {"signature": "f32[8, 8]", "compile_call_ms": 20.0, "cached_call_us": 9.0},
+    {
+        "signature": "vm_fallback_corpus",
+        "corpus_size": 11,
+        "vm_fallbacks": 0,
+        "fallback_kinds": {},
+    },
+]
+
+
+def _write_compile(repo, rows):
+    (repo / "BENCH_compile.json").write_text(json.dumps(rows))
+
+
+def _commit_compile(repo, rows):
+    _write_compile(repo, rows)
+    _git(repo, "add", "BENCH_compile.json")
+    _git(repo, "commit", "-q", "-m", "compile baseline")
+
+
+def test_vm_fallbacks_zero_passes(cb, repo):
+    _commit_compile(repo, COMPILE_ROWS)
+    assert cb.check_file("BENCH_compile.json", tol=0.25) == []
+
+
+def test_vm_fallbacks_hard_floor_fails_any_nonzero(cb, repo):
+    """The absolute gate: ANY nonzero fresh vm_fallbacks fails, even by 1
+    (well within every relative tolerance)."""
+    _commit_compile(repo, COMPILE_ROWS)
+    _write_compile(repo, [COMPILE_ROWS[0], dict(COMPILE_ROWS[1], vm_fallbacks=1)])
+    failures = cb.check_file("BENCH_compile.json", tol=0.25)
+    assert any("hard floor" in f and "vm_fallbacks" in f for f in failures)
+
+
+def test_vm_fallbacks_hard_floor_is_baseline_independent(cb, repo):
+    """Committing a regressed baseline alongside the regression must not
+    green the gate: the hard floor checks the fresh file alone."""
+    regressed = [COMPILE_ROWS[0], dict(COMPILE_ROWS[1], vm_fallbacks=2)]
+    _commit_compile(repo, regressed)
+    _write_compile(repo, regressed)  # fresh == (bad) baseline
+    failures = cb.check_file("BENCH_compile.json", tol=0.25)
+    assert len(failures) == 1
+    assert "baseline-independent" in failures[0]
+
+
+def test_vm_fallbacks_hard_floor_without_baseline(cb, repo):
+    """Even a brand-new worktree-only file (no baseline at HEAD) is held
+    to the hard floor — report-only mode applies to relative gates only."""
+    _git(repo, "commit", "-q", "--allow-empty", "-m", "empty")
+    _write_compile(repo, [dict(COMPILE_ROWS[1], vm_fallbacks=3)])
+    failures = cb.check_file("BENCH_compile.json", tol=0.25)
+    assert len(failures) == 1 and "hard floor" in failures[0]

@@ -69,7 +69,7 @@ def test_aot_runner_survives_tracer_args_after_eager_call(tmp_path):
     def f(x, w):
         return P.reduce_sum(P.tanh(x @ w), None, False)
 
-    g = api.myia(f, program_cache=ProgramCache(str(tmp_path)))
+    g = api.myia(f, options=api.CompileOptions(program_cache=ProgramCache(str(tmp_path))))
     x = jnp.ones((4, 8), jnp.float32)
     w = jnp.ones((8, 8), jnp.float32) * 0.1
     eager = g(x, w)  # caches the AOT runner for this signature
@@ -112,14 +112,14 @@ def test_truncated_entry_quarantined_on_load(tmp_path):
     x = jnp.ones((4, 8), jnp.float32)
     w = jnp.full((8, 8), 0.1, jnp.float32)
     cache = ProgramCache(str(tmp_path))
-    mf = api.myia(_tiny_fn(), program_cache=cache)
+    mf = api.myia(_tiny_fn(), options=api.CompileOptions(program_cache=cache))
     want = np.asarray(mf(x, w))
     (entry,) = [n for n in os.listdir(tmp_path) if n.endswith(".pkl")]
     with open(tmp_path / entry, "r+b") as f:
         f.truncate(16)
 
     cache2 = ProgramCache(str(tmp_path))
-    mf2 = api.myia(_tiny_fn(), program_cache=cache2)
+    mf2 = api.myia(_tiny_fn(), options=api.CompileOptions(program_cache=cache2))
     got = np.asarray(mf2(x, w))
     np.testing.assert_allclose(got, want, rtol=1e-6)
     assert cache2.stats.corrupt_entries == 1
@@ -130,7 +130,7 @@ def test_truncated_entry_quarantined_on_load(tmp_path):
     assert entry in names  # … and the key re-written fresh by the miss
 
     cache3 = ProgramCache(str(tmp_path))
-    mf3 = api.myia(_tiny_fn(), program_cache=cache3)
+    mf3 = api.myia(_tiny_fn(), options=api.CompileOptions(program_cache=cache3))
     np.testing.assert_allclose(np.asarray(mf3(x, w)), want, rtol=1e-6)
     assert cache3.stats.hits == 1  # the re-written entry answers
     assert cache3.stats.corrupt_entries == 0  # quarantine was never re-read
@@ -149,7 +149,7 @@ _RACE_SCRIPT = textwrap.dedent(
     def f(x, w):
         return P.reduce_sum(P.tanh(x @ w), None, False)
 
-    mf = api.myia(f, program_cache=cache)
+    mf = api.myia(f, options=api.CompileOptions(program_cache=cache))
     x = jnp.ones((4, 8), jnp.float32)
     w = jnp.full((8, 8), 0.1, jnp.float32)
     key = None
@@ -213,7 +213,7 @@ def test_concurrent_same_key_writers_last_writer_wins(tmp_path):
     from repro.core import api
 
     cache = ProgramCache(str(cachedir))
-    mf = api.myia(_tiny_fn(), program_cache=cache)
+    mf = api.myia(_tiny_fn(), options=api.CompileOptions(program_cache=cache))
     x = jnp.ones((4, 8), jnp.float32)
     w = jnp.full((8, 8), 0.1, jnp.float32)
     val = float(mf(x, w))
