@@ -7,20 +7,32 @@ loss: the full pipeline must produce a VM-free lowered program
 (``vm_fallback`` = 0 is CI-gated via BENCH_higher_order.json), and we
 record compile time plus steady-state latency against the VM-traced
 baseline (``lower=False`` — the pre-closure-elimination execution path).
+
+Every workload compiles with the optimized-graph cache tier armed
+(``CompileOptions.graph_cache``) and runs the pipeline twice: the cold
+row is a cache miss (full optimize + store), the warm row a hit — the
+stored post-optimize graph deserializes and the optimize/closure-elim
+phases are skipped entirely.  The bench asserts the warm graph's
+canonical encoding is byte-identical to the cold one and that the warm
+``optimize`` phase is ≤5% of the warm pipeline; ``graph_cache_hit_rate``
+(the warm lookup, deterministically 1.0) is CI-gated may-only-rise.
 """
 
 from __future__ import annotations
 
+import os
+import tempfile
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import Graph, P, build_grad_graph, parse_function
-from repro.core.api import compile_pipeline
+from repro.core.api import CompileOptions, compile_pipeline
 from repro.core.infer import abstract_of_value
-from repro.core.jax_backend import compile_graph
+from repro.core.jax_backend import ProgramCache, compile_graph
 from repro.core.primitives import reduce_sum as _rsum, tanh as _tanh
+from repro.core.serialize import dumps as _gdumps
 from repro.launch.myia_step import MyiaLMDims, build_lm_loss, init_lm_params
 from repro.obs import trace as obs_trace
 
@@ -100,11 +112,15 @@ def run(reps: int = 30) -> list[dict]:
     ] + _mlp_workloads()
 
     rows = []
+    cache_root = tempfile.mkdtemp(prefix="bench_graph_cache_")
     for name, g, args in workloads:
+        example = tuple(abstract_of_value(a) for a in args)
+        pc = ProgramCache(os.path.join(cache_root, name))
+        opts = CompileOptions(graph_cache=pc)
         tracer = obs_trace.Tracer()
         t0 = time.perf_counter()
         with obs_trace.tracing(tracer):
-            og = compile_pipeline(g, tuple(abstract_of_value(a) for a in args))
+            og = compile_pipeline(g, example, options=opts)
         pipeline_s = time.perf_counter() - t0
         # phase breakdown from the direct children of the compile_pipeline
         # span; its sum must reproduce the end-to-end wall time (no phase
@@ -114,6 +130,26 @@ def run(reps: int = 30) -> list[dict]:
         assert abs(phase_total - pipeline_s * 1e3) <= 0.10 * pipeline_s * 1e3, (
             f"{name}: phase sum {phase_total:.1f}ms vs pipeline "
             f"{pipeline_s * 1e3:.1f}ms (>10% unaccounted)"
+        )
+        # warm pass: the graph tier answers from disk — optimize and
+        # closure-elim never run (their spans are absent), and the graph
+        # must be byte-identical to the one the cold pass just produced
+        hits0, misses0 = pc.stats.graph_hits, pc.stats.graph_misses
+        warm_tracer = obs_trace.Tracer()
+        t0 = time.perf_counter()
+        with obs_trace.tracing(warm_tracer):
+            og_warm = compile_pipeline(g, example, options=opts)
+        warm_s = time.perf_counter() - t0
+        warm_phase_ms = warm_tracer.phase_totals_ms("compile_pipeline")
+        warm_lookups = (pc.stats.graph_hits - hits0) + (pc.stats.graph_misses - misses0)
+        warm_hit_rate = (pc.stats.graph_hits - hits0) / max(warm_lookups, 1)
+        warm_opt_ms = warm_phase_ms.get("optimize", 0.0)
+        assert warm_opt_ms <= 0.05 * warm_s * 1e3, (
+            f"{name}: warm optimize phase {warm_opt_ms:.1f}ms exceeds 5% of "
+            f"warm pipeline {warm_s * 1e3:.1f}ms"
+        )
+        assert _gdumps(og_warm, names=False) == _gdumps(og, names=False), (
+            f"{name}: warm (cached) graph differs from the cold one"
         )
         compiled = compile_graph(og)
         first, steady = _time_runner(compiled, args, reps)
@@ -128,6 +164,11 @@ def run(reps: int = 30) -> list[dict]:
                 "pipeline_ms": round(pipeline_s * 1e3, 1),
                 "pipeline_phase_ms": {k: round(v, 1) for k, v in phase_ms.items()},
                 "pipeline_phase_total_ms": round(phase_total, 1),
+                "warm_pipeline_ms": round(warm_s * 1e3, 1),
+                "warm_pipeline_phase_ms": {
+                    k: round(v, 1) for k, v in warm_phase_ms.items()
+                },
+                "graph_cache_hit_rate": round(warm_hit_rate, 4),
                 "compile_first_ms": round(first * 1e3, 2),
                 "steady_us": round(steady * 1e6, 1),
                 "vm_trace_first_ms": round(vm_first * 1e3, 2),

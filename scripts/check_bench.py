@@ -15,8 +15,11 @@ Guarded metrics (rows matched by workload/signature/mesh key):
   gated absolutely, baseline or not, see ``HARD_CEILINGS``),
 * ``BENCH_higher_order.json`` — ``vm_fallback`` per workload (grad-of-grad
   and the MLP HVP must stay on the lowered path) + floored ``steady_us``
-  + floored ``pipeline_phase_total_ms`` (the tracer's per-phase compile
-  breakdown summed; catches a compile-time blowup inside any one phase),
+  + the compile-time trajectory: floored ``pipeline_ms``,
+  ``pipeline_phase_ms.optimize`` (dotted paths descend into nested row
+  dicts) and ``pipeline_phase_total_ms`` all may only fall, and
+  ``graph_cache_hit_rate`` (the optimized-graph tier's warm lookup,
+  deterministically 1.0) may only rise,
 * ``BENCH_ad_overhead.json`` — ``st_over_jax`` (the AD overhead ratio),
 * ``BENCH_fusion.json``    — ``launches_after`` (fused launch counts;
   deterministic, any >tol increase is a real partitioner regression),
@@ -85,17 +88,25 @@ GUARDS: dict[str, tuple[tuple[str, ...], list[tuple[str, float]]]] = {
     ),
     # higher-order workloads must stay on the lowered path (vm_fallback
     # 0/1 per row, deterministic); steady-state latency is noise-floored.
-    # pipeline_phase_total_ms is the span-derived sum of the per-phase
-    # compile breakdown (pipeline_phase_ms) the tracer records — gated
-    # may-only-fall with a generous absolute floor: the MLP grad-of-grad
-    # pipelines run 10-20 s, so the floor absorbs run-to-run load noise
-    # while a superlinear blowup in any single phase still trips
+    # Compile-time trajectory (may only fall): cold pipeline_ms end to
+    # end, the optimize phase alone (dotted path into the span-derived
+    # pipeline_phase_ms breakdown — the superlinear-cost watchdog), and
+    # the summed phase total.  Noise floors are calibrated to observed
+    # swings on loaded boxes: the MLP rows run ~1-2 s with ±40% load
+    # wiggle, so a regression must clear 25% AND the ~600 ms floor —
+    # load spikes pass, a 2× optimizer regression trips.
+    # graph_cache_hit_rate is the warm lookup of the optimized-graph
+    # tier: deterministically 1.0, may only rise — a fall means the
+    # pre-opt structural hash or the loose encoding went unstable.
     "BENCH_higher_order.json": (
         ("workload",),
         [
             ("vm_fallback", 0.0),
             ("steady_us", 150.0),
-            ("pipeline_phase_total_ms", 2500.0),
+            ("pipeline_ms", 600.0),
+            ("pipeline_phase_ms.optimize", 500.0),
+            ("pipeline_phase_total_ms", 600.0),
+            ("graph_cache_hit_rate", 0.0, "higher"),
         ],
     ),
     # serve: compilations pinned at the bucket-derived floor (cold row),
@@ -153,6 +164,20 @@ def _rows_by_key(rows: list[dict], key_fields: tuple[str, ...]) -> dict[tuple, d
     return {tuple(str(r.get(k)) for k in key_fields): r for r in rows}
 
 
+def _metric(row: dict, name: str):
+    """Resolve ``name`` in ``row``, descending into nested dicts on dots
+    (``pipeline_phase_ms.optimize``).  None when any step is missing —
+    the caller skips the gate, same as a flat missing metric."""
+    cur = row
+    for part in name.split("."):
+        if not isinstance(cur, dict):
+            return None
+        cur = cur.get(part)
+        if cur is None:
+            return None
+    return cur
+
+
 def check_file(fname: str, tol: float) -> list[str]:
     key_fields, metrics = GUARDS[fname]
     if not os.path.exists(fname):
@@ -166,7 +191,7 @@ def check_file(fname: str, tol: float) -> list[str]:
         if gf != fname:
             continue
         for key, frow in fresh.items():
-            val = frow.get(metric)
+            val = _metric(frow, metric)
             if val is not None and float(val) > ceiling:
                 failures.append(
                     f"{fname}: {metric} = {float(val):g} for {key} exceeds "
@@ -189,7 +214,7 @@ def check_file(fname: str, tol: float) -> list[str]:
         for spec in metrics:
             metric, floor = spec[0], spec[1]
             direction = spec[2] if len(spec) > 2 else "lower"
-            old, new = brow.get(metric), frow.get(metric)
+            old, new = _metric(brow, metric), _metric(frow, metric)
             if old is None or new is None:
                 continue
             old, new = float(old), float(new)

@@ -48,6 +48,40 @@ with tempfile.TemporaryDirectory(prefix="ci-progcache-") as d:
 print("  serve smoke OK")
 PY
 
+echo "== graph-cache smoke (cold run optimizes + stores, warm run skips optimize) =="
+python - <<'PY'
+import tempfile
+import jax.numpy as jnp
+from repro.core import build_grad_graph, parse_function
+from repro.core.api import CompileOptions, compile_pipeline
+from repro.core.infer import abstract_of_value
+from repro.core.jax_backend import ProgramCache
+from repro.core.primitives import reduce_sum as _rsum, tanh as _tanh
+from repro.core.serialize import dumps
+from repro.obs import trace as obs_trace
+
+def _loss(w, x):
+    h = _tanh(x @ w)
+    return _rsum(h * h, None, False)
+
+g = build_grad_graph(build_grad_graph(parse_function(_loss), 0), 0)
+ex = tuple(abstract_of_value(a) for a in
+           (jnp.ones((4, 4), jnp.float32), jnp.ones((2, 4), jnp.float32)))
+with tempfile.TemporaryDirectory(prefix="ci-graphcache-") as d:
+    pc = ProgramCache(d)
+    opts = CompileOptions(graph_cache=pc)
+    cold = compile_pipeline(g, ex, options=opts)
+    assert pc.stats.graph_misses == 1 and pc.stats.graph_puts == 1, pc.stats.as_dict()
+    tr = obs_trace.Tracer()
+    with obs_trace.tracing(tr):
+        warm = compile_pipeline(g, ex, options=opts)
+    assert pc.stats.graph_hits == 1, pc.stats.as_dict()
+    phases = tr.phase_totals_ms("compile_pipeline")
+    assert "optimize" not in phases, f"warm run still optimized: {phases}"
+    assert dumps(warm, names=False) == dumps(cold, names=False)
+    print(f"  graph-cache smoke OK (warm phases: {sorted(phases)})")
+PY
+
 echo "== chaos corpus (deterministic fault injection, fixed seed) =="
 # part of every job, fast included: the chaos tests use explicit
 # fire-at-step fault plans (seed 0xC0FFEE feeds only the garbage bytes),

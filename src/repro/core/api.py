@@ -88,6 +88,25 @@ class CompileOptions:
     it whole, so each tier (fusion, patterns, SPMD, AOT cache, tracing,
     loop-adjoint checkpointing) is reachable from *all* of
     ``myia``/``grad``/``value_and_grad``/``vjp``.
+
+    ===================  ==========  =============================================
+    field                default     tier it arms
+    ===================  ==========  =============================================
+    ``backend``          ``"jax"``   lowered/jit execution (``"vm"``: reference)
+    ``opt``              ``True``    the worklist optimizer (§4.3)
+    ``fuse``             ``False``   fusion clusters → generated Pallas kernels
+    ``patterns``         ``False``   kernel-pattern rewrites (rmsnorm/attention)
+    ``in_specs``         ``None``    SPMD partitioning (under a mesh context)
+    ``program_cache``    ``None``    AOT executable tier (``ProgramCache``)
+    ``graph_cache``      ``None``    optimized-graph tier (skips optimize warm)
+    ``trace``            ``None``    observability (``Tracer`` spans)
+    ``checkpoint_policy``  ``"auto"``  loop-adjoint memory/recompute point
+    ===================  ==========  =============================================
+
+    ``graph_cache`` and ``program_cache`` usually point at the *same*
+    :class:`~repro.core.jax_backend.ProgramCache` object — the two tiers
+    key and store independently (``<key>.graph.json`` vs ``<key>.pkl``),
+    see ``docs/architecture.md`` ("Cache-tier anatomy").
     """
 
     #: execution backend: "jax" (lowered/jit tiers) or "vm" (reference)
@@ -102,6 +121,11 @@ class CompileOptions:
     in_specs: tuple | None = None
     #: AOT tier — a ProgramCache making compiled specializations durable
     program_cache: Any = None
+    #: optimized-graph tier — a ProgramCache (usually the same object as
+    #: ``program_cache``) consulted *before* the optimizer runs: a hit
+    #: deserializes the stored post-optimize graph and skips the
+    #: optimize + closure-elim pipeline phases entirely
+    graph_cache: Any = None
     #: observability tier — a Tracer armed for every specialization
     trace: Any = None
     #: loop-adjoint carry recording: "auto" / "save_all" / "recompute"
@@ -111,8 +135,9 @@ class CompileOptions:
 
 _UNSET: Any = object()
 
-#: the legacy kwargs the shim still accepts (checkpoint_policy is new and
-#: reachable only through CompileOptions — no legacy spelling to support)
+#: the legacy kwargs the shim still accepts (checkpoint_policy and
+#: graph_cache are newer than the shim and reachable only through
+#: CompileOptions — no legacy spelling to support)
 _LEGACY_FIELDS = (
     "backend", "opt", "fuse", "patterns", "in_specs", "program_cache", "trace",
 )
@@ -213,9 +238,43 @@ def compile_pipeline(
     if options is not None:
         opt = options.opt
         patterns = options.patterns
+    gcache = options.graph_cache if options is not None else None
     # every phase below opens a span (see docs/observability.md for the
     # taxonomy); disarmed, span() is a single global None-check
     with obs_trace.span("compile_pipeline", graph=graph.name):
+        gkey = None
+        if gcache is not None and opt and infer_types and example_args is not None:
+            # optimized-graph tier: key the PRE-optimization graph × abstract
+            # signature × optimizer config; a hit deserializes the stored
+            # post-optimize post-closure-elim graph and skips both expensive
+            # phases, falling through to infer → lower → XLA below
+            from .serialize import SerializeError
+
+            hit = None
+            with obs_trace.span("cache.graph_lookup", graph=graph.name) as sp:
+                try:
+                    gkey = gcache.graph_key(
+                        graph, example_args,
+                        opt=opt, patterns=patterns, loops=loops, engine=engine,
+                    )
+                except SerializeError:
+                    sp.set(verdict="unkeyable")  # exotic constants: full pipeline
+                else:
+                    hit = gcache.load_graph(gkey)
+                    sp.set(verdict="hit" if hit is not None else "miss")
+            if hit is not None:
+                try:
+                    infer(hit, *example_args)  # re-derive abstracts (cheap)
+                except InferenceError:
+                    pass
+                if stats is not None:
+                    from .closure import analyze_blockers
+
+                    with obs_trace.span("closure.analyze_blockers"):
+                        stats.fallback_reasons = [
+                            r.as_dict() for r in analyze_blockers(hit)
+                        ]
+                return hit
         with obs_trace.span("clone"):
             g = clone_graph(graph)
         if not opt:
@@ -236,6 +295,9 @@ def compile_pipeline(
                     # the rewrite leaves dead families and foldable glue; the
                     # cleanup pass also optimizes *inside* the loop subgraphs
                     optimize(g, engine=engine, stats=stats, patterns=patterns)
+        if gkey is not None:
+            with obs_trace.span("cache.graph_write", graph=graph.name):
+                gcache.store_graph(gkey, g)
         if stats is not None:
             from .closure import analyze_blockers
 
@@ -439,9 +501,7 @@ class MyiaFunction:
             except InferenceError:
                 example = None  # e.g. a list static: skip inference, VM handles it
             base = self._resolved_graph(example) if self.transforms else self.graph
-            g = compile_pipeline(
-                base, example, opt=self.opt, patterns=self.patterns
-            )
+            g = compile_pipeline(base, example, options=self.options)
             runner = None
             if mesh is not None:
                 runner = self._make_spmd_runner(g, args, mesh)
@@ -592,9 +652,7 @@ class MyiaFunction:
     def optimized_graph(self, *args: Any) -> Graph:
         example = tuple(abstract_of_value(a) for a in args)
         base = self._resolved_graph(example) if self.transforms else self.graph
-        return compile_pipeline(
-            base, example, opt=self.opt, patterns=self.patterns
-        )
+        return compile_pipeline(base, example, options=self.options)
 
     def node_count(self, *args: Any, optimized: bool = True) -> int:
         g = self.optimized_graph(*args) if optimized else self.graph

@@ -494,7 +494,12 @@ class Inferencer:
             ab = _demote_scalars(ab)
         if cache_key is not None:
             if len(_EVAL_SHAPE_MEMO) > 8192:
-                _EVAL_SHAPE_MEMO.clear()
+                # Evict the oldest half (dict preserves insertion order)
+                # instead of wiping: later specializations of the same
+                # family re-ask the same (prim, signature) questions, and a
+                # full clear turns every one back into a jax trace.
+                for k in list(_EVAL_SHAPE_MEMO)[:4096]:
+                    del _EVAL_SHAPE_MEMO[k]
             _EVAL_SHAPE_MEMO[cache_key] = ab
         return ab
 

@@ -362,6 +362,111 @@ def free_variables(graph: Graph) -> list[Node]:
 # ---------------------------------------------------------------------------
 
 
+def _graph_body_facts(g: Graph) -> tuple[frozenset, frozenset]:
+    """One body walk from ``g.return_`` (apply-input edges only, NOT
+    entering graph constants, including free-variable chains) collecting:
+
+    * ``crefs`` — graph constants referenced.  The transitive closure of
+      this relation equals the entering-constants reachability of
+      ``dfs_nodes``; it is the edge set of the graph-reference digraph
+      :class:`FamilyIndex` runs SCC over.
+    * ``ext`` — owners of foreign nodes the walk touches (free variables),
+      including the owners of nodes referenced by
+      :class:`SymbolicKey <repro.core.values.SymbolicKey>` constants: a
+      key is an edge for sharing purposes (writer and reader must agree
+      on node identity).  Used by the shared-region clone analysis.
+
+    Both are functions of ``g``'s body alone, so :class:`FamilyIndex`
+    memoizes them per graph until the body is rewritten."""
+    from .values import SymbolicKey
+
+    crefs: set[Graph] = set()
+    ext: set[Graph] = set()
+    if g.return_ is None:
+        return frozenset(), frozenset()
+    seen: set[int] = set()
+    stack: list[Node] = [g.return_]
+    while stack:
+        n = stack.pop()
+        if id(n) in seen:
+            continue
+        seen.add(id(n))
+        if isinstance(n, Constant):
+            if isinstance(n.value, Graph):
+                crefs.add(n.value)
+            elif isinstance(n.value, SymbolicKey):
+                owner = n.value.node.graph
+                if owner is not None and owner is not g:
+                    ext.add(owner)
+            continue
+        owner = n.graph
+        if owner is not None and owner is not g:
+            ext.add(owner)
+        if isinstance(n, Apply):
+            stack.extend(n._inputs)
+    return frozenset(crefs), frozenset(ext)
+
+
+def _clone_needed(root: Graph, fam: set[Graph], body_facts) -> set[Graph]:
+    """The subset of ``root``'s family an inline clone must actually copy.
+
+    Cloning exists to rebind ``root``'s parameters (``param_repl``); any
+    sub-family that is *closed* — its graphs reference, capture, and key
+    only nodes inside itself — evaluates identically in the original and
+    the clone, so the cloner can keep one shared copy instead of
+    deep-copying it per call site (the inline "clone storm" fix).  A graph
+    must be copied when its region touches anything outside itself:
+    another family graph's nodes (free variables that will be remapped,
+    transitively including ``root``'s parameters) or symbolic keys into
+    one.  Falls back to the whole family when the reference digraph is
+    cyclic (recursive families are never inlined, but stay safe anyway).
+    """
+    if len(fam) == 1:
+        return set(fam)
+    info = {g: body_facts(g) for g in fam}
+    # region(g) = {g} ∪ transitive graph-constant closure, via post-order
+    # over the (acyclic for inline-safe callees) reference digraph
+    region: dict[Graph, frozenset] = {}
+    state: dict[int, int] = {}  # id(g) -> 1 in-progress, 2 done
+    for start in fam:
+        if state.get(id(start)) == 2:
+            continue
+        stack: list[tuple[Graph, bool]] = [(start, False)]
+        while stack:
+            g, ready = stack.pop()
+            if ready:
+                acc = {g}
+                for c in info[g][0]:
+                    if c not in fam:
+                        continue
+                    if c in region:
+                        acc |= region[c]
+                    else:  # cycle (recursive family): share nothing
+                        return set(fam)
+                region[g] = frozenset(acc)
+                state[id(g)] = 2
+                continue
+            st = state.get(id(g))
+            if st == 2:
+                continue
+            if st == 1:  # back-edge: cyclic reference digraph
+                return set(fam)
+            state[id(g)] = 1
+            stack.append((g, True))
+            for c in info[g][0]:
+                if c not in fam:
+                    continue
+                if state.get(id(c)) != 2:
+                    if state.get(id(c)) == 1:
+                        return set(fam)
+                    stack.append((c, False))
+    bad = {g for g in fam if any(e in fam and e not in region[g] for e in info[g][1])}
+    # taint propagates up the reference digraph: a clean graph whose region
+    # contains a bad one cannot be shared either (its copy must reference
+    # the bad graph's copy)
+    return {root} | {g for g in fam if region[g] & bad}
+
+
 class FamilyIndex:
     """Incrementally-maintained family / recursion / inline-safety facts for
     a root graph under rewriting.
@@ -370,22 +475,42 @@ class FamilyIndex:
     the family below ``root``, is a graph recursive (can it reach a constant
     reference to itself), and is a callee safe to inline (nothing recursive
     reachable from it).  Recomputing these from scratch after every inline
-    wave is O(family × nodes); this index instead updates *per clone*:
+    wave is O(family × nodes); this index instead answers from a facts
+    table built in ONE pass per invalidation epoch:
 
-    * ``note_clone`` adds the freshly-cloned graphs to the family set and
-      drops only the descendant entries that contain the inline target.
-    * Recursion and safety caches survive clones entirely: an inline-safe
-      callee's family is a closed, acyclic graph-reference set, and its
-      clones reference only other clones — so no pre-existing graph's
-      self-reachability (or safety) can change, and every added clone is
-      itself non-recursive.
+    * ``_ensure_facts`` runs a single linear walk collecting per-graph
+      direct graph-constant references (the edge set of the reference
+      digraph — its transitive closure equals ``dfs_nodes`` reachability),
+      then one iterative Tarjan SCC pass over it: ``is_recursive`` is
+      membership in a cyclic SCC, ``inline_safe`` is "no cyclic SCC
+      reachable", folded in reverse topological order as SCCs pop.  Every
+      subsequent query is a dict hit.
+    * ``note_clone`` adds the freshly-cloned graphs to the family set,
+      pre-seeds their facts (an inline-safe callee's clones reference only
+      other clones and shared inline-safe originals, so each clone is
+      non-recursive and safe), and drops only the descendant /
+      clone-family entries that contain the inline target.
     * Local rewrites may *orphan* graphs (the family set becomes a
       superset) — scanning an orphan is wasted work, never unsound.  A
       rewrite can also cut a graph's self-reference; call
-      ``invalidate_rewrites`` between rewrite passes to pick that up.
+      ``invalidate_rewrites`` between rewrite passes to pick that up
+      (the facts table is rebuilt lazily, one linear pass per epoch).
+    * ``clone_family`` memoizes the inliner's shared-region analysis
+      (:func:`_clone_needed`) per callee, so inlining the same callee at
+      many call sites in a wave analyses it once.
     """
 
-    __slots__ = ("root", "_graphs", "_desc", "_rec", "_safe")
+    __slots__ = (
+        "root",
+        "_graphs",
+        "_desc",
+        "_rec",
+        "_safe",
+        "_facts",
+        "_clonefam",
+        "_bodyfacts",
+        "_topo",
+    )
 
     def __init__(self, root: Graph) -> None:
         self.root = root
@@ -393,6 +518,19 @@ class FamilyIndex:
         self._desc: dict[Graph, set[Graph]] = {}
         self._rec: dict[Graph, bool] = {}
         self._safe: dict[Graph, bool] = {}
+        self._facts = False
+        #: callee -> (its full family, the subset an inline clone must copy)
+        self._clonefam: dict[Graph, tuple[frozenset, frozenset]] = {}
+        #: per-graph (crefs, ext) body facts — the single-walk currency
+        #: everything above is derived from; dropped per graph when its
+        #: body is rewritten (see invalidate_rewrites / note_clone)
+        self._bodyfacts: dict[Graph, tuple[frozenset, frozenset]] = {}
+        #: Tarjan pop position per graph: lower = deeper in the reference
+        #: DAG (popped before its ancestors).  The inliner sorts call
+        #: sites by their owner's position so callee bodies are flattened
+        #: BEFORE being cloned into callers — without the ordering, a call
+        #: nested k levels deep is re-cloned k times across waves
+        self._topo: dict[Graph, int] = {}
 
     # -- queries -----------------------------------------------------------
     def graphs(self) -> set[Graph]:
@@ -401,33 +539,156 @@ class FamilyIndex:
         return self._graphs
 
     def descendants(self, g: Graph) -> set[Graph]:
+        """``{g}`` plus every graph transitively referenced from it —
+        computed as the closure of the memoized per-graph crefs instead of
+        a full node walk (the two are equivalent: crefs is exactly the
+        one-step graph-reference relation of ``dfs_nodes``)."""
         hit = self._desc.get(g)
         if hit is None:
-            hit = self._desc[g] = graph_and_descendants(g)
+            out = {g}
+            stack = [g]
+            while stack:
+                for c in self.body_facts(stack.pop())[0]:
+                    if c not in out:
+                        out.add(c)
+                        stack.append(c)
+            hit = self._desc[g] = out
         return hit
 
     def is_recursive(self, g: Graph) -> bool:
-        """Can ``g`` reach a constant reference to itself?  Uses the SAME
-        reachability the cloner uses (dfs entering graph constants), so
-        classification and clone scope can never disagree."""
+        """Can ``g`` reach a constant reference to itself?  Equivalent to
+        membership in a cyclic SCC of the graph-reference digraph — the
+        SAME reachability the cloner uses (dfs entering graph constants),
+        so classification and clone scope can never disagree."""
         hit = self._rec.get(g)
         if hit is None:
-            hit = any(
-                is_constant_graph(n) and n.value is g for n in dfs_nodes(g.return_)
-            )
-            self._rec[g] = hit
+            self._ensure_facts()
+            hit = self._rec.get(g)
+            if hit is None:  # graph surfaced after the facts pass
+                hit = any(
+                    is_constant_graph(n) and n.value is g
+                    for n in dfs_nodes(g.return_)
+                )
+                self._rec[g] = hit
         return hit
 
     def inline_safe(self, g: Graph) -> bool:
         """True iff nothing recursive is reachable from ``g`` — the cloner
-        deep-copies ``graph_and_descendants(g)``, and duplicating a
-        recursive cycle exposes a fresh entry wrapper every wave (unbounded
-        peeling of the recursion)."""
+        copies ``g``'s family, and duplicating a recursive cycle exposes a
+        fresh entry wrapper every wave (unbounded peeling)."""
         hit = self._safe.get(g)
         if hit is None:
-            hit = not any(self.is_recursive(h) for h in self.descendants(g))
-            self._safe[g] = hit
+            self._ensure_facts()
+            hit = self._safe.get(g)
+            if hit is None:  # graph surfaced after the facts pass
+                hit = not any(self.is_recursive(h) for h in self.descendants(g))
+                self._safe[g] = hit
         return hit
+
+    def clone_family(self, g: Graph) -> set[Graph]:
+        """The subset of ``g``'s family an inline clone must deep-copy
+        (everything else is closed and shared — see :func:`_clone_needed`),
+        memoized per callee until a rewrite epoch or a clone into one of
+        its members invalidates it."""
+        hit = self._clonefam.get(g)
+        if hit is None:
+            fam = frozenset(self.descendants(g))
+            hit = (fam, frozenset(_clone_needed(g, fam, self.body_facts)))
+            self._clonefam[g] = hit
+        return set(hit[1])
+
+    def topo_pos(self, g: Graph) -> int:
+        """Reverse-topological position of ``g`` (deepest-first ordering
+        for the inliner); graphs unknown to the facts pass sort last."""
+        self._ensure_facts()
+        return self._topo.get(g, 1 << 30)
+
+    def body_facts(self, g: Graph) -> tuple[frozenset, frozenset]:
+        """Memoized :func:`_graph_body_facts` — one walk per graph per
+        body version."""
+        hit = self._bodyfacts.get(g)
+        if hit is None:
+            hit = self._bodyfacts[g] = _graph_body_facts(g)
+        return hit
+
+    def _ensure_facts(self) -> None:
+        """One linear pass: per-graph direct reference edges, then Tarjan
+        SCC.  Cyclic SCC => every member recursive and unsafe; acyclic
+        singleton => non-recursive, safe iff all referenced graphs are
+        (folded as SCCs pop, which is reverse topological order)."""
+        if self._facts:
+            return
+        self._facts = True
+        self._topo = {}
+        topo = self._topo
+        # ordering discipline: graphs are visited in creation (_id) order so
+        # the Tarjan pop order — and with it the inliner's deepest-first
+        # site ordering — is identical run to run (sets of graphs iterate
+        # in address order, which Python does not stabilize across runs)
+        refs: dict[Graph, list[Graph]] = {}
+        work = sorted(self.graphs(), key=lambda g: g._id, reverse=True)
+        while work:
+            g = work.pop()
+            if g in refs:
+                continue
+            rs = sorted(self.body_facts(g)[0], key=lambda h: h._id)
+            refs[g] = rs
+            work.extend(h for h in rs if h not in refs)
+        rec, safe = self._rec, self._safe
+        index: dict[int, int] = {}
+        low: dict[int, int] = {}
+        on: set[int] = set()
+        scc_stack: list[Graph] = []
+        counter = 0
+        for start in refs:
+            if id(start) in index:
+                continue
+            frames: list[tuple[Graph, int]] = [(start, 0)]
+            while frames:
+                g, pi = frames[-1]
+                gid = id(g)
+                if pi == 0:
+                    index[gid] = low[gid] = counter
+                    counter += 1
+                    scc_stack.append(g)
+                    on.add(gid)
+                children = refs[g]
+                descended = False
+                while pi < len(children):
+                    h = children[pi]
+                    pi += 1
+                    hid = id(h)
+                    if hid not in index:
+                        frames[-1] = (g, pi)
+                        frames.append((h, 0))
+                        descended = True
+                        break
+                    if hid in on and index[hid] < low[gid]:
+                        low[gid] = index[hid]
+                if descended:
+                    continue
+                frames.pop()
+                if frames:
+                    pgid = id(frames[-1][0])
+                    if low[gid] < low[pgid]:
+                        low[pgid] = low[gid]
+                if low[gid] == index[gid]:
+                    comp: list[Graph] = []
+                    while True:
+                        h = scc_stack.pop()
+                        on.discard(id(h))
+                        comp.append(h)
+                        if h is g:
+                            break
+                    for h in comp:
+                        topo[h] = len(topo)
+                    if len(comp) > 1 or any(c is g for c in refs[g]):
+                        for h in comp:
+                            rec[h] = True
+                            safe[h] = False
+                    else:
+                        rec[g] = False
+                        safe[g] = all(safe[c] for c in refs[g])
 
     # -- maintenance -------------------------------------------------------
     def note_clone(self, cloner: "GraphCloner") -> None:
@@ -441,18 +702,73 @@ class FamilyIndex:
             new_graphs.discard(target)
         if self._graphs is not None:
             self._graphs |= new_graphs
+        if self._safe.get(cloner.root) is True:
+            # clones of an inline-safe family reference only other clones
+            # and shared inline-safe originals: non-recursive and safe
+            for ng in new_graphs:
+                self._rec.setdefault(ng, False)
+                self._safe.setdefault(ng, True)
+        # a clone's body facts are its original's, mapped through the
+        # cloner (shared references stay as-is) — seeding them here saves
+        # one full body walk per cloned graph per facts epoch
+        gmap = cloner.graph_map
+        for og, ng in gmap.items():
+            if ng is target or ng not in new_graphs:
+                continue
+            base = self._bodyfacts.get(og)
+            if base is not None:
+                self._bodyfacts[ng] = (
+                    frozenset(gmap.get(c, c) for c in base[0]),
+                    frozenset(gmap.get(e, e) for e in base[1]),
+                )
+            pos = self._topo.get(og)
+            if pos is not None:
+                self._topo.setdefault(ng, pos)
         if target is not None:
+            self._bodyfacts.pop(target, None)
             stale = [g for g, d in self._desc.items() if target in d]
             for g in stale:
                 del self._desc[g]
+            stale_cf = [g for g, (fam, _) in self._clonefam.items() if target in fam]
+            for g in stale_cf:
+                del self._clonefam[g]
 
-    def invalidate_rewrites(self) -> None:
-        """Local rewrites changed the graph bodies: recursion facts may be
-        stale (a rewrite can cut a self-reference), so drop everything but
-        the family set (which only ever grows into a sound superset)."""
-        self._desc.clear()
-        self._rec.clear()
-        self._safe.clear()
+    def invalidate_rewrites(self, dirty: set[Graph] | None = None) -> None:
+        """Local rewrites changed graph bodies: recursion facts may be
+        stale (a rewrite can cut — or add — a graph reference), so drop
+        everything derived from them; the family set only ever grows into
+        a sound superset and survives.  When the rewriter can name the
+        graphs whose bodies actually changed (``dirty``), per-graph body
+        facts survive for every clean graph — the next facts pass is then
+        a dict-lookup sweep instead of a full node walk."""
+        if dirty is None:
+            self._rec.clear()
+            self._safe.clear()
+            self._facts = False
+            self._desc.clear()
+            self._clonefam.clear()
+            self._bodyfacts.clear()
+            return
+        # refresh the touched graphs' body facts eagerly: when none of
+        # their graph-reference sets changed (the common case for local
+        # rules), the reference digraph — and with it every recursion /
+        # safety / topo fact — is untouched and survives the epoch
+        refs_changed = False
+        for g in dirty:
+            old = self._bodyfacts.pop(g, None)
+            new = self._bodyfacts[g] = _graph_body_facts(g)
+            if old is None or old[0] != new[0]:
+                refs_changed = True
+        if refs_changed:
+            self._rec.clear()
+            self._safe.clear()
+            self._facts = False
+        stale = [g for g, d in self._desc.items() if d & dirty]
+        for g in stale:
+            del self._desc[g]
+        stale_cf = [g for g, (fam, _) in self._clonefam.items() if fam & dirty]
+        for g in stale_cf:
+            del self._clonefam[g]
 
 
 # ---------------------------------------------------------------------------
@@ -466,6 +782,13 @@ class GraphCloner:
     ``inline_target``: if given, nodes of the root graph are created inside
     that graph instead of a fresh one (used by the inliner), and parameters
     are replaced by ``param_map`` values.
+
+    ``family``: if given, only these graphs are deep-copied; references to
+    the rest of the root's family are kept pointing at the shared
+    originals.  Callers must pass a set that is sound to share — the
+    inliner uses :func:`_clone_needed` (closed sub-families evaluate
+    identically in original and clone, so one shared copy suffices).
+    Defaults to the whole family (full deep copy).
     """
 
     def __init__(
@@ -475,6 +798,7 @@ class GraphCloner:
         inline_target: Graph | None = None,
         param_repl: dict[Node, Node] | None = None,
         relabel: str = "",
+        family: set[Graph] | None = None,
     ) -> None:
         self.root = root
         self.inline_target = inline_target
@@ -482,7 +806,7 @@ class GraphCloner:
         self.relabel = relabel
         self.node_map: dict[int, Node] = {}
         self.graph_map: dict[Graph, Graph] = {}
-        self.family = graph_and_descendants(root)
+        self.family = set(family) if family is not None else graph_and_descendants(root)
 
     def clone(self) -> Graph:
         new_root = self._clone_graph_shell(self.root, inline=self.inline_target)

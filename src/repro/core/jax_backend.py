@@ -49,6 +49,8 @@ from .serialize import (
     FORMAT_VERSION,
     SerializeError,
     deserialize_graph,
+    dumps,
+    loads,
     serialize_graph,
     structural_hash,
 )
@@ -59,6 +61,7 @@ __all__ = [
     "CacheStats",
     "CompileFailed",
     "ProgramCache",
+    "abstract_value_signature",
     "compile_graph",
     "compile_graph_spmd",
     "trace_graph",
@@ -258,12 +261,18 @@ class CacheStats:
       failed XLA compiles retried (bounded by ``max_compile_retries``),
       and specializations that exhausted retries and were handed to the
       VM oracle by ``api.MyiaFunction`` (see docs/serving.md).
+    * ``graph_hits`` / ``graph_misses`` / ``graph_puts`` — the
+      optimized-graph tier (``graph_key``/``load_graph``/``store_graph``):
+      lookups of the *pre-optimization* key that found / did not find a
+      stored post-optimize graph, and entries written.  A graph hit skips
+      the optimize + closure-elim phases of ``compile_pipeline`` entirely.
     """
 
     __slots__ = (
         "hits", "misses", "exec_loads", "xla_compiles", "puts", "spills",
         "errors", "corrupt_entries", "io_errors", "quarantined",
         "compile_retries", "vm_fallbacks",
+        "graph_hits", "graph_misses", "graph_puts",
     )
 
     def __init__(self) -> None:
@@ -279,11 +288,19 @@ class CacheStats:
         self.quarantined = 0
         self.compile_retries = 0
         self.vm_fallbacks = 0
+        self.graph_hits = 0
+        self.graph_misses = 0
+        self.graph_puts = 0
 
     @property
     def hit_rate(self) -> float:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
+
+    @property
+    def graph_hit_rate(self) -> float:
+        total = self.graph_hits + self.graph_misses
+        return self.graph_hits / total if total else 0.0
 
     def as_dict(self) -> dict:
         return {
@@ -299,7 +316,11 @@ class CacheStats:
             "quarantined": self.quarantined,
             "compile_retries": self.compile_retries,
             "vm_fallbacks": self.vm_fallbacks,
+            "graph_hits": self.graph_hits,
+            "graph_misses": self.graph_misses,
+            "graph_puts": self.graph_puts,
             "hit_rate": round(self.hit_rate, 4),
+            "graph_hit_rate": round(self.graph_hit_rate, 4),
         }
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
@@ -335,6 +356,38 @@ def abstract_signature(example_args: Sequence[Any]) -> str:
     return ";".join(parts)
 
 
+def abstract_value_signature(abstracts: Sequence[Any]) -> str:
+    """Canonical string for a tuple of *inference* abstract values
+    (``repro.core.infer.AScalar``/``AArray``/``ATuple``) — the signature
+    component of the optimized-graph cache key.
+
+    Known scalar *values* are part of the signature: constant propagation
+    bakes them into the optimized graph, so two calls differing only in a
+    static scalar must occupy different buckets.  Anything that cannot be
+    canonically rendered (functions, environments, opaque statics) raises
+    :class:`SerializeError` — the caller skips the graph tier."""
+    from .infer import ANY, AArray, AScalar, ATuple
+
+    def part(a: Any) -> str:
+        if isinstance(a, AArray):
+            return f"{a.dtype.str}{list(a.shape)}"
+        if isinstance(a, ATuple):
+            return "(" + ",".join(part(e) for e in a.elements) + ")"
+        if isinstance(a, AScalar):
+            if a.value is ANY:
+                return f"{a.kind}:?"
+            if a.value is None or isinstance(a.value, (bool, int, float, str)):
+                return f"{a.kind}:{a.value!r}"
+            raise SerializeError(
+                f"opaque static value {type(a.value).__name__} in graph-cache signature"
+            )
+        raise SerializeError(
+            f"non-durable abstract {type(a).__name__} in graph-cache signature"
+        )
+
+    return ";".join(part(a) for a in abstracts)
+
+
 def _avals(example_args: Sequence[Any]) -> tuple:
     return tuple(
         a if isinstance(a, jax.ShapeDtypeStruct) else jax.ShapeDtypeStruct(a.shape, a.dtype)
@@ -343,9 +396,10 @@ def _avals(example_args: Sequence[Any]) -> tuple:
 
 
 class ProgramCache:
-    """Persistent cache of AOT-compiled programs (``jax.jit(...).lower().
-    compile()`` artifacts), keyed on *what the program is* rather than which
-    process built it:
+    """Persistent two-tier cache of compiled programs, keyed on *what the
+    program is* rather than which process built it.
+
+    **Executable tier** (``key``/``load_or_compile``, ``<key>.pkl``)::
 
         structural graph hash × abstract signature × fuse/kernel-mode ×
         mesh descriptor × (jax version, serialize format, backend platform)
@@ -356,7 +410,22 @@ class ProgramCache:
     entry, reloads the executable, and serves with **zero recompilations**;
     if the executable blob is incompatible (different machine/jaxlib) the
     stored graph is re-lowered and recompiled — never wrong, at worst slow.
-    Counters are surfaced on ``.stats`` like ``OptStats``.
+
+    **Optimized-graph tier** (``graph_key``/``load_graph``/``store_graph``,
+    ``<key>.graph.json``)::
+
+        loose structural hash of the PRE-optimization graph ×
+        abstract-value signature × opt/patterns/loops/engine config ×
+        serialize format version
+
+    The value is the canonical JSON of the post-optimize post-closure-elim
+    graph, so a new specialization of a known family deserializes it and
+    skips the optimize + closure-elim pipeline phases entirely (falling
+    through to infer → lower → XLA, where the executable tier takes over).
+    Reads are lock-free: writers publish complete entries atomically
+    (``mkstemp`` + ``os.replace``), so concurrent distinct-key builds never
+    block each other and same-key racers each land a valid entry with one
+    survivor.  Counters are surfaced on ``.stats`` like ``OptStats``.
     """
 
     def __init__(
@@ -401,6 +470,102 @@ class ProgramCache:
 
     def _file(self, key: str) -> str:
         return os.path.join(self.path, key + ".pkl")
+
+    # -- optimized-graph tier ----------------------------------------------
+    def graph_key(
+        self,
+        graph: Graph,
+        abstracts: Sequence[Any],
+        *,
+        opt: bool = True,
+        patterns: bool = False,
+        loops: bool = True,
+        engine: str = "worklist",
+    ) -> str:
+        """Cache key of the *pre-optimization* ``graph`` at an abstract
+        signature, under one optimizer configuration.
+
+        Raises :class:`SerializeError` when the graph or signature cannot
+        be canonically keyed (runtime-only constants beyond symbolic keys
+        and empty envs, opaque statics) — callers skip the tier.
+        """
+        payload = {
+            "graph": structural_hash(graph, loose=True),
+            "sig": abstract_value_signature(abstracts),
+            "opt": bool(opt),
+            "patterns": bool(patterns),
+            "loops": bool(loops),
+            "engine": engine,
+            "format": FORMAT_VERSION,
+        }
+        return hashlib.sha256(
+            json.dumps(payload, sort_keys=True, separators=(",", ":")).encode()
+        ).hexdigest()
+
+    def _graph_file(self, key: str) -> str:
+        return os.path.join(self.path, key + ".graph.json")
+
+    def load_graph(self, key: str) -> Graph | None:
+        """The stored post-optimize graph for ``key``, or None.
+
+        The read path takes no lock: writers only ever publish complete
+        entries via ``os.replace``, so a reader sees either no file or a
+        whole one — concurrent builders of distinct keys never serialize
+        behind each other, and a corrupt entry (torn by an unclean shutdown)
+        is quarantined, not fatal."""
+        fpath = self._graph_file(key)
+        try:
+            with open(fpath, "r", encoding="utf-8") as f:
+                text = f.read()
+        except FileNotFoundError:
+            self.stats.graph_misses += 1
+            return None
+        except OSError:
+            self.stats.graph_misses += 1
+            self.stats.io_errors += 1
+            self.stats.errors += 1
+            return None
+        try:
+            g = loads(text)
+        except Exception:
+            self._quarantine(fpath)
+            self.stats.graph_misses += 1
+            return None
+        self.stats.graph_hits += 1
+        try:
+            os.utime(fpath)  # LRU touch
+        except OSError:
+            pass
+        return g
+
+    def store_graph(self, key: str, graph: Graph) -> bool:
+        """Persist a post-optimize ``graph`` under ``key`` (atomic publish).
+
+        Best-effort: a non-durable graph (residual runtime values) or a
+        failing write degrades to not caching — never to an error."""
+        try:
+            text = dumps(graph)
+        except SerializeError:
+            self.stats.errors += 1
+            return False
+        tmp = None
+        try:
+            fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".tmp")
+            with os.fdopen(fd, "w", encoding="utf-8") as f:
+                f.write(text)
+            os.replace(tmp, self._graph_file(key))
+            self.stats.graph_puts += 1
+        except OSError:
+            self.stats.errors += 1
+            self.stats.io_errors += 1
+            if tmp is not None:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+            return False
+        self._evict(".graph.json")
+        return True
 
     # -- main entry point --------------------------------------------------
     def load_or_compile(
@@ -586,12 +751,14 @@ class ProgramCache:
             return
         self._evict()
 
-    def _evict(self) -> None:
+    def _evict(self, suffix: str = ".pkl") -> None:
+        """Bound one tier's entry count (LRU by mtime).  Tiers evict
+        independently: a burst of graph-tier puts never spills executables."""
         try:
             files = [
                 os.path.join(self.path, n)
                 for n in os.listdir(self.path)
-                if n.endswith(".pkl")
+                if n.endswith(suffix)
             ]
             if len(files) <= self.max_entries:
                 return

@@ -37,6 +37,35 @@ Two engines drive the local rules to their fixed point:
 
 ``optimize(..., stats=OptStats())`` fills a per-rule hit counter plus
 worklist/inline counters, so benchmarks can record *why* a graph shrank.
+
+Compile-time scalability
+------------------------
+Reverse-over-reverse families are large (thousands of nodes, hundreds of
+graphs), so the optimizer's asymptotics — not XLA — used to dominate
+cold pipeline latency (`BENCH_higher_order.json` recorded ~9.4 s of a
+9.6 s grad²-MLP pipeline inside `optimize`).  The structures that keep
+it near-linear now:
+
+* ``ir.FamilyIndex`` memoizes per-graph body facts, Tarjan-SCC
+  recursion/inline-safety facts and clone-family scopes, invalidated
+  *scoped to the graphs a rewrite actually touched*
+  (``invalidate_rewrites(dirty=...)``) instead of wholesale;
+* inline waves clone **only the open sub-family** of a callee
+  (``share_closed``: closed descendant graphs are shared, not copied)
+  and order sites deepest-first so shared callees are simplified once,
+  pre-clone (``_simplify_callee``), not re-discovered per copy;
+* the family-recursion gate on value-based partial evaluation is
+  *sticky* (``_norec``): rewrites only cut graph-reference edges, so an
+  acyclic family can never become cyclic again within a run — without
+  this, every edge-cutting rewrite forced a fresh facts pass;
+* ``replace`` retargets returns through an incrementally-maintained
+  return-node index instead of scanning the family per rewrite.
+
+The remaining cold cost is cacheable wholesale: the optimized-graph
+cache tier (``jax_backend.ProgramCache.graph_key`` +
+``CompileOptions.graph_cache``) keys the *pre-opt* graph via the loose
+structural hash (``serialize.structural_hash(g, loose=True)``) and skips
+this module entirely on a warm hit.  See ``docs/architecture.md``.
 """
 
 from __future__ import annotations
@@ -63,6 +92,12 @@ from .ir import (
 from .infer import AArray, AFunction, AScalar, ATuple  # noqa: F401 (ATuple used in folding)
 from .primitives import COLLECTIVE_NAMES, Primitive
 from .values import EnvInstance, newenv
+
+#: primitives excluded from value-based partial evaluation (environment
+#: plumbing must survive until closure elimination rewires it) —
+#: prebuilt: try_rules runs per worklist pop, so even tuple construction
+#: in its prologue shows up on grad² profiles
+_ENV_PRIMS = frozenset((P.env_setitem, P.env_getitem))
 
 __all__ = ["optimize", "reachable_nodes", "count_nodes", "OptStats"]
 
@@ -156,6 +191,25 @@ class _Rewriter:
         #: ids of the family's return nodes, maintained while the worklist
         #: engine runs (a userless node that is no graph's return is dead)
         self._returns: set[int] | None = None
+        #: return-node id -> graphs whose return_ it is.  ``replace`` used
+        #: to scan the whole family per rewrite to retarget returns —
+        #: O(rewrites × family), one of the superlinear optimizer costs.
+        #: Lazily built, incrementally maintained (replace / inline
+        #: clones), dropped when the family index is rebuilt wholesale.
+        self._ret_index: dict[int, set[Graph]] | None = None
+        #: graphs whose bodies changed since the last facts invalidation —
+        #: lets FamilyIndex.invalidate_rewrites keep per-graph body facts
+        #: for every untouched graph instead of re-walking the world
+        self._dirty: set[Graph] = set()
+        #: sticky "family proved non-recursive": no local rule can mint a
+        #: graph constant (partial evaluation folds scalars/tuples only)
+        #: and inline clones of safe callees are themselves safe, so the
+        #: graph-reference digraph only ever LOSES edges during a run —
+        #: once acyclic, acyclic forever.  Caching that answer keeps
+        #: try_rules from re-running the Tarjan facts pass after every
+        #: edge-cutting rewrite (measured: ~650 full passes per grad²
+        #: pipeline without it).
+        self._norec = False
 
     # -- helpers -----------------------------------------------------------
     def family(self) -> set[Graph]:
@@ -164,15 +218,36 @@ class _Rewriter:
         # wasted work, never unsound.
         return self.fam.graphs()
 
+    def _return_index(self) -> dict[int, set[Graph]]:
+        idx = self._ret_index
+        if idx is None:
+            idx = self._ret_index = {}
+            for g in self.family():
+                if g.return_ is not None:
+                    idx.setdefault(g.return_._id, set()).add(g)
+        return idx
+
     def replace(self, old: Node, new: Node) -> None:
+        dirty = self._dirty
+        if isinstance(new, Apply) and new.graph is not None:
+            dirty.add(new.graph)
+        elif isinstance(old, Apply) and old.graph is not None:
+            dirty.add(old.graph)
         for user, idx in list(old.users):
             user.set_input(idx, new)
-        for g in self.family():
-            if g.return_ is old:
-                g.set_return(new)
-                if self._returns is not None:
-                    self._returns.discard(old._id)
-                    self._returns.add(new._id)
+            if user.graph is not None:
+                dirty.add(user.graph)
+        ridx = self._return_index()
+        owners = ridx.pop(old._id, None)
+        if owners:
+            for g in owners:
+                if g.return_ is old:
+                    g.set_return(new)
+                    dirty.add(g)
+                    ridx.setdefault(new._id, set()).add(g)
+                    if self._returns is not None:
+                        self._returns.discard(old._id)
+                        self._returns.add(new._id)
         self.changed = True
         if isinstance(old, Apply):
             # the replaced node is gone: sever its input edges so its former
@@ -209,8 +284,84 @@ class _Rewriter:
         dedup closure specs by graph), so in RECURSIVE families an interior
         node can be annotated with a base-case frame's value — folding it
         would be unsound.  Non-recursive families keep full constant
-        propagation (the Figure-1 collapse)."""
-        return not self.fam.inline_safe(self.root)
+        propagation (the Figure-1 collapse).  The negative answer is
+        sticky (``_norec``): rewrites only cut reference edges, so a
+        family that went acyclic can never become cyclic again this run."""
+        if self._norec:
+            return False
+        rec = not self.fam.inline_safe(self.root)
+        if not rec:
+            self._norec = True
+        return rec
+
+    def _simplify_callee(self, callee: Graph, simplified: set[Graph]) -> None:
+        """Drain local rules over ``callee``'s family before the inliner
+        clones it: a rewrite applied once pre-clone would otherwise be
+        re-discovered (and the nodes it deletes re-copied) in every
+        call-site copy.  Seeds only family members not yet drained this
+        pass (``simplified`` — deepest-first site ordering means shared
+        descendants are already in normal form when their callers arrive).
+        Uses the same worklist machinery as ``_rules_worklist`` minus the
+        verification sweep — the global pass that follows still certifies
+        the fixed point."""
+        members = sorted(
+            (h for h in self.fam.descendants(callee) if h not in simplified),
+            key=lambda h: h._id,
+        )
+        simplified.update(members)
+        if not members:
+            return
+        work: deque[Apply] = deque()
+        queued: set[int] = set()
+
+        def push(node: Node) -> None:
+            if isinstance(node, Apply) and id(node) not in queued:
+                queued.add(id(node))
+                work.append(node)
+
+        prev_push, prev_returns = self._push, self._returns
+        self._push = push
+        self._returns = set(self._return_index().keys())
+        dirty0 = set(self._dirty)
+        try:
+            seen: set[int] = set()
+            for h in members:
+                if h.return_ is None:
+                    continue
+                stack: list[Node] = [h.return_]
+                while stack:
+                    n = stack.pop()
+                    if id(n) in seen:
+                        continue
+                    seen.add(id(n))
+                    if isinstance(n, Apply):
+                        push(n)
+                        stack.extend(n._inputs)
+            while work:
+                n = work.popleft()
+                queued.discard(id(n))
+                if n.graph is None:
+                    continue
+                if not n.users and n._id not in self._returns:
+                    for i, inp in enumerate(n.inputs):
+                        inp.users.discard((n, i))
+                        push(inp)
+                    continue
+                self.stats.worklist_pops += 1
+                hit = self.try_rules(n)
+                if hit is not None:
+                    new, rule = hit
+                    self.stats.record_rule(rule)
+                    self.replace(n, new)
+        finally:
+            self._push = prev_push
+            self._returns = prev_returns
+        touched = self._dirty - dirty0
+        if touched:
+            # body facts / clone-family entries derived from the rewritten
+            # graphs are stale NOW (the wave is still running), not at the
+            # next iteration boundary — scope-invalidate immediately
+            self.fam.invalidate_rewrites(dirty=touched)
 
     # -- inlining -----------------------------------------------------------
     def inline_pass(self, max_waves: int = 64) -> bool:
@@ -223,6 +374,11 @@ class _Rewriter:
         only the family set and stale descendant entries are updated, per
         clone (``FamilyIndex.note_clone``)."""
         changed = False
+        # pre-clone simplification memo: a callee drained once stays
+        # drained for the whole pass (later waves may touch its family,
+        # making the skip merely less effective, never unsound — the
+        # global rules pass still certifies the normal form)
+        simplified: set[Graph] = set()
         for wave in range(max_waves):
             # one span per wave: at trace level the "clone storms" of the
             # superlinear compile-time item become directly visible as
@@ -252,19 +408,43 @@ class _Rewriter:
                 if not targets:
                     sp.set(inlined=0)
                     return changed
+                # deepest callees first: a callee's OWN call sites are
+                # inlined before any caller clones it, so bodies are
+                # cloned flat — without this ordering a call nested k
+                # levels deep is re-cloned once per wave level
+                targets.sort(key=lambda t: self.fam.topo_pos(t.graph))
                 self.stats.inline_waves += 1
                 inlined = 0
                 for n in targets:
                     if not is_constant_graph(n.fn):
                         continue  # rewritten by an earlier inline this wave
+                    if not n.users and n.graph.return_ is not n:
+                        continue  # orphaned by a pre-clone simplification
+                    callee = n.fn.value
+                    if callee not in simplified:
+                        self._simplify_callee(callee, simplified)
+                    if not is_constant_graph(n.fn):
+                        continue
                     callee = n.fn.value
                     param_repl = dict(zip(callee.parameters, n.args))
                     cloner = GraphCloner(
-                        callee, inline_target=n.graph, param_repl=param_repl
+                        callee,
+                        inline_target=n.graph,
+                        param_repl=param_repl,
+                        # closed sub-families are shared, not re-copied per
+                        # call site (the "clone storm" fix); the analysis
+                        # is memoized per callee on the family index
+                        family=self.fam.clone_family(callee),
                     )
                     cloner.clone()  # (remaps symbolic env keys internally)
                     self.replace(n, cloner.inlined_return)
                     self.fam.note_clone(cloner)
+                    if self._ret_index is not None:
+                        for ng in cloner.graph_map.values():
+                            if ng is not n.graph and ng.return_ is not None:
+                                self._ret_index.setdefault(
+                                    ng.return_._id, set()
+                                ).add(ng)
                     self.stats.inlined_calls += 1
                     inlined += 1
                     changed = True
@@ -402,7 +582,7 @@ class _Rewriter:
         # partial evaluation: the inferencer proved the value (paper §4.2,
         # "It can infer types as well as values (constant propagation)").
         # Gated off in recursive families — see _family_has_recursion.
-        if p not in (P.env_setitem, P.env_getitem) and not self._family_has_recursion():
+        if p not in _ENV_PRIMS and not self._family_has_recursion():
             known = _known_abstract_value(n.abstract)
             if known is not _NO_VALUE:
                 return Constant(known), "partial_eval"
@@ -856,6 +1036,7 @@ def optimize(
                 if specialized:
                     # whole families were cloned and rewired: rebuild the index
                     rw.fam = FamilyIndex(graph)
+                    rw._ret_index = None
                     changed = True
             changed |= rw.rules_pass(engine)
             rw.stats.iterations += 1
@@ -863,7 +1044,9 @@ def optimize(
                 break
             # rewrites may have cut graph references (e.g. switch-of-constant
             # dropping a branch): refresh recursion facts before re-inlining
-            rw.fam.invalidate_rewrites()
+            # (scoped to the graphs the rewrites actually touched)
+            rw.fam.invalidate_rewrites(dirty=rw._dirty)
+            rw._dirty = set()
         osp.set(
             iterations=rw.stats.iterations,
             rewrites=rw.stats.total_rewrites,

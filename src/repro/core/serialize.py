@@ -25,6 +25,17 @@ values (closures, gradient environments, symbolic keys) and free
 variables into graphs outside the family — those only survive in
 VM-fallback graphs, which are not AOT artifacts; :class:`SerializeError`
 is raised and callers skip the cache.
+
+Loose (hash-only) mode
+----------------------
+
+``structural_hash(g, loose=True)`` additionally admits the two runtime
+value kinds that appear in *pre-optimization* adjoint graphs — symbolic
+keys (encoded positionally, by the canonical index of the node they
+reference) and empty gradient environments — so the optimized-graph
+cache tier (``jax_backend.ProgramCache.graph_key``) can key on the
+program *before* the optimizer runs.  Loose payloads are tagged and
+refuse to deserialize: the encoding is an identity, not an artifact.
 """
 
 from __future__ import annotations
@@ -58,12 +69,33 @@ class SerializeError(Exception):
     """The graph family contains values that cannot be made durable."""
 
 
+_RUNTIME = None
+
+
+def _runtime():
+    """Lazily-bound (jax, jnp, EnvInstance, SymbolicKey) — deferred so
+    importing this module stays cheap, memoized so the per-value encoder
+    doesn't pay the import-machinery lookup on every constant (the loose
+    hash sits on the compile pipeline's cache-lookup path)."""
+    global _RUNTIME
+    if _RUNTIME is None:
+        import jax
+        import jax.numpy as jnp
+
+        from .values import EnvInstance, SymbolicKey
+
+        _RUNTIME = (jax, jnp, EnvInstance, SymbolicKey)
+    return _RUNTIME
+
+
 # ---------------------------------------------------------------------------
 # Canonical enumeration
 # ---------------------------------------------------------------------------
 
 
-def _enumerate_family(root: Graph) -> tuple[list[Graph], list[Node], dict[int, int]]:
+def _enumerate_family(
+    root: Graph, *, loose: bool = False
+) -> tuple[list[Graph], list[Node], dict[int, int]]:
     """Deterministic numbering of the closed family below ``root``.
 
     Graphs are numbered in first-reference order starting from the root;
@@ -71,11 +103,19 @@ def _enumerate_family(root: Graph) -> tuple[list[Graph], list[Node], dict[int, i
     users), derived purely from the graphs' structure — never from node
     ids or set iteration — so two processes building the same program
     assign identical indices.
+
+    ``loose=True`` (hash-only mode) additionally enumerates the nodes
+    referenced by :class:`SymbolicKey` constants before the constants
+    themselves, so a key can be encoded as the canonical index of its
+    referent.
     """
+    SymbolicKey = _runtime()[3]
+
     graphs: list[Graph] = []
     gidx: dict[int, int] = {}
     nodes: list[Node] = []
     nidx: dict[int, int] = {}
+    deferred_keys: set[int] = set()
 
     def register_graph(g: Graph) -> None:
         if id(g) in gidx:
@@ -100,10 +140,30 @@ def _enumerate_family(root: Graph) -> tuple[list[Graph], list[Node], dict[int, i
             if isinstance(n, Constant):
                 if isinstance(n.value, Graph):
                     register_graph(n.value)
+                elif loose and isinstance(n.value, SymbolicKey):
+                    ref = n.value.node
+                    if ref._id not in nidx:
+                        if n._id in deferred_keys:
+                            # referent unreachable or cyclic through this
+                            # constant: no canonical index exists
+                            raise SerializeError(
+                                f"symbolic key referent {ref!r} cannot be enumerated"
+                            )
+                        deferred_keys.add(n._id)
+                        stack.append((n, False))
+                        stack.append((ref, False))
+                        continue
                 nidx[n._id] = len(nodes)
                 nodes.append(n)
                 continue
             if isinstance(n, Parameter):
+                if loose and n.graph is not None:
+                    # pre-opt closures reference free variables of scopes
+                    # not reachable as graph constants; for hashing only,
+                    # pull the owning scope into the enumeration (its
+                    # structure is part of the program's identity)
+                    register_graph(n.graph)
+                    continue
                 # parameter of an unregistered graph: free variable into a
                 # scope outside the family
                 raise SerializeError(
@@ -111,6 +171,8 @@ def _enumerate_family(root: Graph) -> tuple[list[Graph], list[Node], dict[int, i
                     f"{n.graph.name if n.graph else '?'} is not in the family"
                 )
             assert isinstance(n, Apply)
+            if loose and n.graph is not None:
+                register_graph(n.graph)  # same: keep encode-time gidx total
             stack.append((n, True))
             for inp in reversed(n.inputs):
                 if inp._id not in nidx:
@@ -141,10 +203,28 @@ def _enc_array(kind: str, arr: np.ndarray) -> dict:
     }
 
 
-def _enc_value(v: Any, gidx: dict[int, int]) -> Any:
-    import jax
-    import jax.numpy as jnp
+def _enc_value(
+    v: Any,
+    gidx: dict[int, int],
+    *,
+    nidx: dict[int, int] | None = None,
+    loose: bool = False,
+) -> Any:
+    jax, jnp, EnvInstance, SymbolicKey = _runtime()
 
+    if loose and isinstance(v, SymbolicKey):
+        # hash-only: a key is identified by the canonical index of the
+        # node it references (enumerated by _enumerate_family in loose
+        # mode) — process-stable, never an object id
+        i = nidx.get(v.node._id) if nidx is not None else None
+        if i is None:
+            raise SerializeError(f"symbolic key referent {v.node!r} not in family")
+        return {"t": "symkey", "v": i}
+    if loose and isinstance(v, EnvInstance):
+        if len(v):
+            # a populated runtime env is not structure; refuse the key
+            raise SerializeError("non-empty gradient environment constant")
+        return {"t": "env0"}
     if v is None:
         return {"t": "none"}
     t = type(v)
@@ -158,7 +238,7 @@ def _enc_value(v: Any, gidx: dict[int, int]) -> Any:
     if t is str:
         return {"t": "str", "v": v}
     if t is tuple:
-        return {"t": "tuple", "v": [_enc_value(e, gidx) for e in v]}
+        return {"t": "tuple", "v": [_enc_value(e, gidx, nidx=nidx, loose=loose) for e in v]}
     if isinstance(v, np.dtype):
         return {"t": "dtype", "v": v.str}
     if isinstance(v, type):
@@ -197,7 +277,7 @@ def _dec_prim(name: str) -> Primitive:
 
 
 def _dec_value(e: Any, graphs: list[Graph]) -> Any:
-    import jax.numpy as jnp
+    jnp = _runtime()[1]
 
     t = e["t"]
     if t == "none":
@@ -233,14 +313,16 @@ def _dec_value(e: Any, graphs: list[Graph]) -> Any:
 # ---------------------------------------------------------------------------
 
 
-def serialize_graph(root: Graph, *, names: bool = True) -> dict:
+def serialize_graph(root: Graph, *, names: bool = True, loose: bool = False) -> dict:
     """Encode the closed family below ``root`` as a JSON-able dict.
 
     ``names=False`` strips graph/parameter/node debug names — the form
     :func:`structural_hash` digests, so renames and clone relabels never
-    change the hash.
+    change the hash.  ``loose=True`` admits symbolic-key / empty-env
+    constants (pre-optimization adjoint graphs) for hashing only — the
+    payload is tagged and :func:`deserialize_graph` rejects it.
     """
-    graphs, nodes, gidx = _enumerate_family(root)
+    graphs, nodes, gidx = _enumerate_family(root, loose=loose)
     nidx = {n._id: i for i, n in enumerate(nodes)}
     enc_nodes: list[dict] = []
     for n in nodes:
@@ -254,7 +336,7 @@ def serialize_graph(root: Graph, *, names: bool = True) -> dict:
             rec = {"k": "a", "g": gidx[id(n.graph)], "in": [nidx[i._id] for i in n.inputs]}
         else:
             assert isinstance(n, Constant)
-            rec = {"k": "c", "v": _enc_value(n.value, gidx)}
+            rec = {"k": "c", "v": _enc_value(n.value, gidx, nidx=nidx, loose=loose)}
         if names and n.debug_name:
             rec["n"] = n.debug_name
         enc_nodes.append(rec)
@@ -267,7 +349,10 @@ def serialize_graph(root: Graph, *, names: bool = True) -> dict:
                 "ret": nidx[g.return_._id],
             }
         )
-    return {"version": FORMAT_VERSION, "graphs": enc_graphs, "nodes": enc_nodes}
+    payload = {"version": FORMAT_VERSION, "graphs": enc_graphs, "nodes": enc_nodes}
+    if loose:
+        payload["loose"] = True
+    return payload
 
 
 def deserialize_graph(payload: dict) -> Graph:
@@ -276,6 +361,8 @@ def deserialize_graph(payload: dict) -> Graph:
         raise SerializeError(
             f"format version mismatch: {payload.get('version')} != {FORMAT_VERSION}"
         )
+    if payload.get("loose"):
+        raise SerializeError("loose (hash-only) payloads cannot be deserialized")
     graphs = [Graph(e["name"]) for e in payload["graphs"]]
     nodes: list[Node | None] = [None] * len(payload["nodes"])
     # parameters first (graph shells own them)
@@ -309,11 +396,13 @@ def deserialize_graph(payload: dict) -> Graph:
     return graphs[0]
 
 
-def dumps(root: Graph, *, names: bool = True) -> str:
+def dumps(root: Graph, *, names: bool = True, loose: bool = False) -> str:
     """Canonical JSON text of :func:`serialize_graph` (sorted keys, no
     whitespace — byte-stable across processes)."""
     return json.dumps(
-        serialize_graph(root, names=names), sort_keys=True, separators=(",", ":")
+        serialize_graph(root, names=names, loose=loose),
+        sort_keys=True,
+        separators=(",", ":"),
     )
 
 
@@ -321,9 +410,12 @@ def loads(text: str) -> Graph:
     return deserialize_graph(json.loads(text))
 
 
-def structural_hash(root: Graph) -> str:
+def structural_hash(root: Graph, *, loose: bool = False) -> str:
     """Hex content hash of the name-stripped canonical encoding.
 
     Stable across process runs and identical for structurally-identical
-    graphs — the graph component of the AOT program-cache key."""
-    return hashlib.sha256(dumps(root, names=False).encode("utf-8")).hexdigest()
+    graphs — the graph component of the AOT program-cache key.
+    ``loose=True`` admits pre-optimization adjoint graphs (symbolic keys,
+    empty gradient environments) — the graph component of the
+    optimized-graph cache key (``ProgramCache.graph_key``)."""
+    return hashlib.sha256(dumps(root, names=False, loose=loose).encode("utf-8")).hexdigest()

@@ -1,0 +1,306 @@
+"""Optimized-graph cache tier (``ProgramCache.graph_key``/``load_graph``/
+``store_graph`` + ``CompileOptions.graph_cache``).
+
+The tier's soundness claim: a specialization answered from the graph
+cache must be *indistinguishable* from one the optimizer produced —
+byte-identical lowered source, identical outputs — while the optimize
+and closure-elimination phases never run (their spans are absent).  That
+is pinned here over the closure-elim corpus, across process restarts
+(subprocess test), and under concurrent same-key / distinct-key builds
+(atomic publish, lock-free reads, no corrupt entries).
+"""
+
+import importlib.util
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_grad_graph, parse_function
+from repro.core.api import CompileOptions, compile_pipeline
+from repro.core.infer import abstract_of_value
+from repro.core.jax_backend import ProgramCache, abstract_value_signature
+from repro.core.lowering import lowering_blockers, try_lower
+from repro.core.primitives import reduce_sum as _rsum, tanh as _tanh
+from repro.core.serialize import SerializeError, dumps, structural_hash
+from repro.obs import trace as obs_trace
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_SRC = os.path.abspath(os.path.join(_HERE, "..", "..", "src"))
+
+
+def _load_corpus_module(fname: str):
+    spec = importlib.util.spec_from_file_location(
+        f"_gc_corpus_{fname[:-3]}", os.path.join(_HERE, fname)
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+_CE = _load_corpus_module("test_closure_elim.py")
+
+CASES = {f"ce_{n}": (b, a) for n, (b, a) in _CE.LOWERS.items()}
+
+
+def _example(args):
+    return tuple(abstract_of_value(a) for a in args)
+
+
+# ---------------------------------------------------------------------------
+# Round trip: cached graph ≡ freshly optimized graph
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_warm_graph_lowers_bit_identical(name, tmp_path):
+    """Cold (miss + store) then warm (hit): the deserialized graph's
+    lowered source must be byte-for-byte the source the fresh optimizer
+    run produces, and the canonical encodings must agree."""
+    build, args = CASES[name]
+    pc = ProgramCache(str(tmp_path))
+    opts = CompileOptions(graph_cache=pc)
+    g = build()
+    cold = compile_pipeline(g, _example(args), options=opts)
+    assert pc.stats.graph_misses == 1 and pc.stats.graph_puts == 1
+    warm = compile_pipeline(g, _example(args), options=opts)
+    assert pc.stats.graph_hits == 1
+    if lowering_blockers(cold):
+        pytest.skip("program stays on the VM: not a lowerable artifact")
+    assert dumps(warm, names=False) == dumps(cold, names=False)
+    f_cold, f_warm = try_lower(cold), try_lower(warm)
+    assert f_cold.__lowered_source__ == f_warm.__lowered_source__
+    np.testing.assert_array_equal(
+        np.asarray(f_cold(*args)), np.asarray(f_warm(*args))
+    )
+
+
+def test_warm_path_skips_optimize_and_closure_elim(tmp_path):
+    build, args = CASES[sorted(CASES)[0]]
+    pc = ProgramCache(str(tmp_path))
+    opts = CompileOptions(graph_cache=pc)
+    g = build()
+    compile_pipeline(g, _example(args), options=opts)
+    tracer = obs_trace.Tracer()
+    with obs_trace.tracing(tracer):
+        compile_pipeline(g, _example(args), options=opts)
+    phases = tracer.phase_totals_ms("compile_pipeline")
+    assert "optimize" not in phases
+    assert "closure.lower_loops" not in phases
+    assert "cache.graph_lookup" in phases
+
+
+# ---------------------------------------------------------------------------
+# Keys
+# ---------------------------------------------------------------------------
+
+
+def _loss(w, x):
+    h = _tanh(x @ w)
+    return _rsum(h * h, None, False)
+
+
+def _adjoint():
+    return build_grad_graph(parse_function(_loss), 0)
+
+
+_W = jnp.ones((4, 4), jnp.float32)
+_X = jnp.ones((2, 4), jnp.float32)
+
+
+def test_loose_hash_admits_pre_opt_adjoints():
+    """The pre-optimization adjoint carries symbolic-key and empty-env
+    constants: the strict encoding refuses it, the loose (hash-only)
+    encoding keys it — deterministically."""
+    g = _adjoint()
+    with pytest.raises(SerializeError):
+        structural_hash(g)
+    h1 = structural_hash(g, loose=True)
+    h2 = structural_hash(_adjoint(), loose=True)
+    assert h1 == h2  # two builds of the same program agree
+
+
+def test_loose_payload_refuses_deserialize():
+    from repro.core.serialize import deserialize_graph, serialize_graph
+
+    payload = serialize_graph(_adjoint(), loose=True)
+    with pytest.raises(SerializeError):
+        deserialize_graph(payload)
+
+
+def test_graph_key_separates_config_and_signature(tmp_path):
+    pc = ProgramCache(str(tmp_path))
+    g = _adjoint()
+    ex = _example((_W, _X))
+    k = pc.graph_key(g, ex)
+    assert k != pc.graph_key(g, ex, patterns=True)
+    assert k != pc.graph_key(g, _example((_W, jnp.ones((3, 4), jnp.float32))))
+    # known static scalars are part of the signature (constant propagation
+    # bakes them into the optimized graph)
+    assert abstract_value_signature(_example((2.0,))) != abstract_value_signature(
+        _example((3.0,))
+    )
+    assert k == ProgramCache(str(tmp_path)).graph_key(g, ex)  # process-stable
+
+
+def test_corrupt_entry_quarantined_not_fatal(tmp_path):
+    pc = ProgramCache(str(tmp_path))
+    g = _adjoint()
+    ex = _example((_W, _X))
+    opts = CompileOptions(graph_cache=pc)
+    compile_pipeline(g, ex, options=opts)
+    key = pc.graph_key(g, ex)
+    with open(pc._graph_file(key), "w") as f:
+        f.write('{"truncated')
+    out = compile_pipeline(g, ex, options=opts)  # degrades to a full run
+    assert pc.stats.corrupt_entries == 1 and pc.stats.quarantined == 1
+    assert not lowering_blockers(out)
+    # the poison was renamed aside and the full run republished a valid
+    # entry at the same key — the next lookup hits again
+    assert os.path.exists(pc._graph_file(key) + ".quarantined")
+    with open(pc._graph_file(key)) as f:
+        json.loads(f.read())
+    hits0 = pc.stats.graph_hits
+    compile_pipeline(g, ex, options=opts)
+    assert pc.stats.graph_hits == hits0 + 1
+
+
+# ---------------------------------------------------------------------------
+# Concurrency: lock-free reads, atomic same-key publication
+# ---------------------------------------------------------------------------
+
+
+def _run_threads(n, fn):
+    errs = []
+
+    def wrap(i):
+        try:
+            fn(i)
+        except Exception as e:  # pragma: no cover - failure reporting
+            errs.append(e)
+
+    ts = [threading.Thread(target=wrap, args=(i,)) for i in range(n)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert errs == [], errs
+
+
+def test_concurrent_same_key_builds_single_survivor(tmp_path):
+    """N racers miss, build, and store the same key: every store is an
+    atomic replace, so the surviving entry is complete and every later
+    read returns the identical graph."""
+    pc = ProgramCache(str(tmp_path))
+    ex = _example((_W, _X))
+    results = [None] * 4
+
+    def build(i):
+        results[i] = compile_pipeline(
+            _adjoint(), ex, options=CompileOptions(graph_cache=pc)
+        )
+
+    _run_threads(4, build)
+    encodings = {dumps(r, names=False) for r in results}
+    assert len(encodings) == 1
+    files = [n for n in os.listdir(str(tmp_path)) if n.endswith(".graph.json")]
+    assert len(files) == 1  # single survivor, no .tmp litter
+    assert not any(n.endswith(".tmp") for n in os.listdir(str(tmp_path)))
+    with open(os.path.join(str(tmp_path), files[0])) as f:
+        json.loads(f.read())  # the survivor is complete, parseable JSON
+    assert pc.stats.corrupt_entries == 0
+    # a fresh reader is answered from the surviving entry
+    pc2 = ProgramCache(str(tmp_path))
+    warm = compile_pipeline(_adjoint(), ex, options=CompileOptions(graph_cache=pc2))
+    assert pc2.stats.graph_hits == 1
+    assert dumps(warm, names=False) in encodings
+
+
+def test_concurrent_distinct_keys_all_land(tmp_path):
+    """Distinct buckets build concurrently behind the lock-free read
+    path: every key lands its own entry and none corrupts another's."""
+    pc = ProgramCache(str(tmp_path))
+    shapes = [(1, 4), (2, 4), (3, 4), (5, 4)]
+
+    def build(i):
+        ex = _example((_W, jnp.ones(shapes[i], jnp.float32)))
+        compile_pipeline(_adjoint(), ex, options=CompileOptions(graph_cache=pc))
+
+    _run_threads(len(shapes), build)
+    files = [n for n in os.listdir(str(tmp_path)) if n.endswith(".graph.json")]
+    assert len(files) == len(shapes)
+    assert pc.stats.graph_puts == len(shapes)
+    assert pc.stats.corrupt_entries == 0
+    # every bucket is warm now
+    for i in range(len(shapes)):
+        build(i)
+    assert pc.stats.graph_hits == len(shapes)
+
+
+# ---------------------------------------------------------------------------
+# Warm restart: a new process skips the optimizer entirely
+# ---------------------------------------------------------------------------
+
+_RESTART_SCRIPT = textwrap.dedent(
+    """
+    import sys
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import build_grad_graph, parse_function
+    from repro.core.api import CompileOptions, compile_pipeline
+    from repro.core.infer import abstract_of_value
+    from repro.core.jax_backend import ProgramCache
+    from repro.core.lowering import try_lower
+    from repro.core.primitives import reduce_sum as _rsum, tanh as _tanh
+    from repro.obs import trace as obs_trace
+
+    def _loss(w, x):
+        h = _tanh(x @ w)
+        return _rsum(h * h, None, False)
+
+    g = build_grad_graph(build_grad_graph(parse_function(_loss), 0), 0)
+    w = jnp.ones((4, 4), jnp.float32)
+    x = jnp.ones((2, 4), jnp.float32)
+    ex = tuple(abstract_of_value(a) for a in (w, x))
+    pc = ProgramCache(sys.argv[1])
+    tracer = obs_trace.Tracer()
+    with obs_trace.tracing(tracer):
+        og = compile_pipeline(g, ex, options=CompileOptions(graph_cache=pc))
+    phases = tracer.phase_totals_ms("compile_pipeline")
+    out = try_lower(og)(w, x)
+    print("OPTIMIZED" if "optimize" in phases else "SKIPPED")
+    print(repr(np.asarray(out).tolist()))
+    """
+)
+
+
+@pytest.mark.slow
+def test_warm_restart_skips_optimize_identical_outputs(tmp_path):
+    """Two fresh interpreters over one cache dir: the first optimizes and
+    stores, the second's pipeline never opens an optimize span — and both
+    produce identical gradients."""
+    script = tmp_path / "restart.py"
+    script.write_text(_RESTART_SCRIPT)
+    cache_dir = tmp_path / "cache"
+    env = dict(
+        os.environ, PYTHONPATH=_SRC + os.pathsep + os.environ.get("PYTHONPATH", "")
+    )
+    outs = []
+    for _ in range(2):
+        res = subprocess.run(
+            [sys.executable, str(script), str(cache_dir)],
+            capture_output=True,
+            text=True,
+            env=env,
+        )
+        assert res.returncode == 0, res.stderr
+        outs.append(res.stdout.strip().splitlines())
+    assert outs[0][0] == "OPTIMIZED"
+    assert outs[1][0] == "SKIPPED"
+    assert outs[0][1] == outs[1][1]  # token-identical gradients

@@ -124,8 +124,10 @@ HO_ROWS = [
         "workload": "grad2_mlp",
         "vm_fallback": 0,
         "steady_us": 70.0,
+        "pipeline_ms": 12100.0,
         "pipeline_phase_total_ms": 12000.0,
         "pipeline_phase_ms": {"optimize": 11800.0, "infer": 150.0},
+        "graph_cache_hit_rate": 1.0,
     }
 ]
 
@@ -169,6 +171,68 @@ def test_phase_total_missing_on_old_baseline_skipped(cb, repo):
     pipeline_phase_total_ms — the gate skips the metric (arms on the next
     commit) instead of failing on None."""
     old = [{k: v for k, v in HO_ROWS[0].items() if not k.startswith("pipeline_")}]
+    _commit_ho(repo, old)
+    _write_ho(repo, HO_ROWS)
+    assert cb.check_file("BENCH_higher_order.json", tol=0.25) == []
+
+
+def test_dotted_optimize_phase_blowup_fails(cb, repo):
+    """The dotted pipeline_phase_ms.optimize gate descends into the
+    nested phase dict: a superlinear optimizer regression (beyond tol AND
+    the absolute floor) trips it even when other phases are unchanged."""
+    _commit_ho(repo, HO_ROWS)
+    worse_phases = dict(HO_ROWS[0]["pipeline_phase_ms"], optimize=40000.0)
+    _write_ho(repo, [dict(HO_ROWS[0], pipeline_phase_ms=worse_phases)])
+    failures = cb.check_file("BENCH_higher_order.json", tol=0.25)
+    assert len(failures) == 1
+    assert "pipeline_phase_ms.optimize regressed" in failures[0]
+
+
+def test_dotted_optimize_phase_fall_passes(cb, repo):
+    """The direction is may-only-fall: the 10x optimizer win must land
+    gate-green and become the new baseline."""
+    _commit_ho(repo, HO_ROWS)
+    better = dict(
+        HO_ROWS[0],
+        pipeline_ms=950.0,
+        pipeline_phase_total_ms=940.0,
+        pipeline_phase_ms={"optimize": 700.0, "infer": 150.0},
+    )
+    _write_ho(repo, [better])
+    assert cb.check_file("BENCH_higher_order.json", tol=0.25) == []
+
+
+def test_pipeline_ms_blowup_fails(cb, repo):
+    _commit_ho(repo, HO_ROWS)
+    _write_ho(repo, [dict(HO_ROWS[0], pipeline_ms=40000.0)])
+    failures = cb.check_file("BENCH_higher_order.json", tol=0.25)
+    assert len(failures) == 1
+    assert "pipeline_ms regressed" in failures[0]
+
+
+def test_pipeline_ms_noise_floor_passes(cb, repo):
+    """Load wiggle under the relative tolerance must not trip the
+    trajectory gate."""
+    _commit_ho(repo, HO_ROWS)
+    _write_ho(repo, [dict(HO_ROWS[0], pipeline_ms=12500.0)])
+    assert cb.check_file("BENCH_higher_order.json", tol=0.25) == []
+
+
+def test_graph_cache_hit_rate_fall_fails(cb, repo):
+    """The warm graph-tier lookup is deterministic (1.0): any fall means
+    the pre-opt structural hash or loose encoding went unstable."""
+    _commit_ho(repo, HO_ROWS)
+    _write_ho(repo, [dict(HO_ROWS[0], graph_cache_hit_rate=0.0)])
+    failures = cb.check_file("BENCH_higher_order.json", tol=0.25)
+    assert len(failures) == 1
+    assert "graph_cache_hit_rate fell" in failures[0]
+    assert "may only rise" in failures[0]
+
+
+def test_dotted_metric_missing_phase_skipped(cb, repo):
+    """A baseline row whose phase dict lacks the optimize key (pre-tracer
+    era) skips the dotted gate instead of failing on None."""
+    old = [dict(HO_ROWS[0], pipeline_phase_ms={"infer": 150.0})]
     _commit_ho(repo, old)
     _write_ho(repo, HO_ROWS)
     assert cb.check_file("BENCH_higher_order.json", tol=0.25) == []
