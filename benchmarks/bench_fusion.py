@@ -12,7 +12,13 @@ chain, report
   the CPU production path; parity or better expected, XLA sees an
   equivalent program with fewer call sites) and in ``pallas_interpret``
   mode (the Pallas interpreter is a correctness simulator, its time is
-  reported for completeness, not compared).
+  reported for completeness, not compared),
+* **achieved bandwidth**: the runtime profiler (``repro.obs.profile``)
+  armed over the instrumented eager lowering — summed bytes moved over
+  summed launch wall per workload, reported as ``achieved_gbps`` and
+  ``roofline_fraction`` against the 819 GB/s HBM model
+  (``benchmarks/roofline.py``); ``check_bench.py`` gates the fraction
+  may-only-rise on the MLP adjoint.
 
 Rows land in ``BENCH_fusion.json`` via ``benchmarks/run.py`` so
 successive PRs leave a trajectory.
@@ -29,6 +35,7 @@ from repro.core.api import compile_pipeline
 from repro.core.infer import abstract_of_value
 from repro.core.lowering import lower_graph
 from repro.kernels import get_kernel_mode, set_kernel_mode
+from repro.obs import profile as obs_profile
 
 
 def _two_layer(w1, w2, x):
@@ -62,16 +69,27 @@ def _bench_graph(name: str, graph, args, reps: int) -> dict:
     fused = jax.jit(fused_fn)
 
     prev = get_kernel_mode()
+    prof = obs_profile.Profiler()
     try:
         set_kernel_mode("ref")
         unfused_us = _median_us(unfused, args, reps)
         fused_ref_us = _median_us(fused, args, reps)
+        # achieved bandwidth: the instrumented eager lowering under an
+        # armed profiler — one record per launch (fused clusters time
+        # themselves, everything else through call_profiled).  Warm one
+        # call first so jnp op compilation stays out of the aggregates.
+        prof_fn = lower_graph(g, fuse=True, profile=True)
+        jax.block_until_ready(prof_fn(*args))
+        with obs_profile.profiling(prof):
+            for _ in range(max(3, reps // 10)):
+                prof_fn(*args)
         set_kernel_mode("pallas_interpret")
         fused_interp = jax.jit(lower_graph(g, fuse=True))
         fused_interp_us = _median_us(fused_interp, args, reps)
     finally:
         set_kernel_mode(prev)
 
+    agg = prof.aggregate()
     stats = plan.stats()
     emitted = len(fused_fn.__fused_kernels__)
     return {
@@ -85,6 +103,8 @@ def _bench_graph(name: str, graph, args, reps: int) -> dict:
         "fused_ref_us": round(fused_ref_us, 1),
         "fused_over_unfused": round(fused_ref_us / unfused_us, 3),
         "fused_interpret_us": round(fused_interp_us, 1),
+        "achieved_gbps": agg["achieved_gbps"],
+        "roofline_fraction": agg["roofline_fraction"],
     }
 
 

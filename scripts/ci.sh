@@ -13,6 +13,18 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# Run an inline python script through a real temp file instead of stdin:
+# parse_function needs inspect.getsource, which cannot read a `python -`
+# heredoc (OSError: could not get source code).
+pyfile() {
+  local tmp rc=0
+  tmp="$(mktemp "${TMPDIR:-/tmp}/ci-inline-XXXXXX.py")"
+  cat > "$tmp"
+  python "$tmp" || rc=$?
+  rm -f "$tmp"
+  return "$rc"
+}
+
 echo "== lint (ruff via pyproject; in-repo fallback when unavailable) =="
 python scripts/lint.py
 
@@ -49,7 +61,7 @@ print("  serve smoke OK")
 PY
 
 echo "== graph-cache smoke (cold run optimizes + stores, warm run skips optimize) =="
-python - <<'PY'
+pyfile <<'PY'
 import tempfile
 import jax.numpy as jnp
 from repro.core import build_grad_graph, parse_function
@@ -82,6 +94,52 @@ with tempfile.TemporaryDirectory(prefix="ci-graphcache-") as d:
     print(f"  graph-cache smoke OK (warm phases: {sorted(phases)})")
 PY
 
+echo "== explain + profile smoke (every job: reports stay structured, profiler stays armed) =="
+pyfile <<'PY'
+import jax.numpy as jnp
+from repro.core.api import CompileOptions, grad
+from repro.core.primitives import reduce_sum as _rsum, tanh as _tanh
+from repro.obs import Profiler, profiling
+from repro.obs.explain import ExplainReport
+
+def _loss(w1, w2, x):
+    h = _tanh(x @ w1)
+    return _rsum(_tanh(h @ w2), None, False)
+
+opts = CompileOptions(fuse=True, profile=True)
+df = grad(_loss, (0, 1), options=opts)
+args = (jnp.ones((8, 8), jnp.float32) * 0.1,
+        jnp.ones((8, 8), jnp.float32) * 0.1,
+        jnp.ones((4, 8), jnp.float32))
+
+# explain: every cluster and every node carries a structured verdict,
+# and the report survives a JSON round trip
+rep = df.explain(*args)
+rt = ExplainReport.from_json(rep.to_json())
+assert rt.as_dict() == rep.as_dict(), "explain report not JSON-round-trippable"
+fus = rep["fusion"]
+assert fus["enabled"] and fus["clusters"], "grad corpus program produced no clusters"
+for c in fus["clusters"]:
+    assert c["verdict"] in ("emitted", "declined"), c
+for n in fus["nodes"]:
+    assert n["decision"] in ("fused", "unfused"), n
+    if n["decision"] == "unfused":
+        assert isinstance(n.get("reason"), dict) and "kind" in n["reason"], n
+
+# profile: armed run of the fused workload lands on the roofline scale
+df(*args)  # warm: compile outside the profiled window
+prof = Profiler()
+with profiling(prof):
+    for _ in range(3):
+        df(*args)
+assert prof.sites, "armed profiler recorded no launches"
+agg = prof.aggregate()
+fr = agg["roofline_fraction"]
+assert fr is not None and 0.0 < fr <= 1.0, f"roofline_fraction out of range: {fr}"
+print(f"  explain+profile smoke OK ({len(fus['clusters'])} clusters, "
+      f"{agg['calls']} launches, roofline_fraction {fr})")
+PY
+
 echo "== chaos corpus (deterministic fault injection, fixed seed) =="
 # part of every job, fast included: the chaos tests use explicit
 # fire-at-step fault plans (seed 0xC0FFEE feeds only the garbage bytes),
@@ -104,4 +162,40 @@ if [ "${SKIP_BENCH:-0}" != "1" ]; then
   # leaves a loadable compile-pipeline profile next to the BENCH numbers
   python -m benchmarks.run --quick --only higher_order \
     --trace artifacts/bench/trace_higher_order.json
+  echo "== runtime profile artifact (per-launch attribution + counter tracks) =="
+  # armed profiler over the fused MLP adjoint: the attribution JSON and a
+  # Perfetto trace with GB/s counter tracks land in artifacts/bench/,
+  # which ci.yml uploads — every full run leaves a runtime profile next
+  # to the compile profile above
+  python - <<'PY'
+import json, os
+import jax
+from repro.core import build_grad_graph, parse_function
+from repro.core.api import compile_pipeline
+from repro.core.infer import abstract_of_value
+from repro.core.lowering import lower_graph
+from benchmarks.bench_fusion import _two_layer
+from repro.obs import Profiler, Tracer, profiling
+
+k = jax.random.PRNGKey
+args = (jax.random.normal(k(0), (256, 256)) * 0.1,
+        jax.random.normal(k(1), (256, 256)) * 0.1,
+        jax.random.normal(k(2), (32, 256)))
+g = compile_pipeline(build_grad_graph(parse_function(_two_layer), (0, 1)),
+                     tuple(abstract_of_value(a) for a in args))
+fn = lower_graph(g, fuse=True, profile=True)
+jax.block_until_ready(fn(*args))  # warm
+prof = Profiler()
+with profiling(prof):
+    for _ in range(10):
+        fn(*args)
+os.makedirs("artifacts/bench", exist_ok=True)
+with open("artifacts/bench/profile_fusion.json", "w") as f:
+    json.dump(prof.as_dict(), f, indent=1)
+tr = Tracer()
+prof.export_counters(tr)
+tr.write_chrome_trace("artifacts/bench/trace_profile_fusion.json")
+print(prof.attribution_table(top=10))
+print("  wrote artifacts/bench/profile_fusion.json + trace_profile_fusion.json")
+PY
 fi

@@ -8,6 +8,13 @@ of the same config — syntax, unused imports (F401), line length (E501,
 100 cols), tabs and trailing whitespace — on the same file set.  CI
 (ubuntu runners, see .github/workflows/ci.yml) installs ruff and gets
 the full rule set; the fallback keeps the gate meaningful locally.
+
+Independent of ruff, the **span-registry check** always runs: every
+``span("...")`` / ``mark("...")`` string literal in ``src/`` and
+``benchmarks/`` must appear in ``repro.obs.trace``'s ``SPAN_NAMES`` /
+``MARK_NAMES`` (parsed by AST, no import) — ``check_bench.py`` gates
+metrics derived from those exact strings, so an unregistered name is a
+silently un-armed CI gate, not a style nit.
 """
 
 from __future__ import annotations
@@ -124,6 +131,81 @@ def _check_file(path: pathlib.Path) -> list[str]:
     return problems
 
 
+# ---------------------------------------------------------------------------
+# Span-name registry check (runs in BOTH the ruff and fallback paths)
+# ---------------------------------------------------------------------------
+
+TRACE_MODULE = ROOT / "src" / "repro" / "obs" / "trace.py"
+#: the file sets the registry check scans: instrumented production code.
+#: tests are exempt — they exercise the tracer with throwaway names.
+SPAN_CHECK_TARGETS = ["src", "benchmarks"]
+
+
+def _registry_names(var: str) -> set[str]:
+    """The string members of ``trace.py``'s ``var`` frozenset, read by AST
+    (no import: lint must not require jax or the package on sys.path)."""
+    tree = ast.parse(TRACE_MODULE.read_text(), filename=str(TRACE_MODULE))
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        if not any(isinstance(t, ast.Name) and t.id == var for t in node.targets):
+            continue
+        out: set[str] = set()
+        for c in ast.walk(node.value):
+            if isinstance(c, ast.Constant) and isinstance(c.value, str):
+                out.add(c.value)
+        return out
+    raise AssertionError(f"{var} not found in {TRACE_MODULE}")
+
+
+def _span_calls(tree: ast.AST) -> list[tuple[int, str, str]]:
+    """Every ``span(...)`` / ``mark(...)`` call (bare name or attribute,
+    e.g. ``obs_trace.span``) whose first argument is a string literal:
+    ``(lineno, func, name)``."""
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        fname = fn.id if isinstance(fn, ast.Name) else (
+            fn.attr if isinstance(fn, ast.Attribute) else None
+        )
+        if fname not in ("span", "mark"):
+            continue
+        if not node.args:
+            continue
+        a0 = node.args[0]
+        if isinstance(a0, ast.Constant) and isinstance(a0.value, str):
+            out.append((node.lineno, fname, a0.value))
+    return out
+
+
+def _span_registry_check() -> int:
+    span_names = _registry_names("SPAN_NAMES")
+    mark_names = _registry_names("MARK_NAMES")
+    registry = {"span": span_names, "mark": mark_names}
+    problems: list[str] = []
+    for target in SPAN_CHECK_TARGETS:
+        for path in sorted((ROOT / target).rglob("*.py")):
+            if "artifacts" in path.parts:
+                continue
+            try:
+                tree = ast.parse(path.read_text(), filename=str(path))
+            except SyntaxError:
+                continue  # the main lint reports syntax errors
+            rel = path.relative_to(ROOT)
+            for lineno, fname, name in _span_calls(tree):
+                if name not in registry[fname]:
+                    problems.append(
+                        f"{rel}:{lineno}: SPAN001 {fname}({name!r}) not in "
+                        f"trace.{'SPAN_NAMES' if fname == 'span' else 'MARK_NAMES'} "
+                        "— register the name there first (it arms the bench gates)"
+                    )
+    for p in problems:
+        print(p)
+    return 1 if problems else 0
+
+
 def _fallback() -> int:
     problems: list[str] = []
     for target in TARGETS:
@@ -141,10 +223,11 @@ def _fallback() -> int:
 
 
 def main() -> int:
+    spans = _span_registry_check()  # always runs: ruff cannot check this
     rc = _ruff()
-    if rc is not None:
-        return rc
-    return _fallback()
+    if rc is None:
+        rc = _fallback()
+    return rc or spans
 
 
 if __name__ == "__main__":

@@ -101,6 +101,7 @@ class CompileOptions:
     ``graph_cache``      ``None``    optimized-graph tier (skips optimize warm)
     ``trace``            ``None``    observability (``Tracer`` spans)
     ``checkpoint_policy``  ``"auto"``  loop-adjoint memory/recompute point
+    ``profile``          ``False``   runtime profiler (eager instrumented launch)
     ===================  ==========  =============================================
 
     ``graph_cache`` and ``program_cache`` usually point at the *same*
@@ -131,6 +132,11 @@ class CompileOptions:
     #: loop-adjoint carry recording: "auto" / "save_all" / "recompute"
     #: or an int slot count (see ``repro.core.ad._CHECKPOINT_SLOTS``)
     checkpoint_policy: str | int = "auto"
+    #: runtime-profiler tier — when True AND a ``repro.obs.profile``
+    #: Profiler is armed, calls with concrete args execute an instrumented
+    #: eager lowering that records per-launch wall time + bytes moved;
+    #: disarmed (or False) the ordinary jit tiers run untouched
+    profile: bool = False
 
 
 _UNSET: Any = object()
@@ -215,6 +221,7 @@ def compile_pipeline(
     patterns: bool = False,
     loops: bool = True,
     options: CompileOptions | None = None,
+    snapshot: Callable[[str, Graph], None] | None = None,
 ) -> Graph:
     """inline → infer → optimize → loop-lower, on a private clone of
     ``graph``.
@@ -234,6 +241,12 @@ def compile_pipeline(
     loops lower instead of falling back to the VM; when ``stats`` is
     given, any remaining fallback reasons land in
     ``stats.fallback_reasons`` (structured, see ``FallbackReason``).
+
+    ``snapshot`` (the explain layer's IR-dump hook) is called as
+    ``snapshot(stage, graph)`` after each pipeline stage — ``cloned`` /
+    ``optimized`` / ``shape_opt`` / ``loop_lowered`` / ``final``, or
+    ``graph_cache_hit`` when the optimized-graph tier answers.  None (the
+    default) costs nothing.
     """
     if options is not None:
         opt = options.opt
@@ -274,12 +287,21 @@ def compile_pipeline(
                         stats.fallback_reasons = [
                             r.as_dict() for r in analyze_blockers(hit)
                         ]
+                if snapshot is not None:
+                    snapshot("graph_cache_hit", hit)
+                    snapshot("final", hit)
                 return hit
         with obs_trace.span("clone"):
             g = clone_graph(graph)
+        if snapshot is not None:
+            snapshot("cloned", g)
         if not opt:
+            if snapshot is not None:
+                snapshot("final", g)
             return g
         optimize(g, engine=engine, stats=stats)  # structural pass (no abstracts)
+        if snapshot is not None:
+            snapshot("optimized", g)
         if infer_types and example_args is not None:
             try:
                 infer(g, *example_args)
@@ -287,6 +309,8 @@ def compile_pipeline(
                 pass  # dynamic program: shape-directed rules simply won't fire
             # shape-directed pass (kernel patterns need inferred shapes)
             optimize(g, engine=engine, stats=stats, patterns=patterns)
+            if snapshot is not None:
+                snapshot("shape_opt", g)
             if loops:
                 from .closure import lower_loops
 
@@ -295,6 +319,8 @@ def compile_pipeline(
                     # the rewrite leaves dead families and foldable glue; the
                     # cleanup pass also optimizes *inside* the loop subgraphs
                     optimize(g, engine=engine, stats=stats, patterns=patterns)
+                if snapshot is not None:
+                    snapshot("loop_lowered", g)
         if gkey is not None:
             with obs_trace.span("cache.graph_write", graph=graph.name):
                 gcache.store_graph(gkey, g)
@@ -303,7 +329,46 @@ def compile_pipeline(
 
             with obs_trace.span("closure.analyze_blockers"):
                 stats.fallback_reasons = [r.as_dict() for r in analyze_blockers(g)]
+        if snapshot is not None:
+            snapshot("final", g)
         return g
+
+
+def _wrap_profiled(inner: Callable, g: Graph, fuse: bool) -> Callable:
+    """The ``CompileOptions.profile`` tier: while a
+    :class:`repro.obs.profile.Profiler` is armed and the args are
+    concrete, route calls to a lazily-built *instrumented eager* lowering
+    (``lower_graph(profile=True)``) so every launch records wall time and
+    bytes moved.  Disarmed — or under an outer jit trace, or when the
+    graph doesn't lower — the wrapped runner is a single module-global
+    None-check away from the ordinary tiers."""
+    from repro.obs import profile as obs_profile
+
+    from .lowering import LoweringError, lower_graph
+
+    state: dict[str, Any] = {}
+
+    def runner(*args):
+        if obs_profile._ACTIVE is None or any(
+            isinstance(a, jax.core.Tracer) for a in args
+        ):
+            return inner(*args)
+        pfn = state.get("fn", _UNSET)
+        if pfn is _UNSET:
+            try:
+                pfn = lower_graph(g, fuse=fuse, profile=True)
+            except LoweringError:
+                pfn = None  # VM-fallback graph: nothing to instrument
+            state["fn"] = pfn
+        if pfn is None:
+            return inner(*args)
+        return pfn(*args)
+
+    runner.profiled = True
+    for attr in ("lowered", "jitted", "aot", "cache_key", "degraded"):
+        if hasattr(inner, attr):
+            setattr(runner, attr, getattr(inner, attr))
+    return runner
 
 
 def _apply_transform(
@@ -505,8 +570,12 @@ class MyiaFunction:
             runner = None
             if mesh is not None:
                 runner = self._make_spmd_runner(g, args, mesh)
+                # (spmd runners are never profile-wrapped: collectives
+                # only execute under shard_map, not eagerly)
             if runner is None:
                 runner = self._make_runner(g, args)
+                if self.options.profile and self.backend == "jax":
+                    runner = _wrap_profiled(runner, g, self.fuse)
             self._specializations[key] = runner
             return runner
 
@@ -649,6 +718,17 @@ class MyiaFunction:
         return self.specialize(args)(*args)
 
     # -- introspection (benchmarks / tests) --------------------------------
+    def explain(self, *example_args: Any, dump_ir: str | None = None):
+        """A structured compile report for this function at
+        ``example_args``'s signature: per-cluster fusion verdicts, per-node
+        decisions with reasons, sharding specs, cache-tier verdicts,
+        checkpoint policies and residual VM-fallback reasons — see
+        :class:`repro.obs.explain.ExplainReport`.  ``dump_ir="dir/"``
+        additionally writes diffable per-stage IR text dumps."""
+        from repro.obs.explain import explain_function
+
+        return explain_function(self, example_args, dump_ir=dump_ir)
+
     def optimized_graph(self, *args: Any) -> Graph:
         example = tuple(abstract_of_value(a) for a in args)
         base = self._resolved_graph(example) if self.transforms else self.graph

@@ -62,9 +62,11 @@ __all__ = [
     "BROADCAST",
     "REDUCTION",
     "COLLECTIVES",
+    "DeclineReason",
     "classify",
     "Cluster",
     "FusionPlan",
+    "explain_partition",
     "partition_graph",
 ]
 
@@ -83,6 +85,49 @@ BROADCAST = frozenset({"broadcast_to", "unreduce"})
 
 #: primitives that reduce the body shape DOWN to the output shape
 REDUCTION = frozenset({"reduce_sum", "reduce_max", "unbroadcast"})
+
+
+class DeclineReason:
+    """Why a node stayed out of every fusion cluster (or a whole cluster
+    was declined by codegen): a machine-readable kind + human detail.
+
+    Mirrors :class:`repro.core.closure.FallbackReason` — the explain layer
+    (``repro.obs.explain``) reports these as structured reason *objects*,
+    never bare strings, so downstream tooling can pivot on ``kind``."""
+
+    #: non-primitive call / no array abstract: nothing to fuse
+    NOT_ARRAY = "no-array-abstract"
+    #: an SPMD collective: a cluster must never span a resharding point
+    COLLECTIVE = "collective-boundary"
+    #: an opaque primitive (matmul, reshape, tuple machinery, …)
+    OPAQUE = "opaque-primitive"
+    #: broadcast/reduction static config (shape/axes) is not constant
+    NON_CONST_STATIC = "non-constant-static-args"
+    #: the legal region around this node is under min_cluster_size
+    TOO_SMALL = "region-too-small"
+    #: an interior value is consumed outside the region (2nd output needed)
+    ESCAPES = "value-escapes-region"
+    #: rank-0 / empty body: no kernel to win
+    EMPTY_BODY = "empty-or-scalar-body"
+    #: a neighboring cluster (grown from a later consumer) claimed the region
+    CLAIMED = "claimed-by-neighbor"
+    #: the partitioner clustered it but codegen could not express it
+    CODEGEN = "codegen-declined"
+
+    __slots__ = ("kind", "detail")
+
+    def __init__(self, kind: str, detail: str) -> None:
+        self.kind = kind
+        self.detail = detail
+
+    def __str__(self) -> str:
+        return f"[{self.kind}] {self.detail}"
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"DeclineReason({self.kind!r}, {self.detail!r})"
+
+    def as_dict(self) -> dict:
+        return {"kind": self.kind, "detail": self.detail}
 
 
 def _prim_of(node: Node) -> Primitive | None:
@@ -302,6 +347,104 @@ def partition_graph(graph: Graph, *, min_cluster_size: int = 3) -> FusionPlan:
         plan = _partition_graph_body(graph, min_cluster_size)
         sp.set(n_applies=plan.n_applies, clusters=len(plan.clusters))
     return plan
+
+
+def classify_reason(node: Node) -> DeclineReason | None:
+    """The structured reason :func:`classify` returned ``"opaque"`` for
+    ``node``, or None when the node is fusible (elementwise / broadcast /
+    reduction)."""
+    p = _prim_of(node)
+    if p is None:
+        return DeclineReason(
+            DeclineReason.NOT_ARRAY, "callee is not a constant primitive"
+        )
+    if p.name in COLLECTIVES:
+        return DeclineReason(
+            DeclineReason.COLLECTIVE,
+            f"{p.name} marks a resharding point; clusters never span one",
+        )
+    if _shape_of(node) is None and p.name not in REDUCTION:
+        return DeclineReason(
+            DeclineReason.NOT_ARRAY,
+            f"{p.name} produced no array abstract (scalar or uninferred)",
+        )
+    if p.name in (BROADCAST | REDUCTION) and not _static_args_const(node):
+        return DeclineReason(
+            DeclineReason.NON_CONST_STATIC,
+            f"{p.name} static config (shape/axes/keepdims) is not constant",
+        )
+    if classify(node) == "opaque":
+        return DeclineReason(
+            DeclineReason.OPAQUE, f"{p.name} has no elementwise kernel body"
+        )
+    return None
+
+
+def explain_partition(
+    graph: Graph, *, min_cluster_size: int = 3
+) -> tuple[FusionPlan, dict[int, DeclineReason]]:
+    """Partition ``graph`` AND explain every un-clustered apply node.
+
+    Returns ``(plan, declines)`` where ``declines`` maps node ``_id`` →
+    :class:`DeclineReason` for every apply the partitioner left out.  The
+    reasons re-run the same legality checks the partitioner used, against
+    the final assignment, so "too small" / "escapes" verdicts reflect the
+    regions that actually formed."""
+    plan = partition_graph(graph, min_cluster_size=min_cluster_size)
+    assigned: set[int] = set()
+    for c in plan.clusters:
+        assigned |= c.members
+    topo = [n for n in toposort(graph) if isinstance(n, Apply)]
+    live = {n._id for n in topo}
+    declines: dict[int, DeclineReason] = {}
+    for node in topo:
+        if node._id in assigned:
+            continue
+        reason = classify_reason(node)
+        if reason is not None:
+            declines[node._id] = reason
+            continue
+        # fusible class, yet unfused: replay growth against the final
+        # assignment to see what held the region back
+        grown = _grow(graph, node, assigned, live)
+        if grown is None:
+            declines[node._id] = DeclineReason(
+                DeclineReason.EMPTY_BODY,
+                "body shape is rank-0/empty; no kernel to win",
+            )
+        elif len(grown) < min_cluster_size:
+            neighbors = any(
+                u._id in assigned for (u, _i) in node.users if u._id in live
+            ) or any(
+                isinstance(a, Apply) and a._id in assigned for a in node.args
+            )
+            n_users = len({u._id for (u, _i) in node.users if u._id in live})
+            if neighbors:
+                declines[node._id] = DeclineReason(
+                    DeclineReason.CLAIMED,
+                    f"legal region is {len(grown)} node(s) < min "
+                    f"{min_cluster_size}; adjacent values already belong to "
+                    "an emitted cluster",
+                )
+            elif n_users > 1:
+                declines[node._id] = DeclineReason(
+                    DeclineReason.ESCAPES,
+                    f"value feeds {n_users} consumers; absorbing it would "
+                    "need a second cluster output",
+                )
+            else:
+                declines[node._id] = DeclineReason(
+                    DeclineReason.TOO_SMALL,
+                    f"legal region is {len(grown)} node(s), below "
+                    f"min_cluster_size={min_cluster_size}",
+                )
+        else:
+            declines[node._id] = DeclineReason(
+                DeclineReason.CLAIMED,
+                f"a {len(grown)}-node region is legal here but its nodes "
+                "were claimed by a cluster grown from a later consumer",
+            )
+    return plan, declines
 
 
 def _partition_graph_body(graph: Graph, min_cluster_size: int) -> FusionPlan:

@@ -471,6 +471,17 @@ class ProgramCache:
     def _file(self, key: str) -> str:
         return os.path.join(self.path, key + ".pkl")
 
+    def probe(self, key: str) -> bool:
+        """True when a durable executable entry exists for ``key``.
+
+        Read-only: no stats mutation, no entry load — the explain layer's
+        cache-tier verdict must not perturb the hit counters it reports."""
+        return os.path.exists(self._file(key))
+
+    def probe_graph(self, key: str) -> bool:
+        """``probe`` for the optimized-graph tier (same read-only contract)."""
+        return os.path.exists(self._graph_file(key))
+
     # -- optimized-graph tier ----------------------------------------------
     def graph_key(
         self,

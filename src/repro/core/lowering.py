@@ -35,6 +35,8 @@ from __future__ import annotations
 import math
 from typing import Any, Callable
 
+import numpy as np
+
 from .closure import analyze_blockers
 from .ir import (
     Apply,
@@ -43,7 +45,7 @@ from .ir import (
     Node,
     toposort,
 )
-from .primitives import LOOP_GRAPH_ARGS, Primitive
+from .primitives import COLLECTIVE_NAMES, LOOP_GRAPH_ARGS, Primitive
 
 __all__ = [
     "LoweringError",
@@ -94,7 +96,30 @@ def _literal(value: Any) -> str | None:
     return None
 
 
-def lower_graph(graph: Graph, *, fuse: bool = False) -> Callable:
+def _abstract_nbytes(ab: Any) -> int:
+    """Bytes of an abstract value (arrays + tuples of arrays; 0 unknown)."""
+    from .infer import AArray, ATuple
+
+    if isinstance(ab, AArray):
+        n = 1
+        for d in ab.shape:
+            n *= int(d)
+        return n * np.dtype(ab.dtype).itemsize
+    if isinstance(ab, ATuple):
+        return sum(_abstract_nbytes(e) for e in ab.elements)
+    return 0
+
+
+def _launch_nbytes(node: Apply) -> int:
+    """Bytes-moved estimate for one launch: every operand read + the
+    result written, from the inferred abstracts (0 when uninferred)."""
+    total = _abstract_nbytes(node.abstract)
+    for a in node.args:
+        total += _abstract_nbytes(getattr(a, "abstract", None))
+    return total
+
+
+def lower_graph(graph: Graph, *, fuse: bool = False, profile: bool = False) -> Callable:
     """Compile a first-order straight-line graph to a Python callable.
 
     The generated source (kept on the result as ``fn.__lowered_source__``)
@@ -112,6 +137,15 @@ def lower_graph(graph: Graph, *, fuse: bool = False) -> Callable:
     per-node jnp path — fusion never changes *whether* a graph lowers.
     The fusion plan and kernels ride on the result as
     ``fn.__fusion_plan__`` / ``fn.__fused_kernels__``.
+
+    With ``profile=True`` every *unfused* launch (opaque op, structured
+    loop, collective) is additionally wrapped in
+    ``repro.obs.profile.call_profiled`` — fused kernels time themselves —
+    so an armed :class:`~repro.obs.profile.Profiler` receives one record
+    per launch when the result is executed eagerly.  Disarmed, each hook
+    is a single module-global None-check; the default ``profile=False``
+    emits byte-identical source to before the profiler existed, so the
+    production path is structurally untouched.
     """
     from repro.obs import trace as obs_trace
 
@@ -119,10 +153,10 @@ def lower_graph(graph: Graph, *, fuse: bool = False) -> Callable:
     if blockers:
         raise LoweringError("; ".join(blockers))
     with obs_trace.span("lower", graph=graph.name, fuse=fuse):
-        return _lower_graph_body(graph, fuse)
+        return _lower_graph_body(graph, fuse, profile)
 
 
-def _lower_graph_body(graph: Graph, fuse: bool) -> Callable:
+def _lower_graph_body(graph: Graph, fuse: bool, profile: bool = False) -> Callable:
     plan = None
     fused: dict[int, Any] = {}  # root node id -> FusedKernel
     skip: set[int] = set()  # interior member ids of emitted clusters
@@ -144,6 +178,10 @@ def _lower_graph_body(graph: Graph, fuse: bool) -> Callable:
         plan.clusters = [c for c in plan.clusters if c.root._id in fused]
 
     env: dict[str, Any] = {}
+    if profile:
+        from repro.obs import profile as obs_profile
+
+        env["_prof"] = obs_profile.call_profiled
     prim_names: dict[int, str] = {}  # id(prim) -> bound name
     names: dict[int, str] = {}  # node id -> source name
     params = []
@@ -195,7 +233,10 @@ def _lower_graph_body(graph: Graph, fuse: bool) -> Callable:
         if n_sub is not None:
             # structured loop: the leading args are closed first-order
             # graphs — lower each recursively and bind the callables, so
-            # the loop body pays zero interpreter overhead too
+            # the loop body pays zero interpreter overhead too.  The body
+            # executes under lax control flow (traced once), so per-op
+            # profiling inside it is meaningless — the whole loop is one
+            # "loop"-kind launch and the sub-lowering stays uninstrumented.
             subs = []
             for sub in n.args[:n_sub]:
                 assert isinstance(sub, Constant) and isinstance(sub.value, Graph)
@@ -204,10 +245,25 @@ def _lower_graph_body(graph: Graph, fuse: bool) -> Callable:
                 subs.append(sname)
             rest = [ref(a) for a in n.args[n_sub:]]
             args = ", ".join(subs + rest)
-            lines.append(f"    {name} = {bind_prim(prim)}({args})  # {prim.name}")
+            if profile:
+                lines.append(
+                    f"    {name} = _prof({bind_prim(prim)}, "
+                    f"{prim.name + ':' + name!r}, 'loop', {_launch_nbytes(n)}, "
+                    f"{args})  # {prim.name}"
+                )
+            else:
+                lines.append(f"    {name} = {bind_prim(prim)}({args})  # {prim.name}")
             continue
         args = ", ".join(ref(a) for a in n.args)
-        lines.append(f"    {name} = {bind_prim(prim)}({args})  # {prim.name}")
+        if profile:
+            kind = "collective" if prim.name in COLLECTIVE_NAMES else "opaque"
+            lines.append(
+                f"    {name} = _prof({bind_prim(prim)}, "
+                f"{prim.name + ':' + name!r}, {kind!r}, {_launch_nbytes(n)}, "
+                f"{args})  # {prim.name}"
+            )
+        else:
+            lines.append(f"    {name} = {bind_prim(prim)}({args})  # {prim.name}")
     lines.append(f"    return {ref(graph.return_)}")
     source = "\n".join(lines) + "\n"
 

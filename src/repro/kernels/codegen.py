@@ -42,6 +42,7 @@ Generated source (kernel + wrapper + oracle) is kept on the result as
 from __future__ import annotations
 
 import math
+import time
 from typing import Any, Callable
 
 import jax
@@ -49,12 +50,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core.fusion import Cluster, classify
+from repro.core.fusion import Cluster, DeclineReason, classify
 from repro.core.infer import AArray
 from repro.core.ir import Apply, Constant, Node
+from repro.obs import profile as obs_profile
 from .ops import get_kernel_mode
 
-__all__ = ["FusedKernel", "emit_cluster"]
+__all__ = ["FusedKernel", "emit_cluster", "emit_cluster_explained"]
 
 #: soft cap on elements per VMEM block for generated map kernels
 _BLOCK_ELEMS = 128 * 1024
@@ -73,6 +75,7 @@ class FusedKernel:
         "kind",
         "body_shape",
         "out_shape",
+        "bytes_moved",
         "oracle",
         "pallas_interpret",
         "pallas_compiled",
@@ -89,6 +92,7 @@ class FusedKernel:
         oracle: Callable,
         pallas_interpret: Callable,
         pallas_compiled: Callable,
+        bytes_moved: int = 0,
     ) -> None:
         self.name = name
         self.source = source
@@ -96,6 +100,10 @@ class FusedKernel:
         self.kind = kind
         self.body_shape = body_shape
         self.out_shape = out_shape
+        #: minimum HBM traffic per launch (cluster inputs + root output,
+        #: from the inferred abstracts) — what the runtime profiler divides
+        #: wall time into for achieved-GB/s / roofline_fraction
+        self.bytes_moved = bytes_moved
         self.oracle = oracle
         self.pallas_interpret = pallas_interpret
         self.pallas_compiled = pallas_compiled
@@ -103,10 +111,21 @@ class FusedKernel:
     def __call__(self, *args: Any) -> Any:
         mode = get_kernel_mode()
         if mode == "pallas_interpret":
-            return self.pallas_interpret(*args)
-        if mode == "pallas":
-            return self.pallas_compiled(*args)
-        return self.oracle(*args)  # "ref" / "chunked"
+            fn = self.pallas_interpret
+        elif mode == "pallas":
+            fn = self.pallas_compiled
+        else:
+            fn = self.oracle  # "ref" / "chunked"
+        # runtime profiler hook: disarmed this is one module-global read
+        # (the structural-zero-overhead contract); armed + concrete args,
+        # the launch is timed to completion and attributed per kernel
+        prof = obs_profile._ACTIVE
+        if prof is None or any(isinstance(a, jax.core.Tracer) for a in args):
+            return fn(*args)
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn(*args))
+        prof.record(self.name, "fused", time.perf_counter() - t0, self.bytes_moved)
+        return out
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"<FusedKernel {self.name} {self.kind} n={self.n_nodes}>"
@@ -148,13 +167,50 @@ def _block_rows(R: int, C: int) -> int:
     return br
 
 
+def _abstract_nbytes(ab: Any) -> int:
+    """Bytes of one array abstract (0 for non-arrays/unknown)."""
+    if isinstance(ab, AArray):
+        n = 1
+        for d in ab.shape:
+            n *= int(d)
+        return n * np.dtype(ab.dtype).itemsize
+    return 0
+
+
+def _cluster_bytes(cluster: Cluster) -> int:
+    """Minimum HBM traffic of one launch: every external input read once
+    plus the root output written once (interior values live in VMEM)."""
+    total = sum(_abstract_nbytes(n.abstract) for n in cluster.inputs)
+    return total + _abstract_nbytes(cluster.root.abstract)
+
+
 def emit_cluster(cluster: Cluster) -> FusedKernel | None:
     """Generate the fused kernel for ``cluster`` or decline with None."""
+    kernel, _reason = emit_cluster_explained(cluster)
+    return kernel
+
+
+def emit_cluster_explained(
+    cluster: Cluster,
+) -> tuple[FusedKernel | None, DeclineReason | None]:
+    """``(kernel, None)`` on success, ``(None, DeclineReason)`` when the
+    generator cannot express the cluster — the structured verdict the
+    explain layer reports per cluster."""
+    got = _emit_cluster_impl(cluster)
+    if isinstance(got, FusedKernel):
+        return got, None
+    return None, got
+
+
+def _emit_cluster_impl(cluster: Cluster) -> FusedKernel | DeclineReason:
     body_shape = tuple(cluster.body_shape)
     out_shape = tuple(cluster.out_shape)
     out_dtype = cluster.out_dtype
     if out_dtype is None or len(body_shape) == 0:
-        return None
+        return DeclineReason(
+            DeclineReason.EMPTY_BODY,
+            "cluster has no output dtype or a rank-0 body; no kernel to win",
+        )
 
     # -- name & classify members ------------------------------------------
     members = {n._id for n in cluster.order}
@@ -163,7 +219,10 @@ def emit_cluster(cluster: Cluster) -> FusedKernel | None:
     for n in cluster.order:
         (pre if classify(n) == "broadcast" else body).append(n)
     if not body or body[-1] is not cluster.root:
-        return None  # root must be the last body node (single output)
+        return DeclineReason(
+            DeclineReason.CODEGEN,
+            "root is not the last body node (single-output ordering)",
+        )
 
     env: dict[str, Any] = {"jnp": jnp, "jax": jax, "pl": pl}
     prim_names: dict[int, str] = {}
@@ -182,7 +241,11 @@ def emit_cluster(cluster: Cluster) -> FusedKernel | None:
     input_name: dict[int, str] = {}
     for i, node in enumerate(cluster.inputs):
         if not isinstance(node.abstract, AArray):
-            return None  # non-array input: the jnp path keeps this cluster
+            # non-array input: the jnp path keeps this cluster
+            return DeclineReason(
+                DeclineReason.NOT_ARRAY,
+                f"cluster input {i} has no array abstract",
+            )
         input_name[node._id] = f"a{i}"
 
     def ext_ref(node: Node) -> str | None:
@@ -213,10 +276,16 @@ def emit_cluster(cluster: Cluster) -> FusedKernel | None:
         args = []
         for a in n.args:
             if a._id in members:
-                return None  # broadcast member fed by the kernel body: decline
+                return DeclineReason(
+                    DeclineReason.CODEGEN,
+                    "broadcast member consumes a kernel-body value",
+                )
             r = ext_ref(a)
             if r is None:
-                return None
+                return DeclineReason(
+                    DeclineReason.CODEGEN,
+                    f"unsupported external reference feeding {n.fn.value.name}",
+                )
             args.append(r)
         pre_name[n._id] = f"p{k}"
         pre_lines.append(
@@ -263,7 +332,10 @@ def emit_cluster(cluster: Cluster) -> FusedKernel | None:
             else:
                 r = operand_for(a)
             if r is None:
-                return None
+                return DeclineReason(
+                    DeclineReason.CODEGEN,
+                    f"unsupported operand feeding {n.fn.value.name}",
+                )
             rendered.append(r)
         vname[n._id] = f"v{k}"
         body_lines.append(
@@ -366,7 +438,9 @@ def emit_cluster(cluster: Cluster) -> FusedKernel | None:
     try:
         exec(compile(source, f"<myia-fused:{name}>", "exec"), namespace)
     except SyntaxError:  # pragma: no cover - codegen bug guard
-        return None
+        return DeclineReason(
+            DeclineReason.CODEGEN, "generated source failed to compile"
+        )
     oracle = namespace["_oracle"]
     interp = namespace["_make"](True)
     compiled = namespace["_make"](False)
@@ -382,4 +456,5 @@ def emit_cluster(cluster: Cluster) -> FusedKernel | None:
         oracle=oracle,
         pallas_interpret=interp,
         pallas_compiled=compiled,
+        bytes_moved=_cluster_bytes(cluster),
     )

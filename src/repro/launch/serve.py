@@ -93,6 +93,14 @@ def main(argv=None) -> int:
         "a Chrome trace-event file (open in https://ui.perfetto.dev); also "
         "prints one telemetry summary line per request",
     )
+    ap.add_argument(
+        "--metrics-out",
+        default=None,
+        metavar="FILE",
+        help="myia: after the run, write the engine's metrics registry "
+        "plus the serve/cache stats snapshot as Prometheus text exposition "
+        "(scrape-file / node_exporter textfile-collector format)",
+    )
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -237,6 +245,23 @@ def _serve_myia_engine(args, cfg) -> int:
         print(
             f"[myia/telemetry] wrote {len(tracer.events)} spans to "
             f"{args.trace} (open in https://ui.perfetto.dev)"
+        )
+
+    if args.metrics_out:
+        from repro.obs import snapshot, to_prometheus
+
+        text = to_prometheus(
+            engine.telemetry,
+            extra=snapshot(
+                serve={k: v for k, v in stats.items() if k != "telemetry"},
+                cache=cache.stats if cache is not None else None,
+            ),
+        )
+        with open(args.metrics_out, "w", encoding="utf-8") as f:
+            f.write(text)
+        print(
+            f"[myia/metrics] wrote {len(text.splitlines())} exposition "
+            f"lines to {args.metrics_out}"
         )
 
     if args.check_oracle:

@@ -6,11 +6,18 @@
   Chrome trace-event JSON (Perfetto) or a text phase summary.
 * ``repro.obs.metrics`` — counters / gauges / fixed-bucket histograms and
   the flat dotted-key ``snapshot()`` schema absorbing ``OptStats``,
-  ``CacheStats`` and the serve engine's stats behind one surface.
+  ``CacheStats`` and the serve engine's stats behind one surface, plus the
+  Prometheus text exposition (``to_prometheus``).
+* ``repro.obs.profile`` — the runtime profiler: per-launch wall time and
+  bytes-moved attribution against the HBM roofline, armed via
+  ``profiling(profiler)`` (same zero-overhead-disarmed contract).
+* ``repro.obs.explain`` — the compile-decision explain layer:
+  ``MyiaFunction.explain()`` reports, per-stage IR dumps.
 
 See ``docs/observability.md`` for the span taxonomy and worked examples.
 """
 
+from .explain import ExplainReport, explain_function, explain_graph
 from .metrics import (
     Counter,
     Gauge,
@@ -18,9 +25,13 @@ from .metrics import (
     MetricsRegistry,
     flatten,
     snapshot,
+    to_prometheus,
 )
+from .profile import NULL_PROBE, Profiler, profiling
 from .trace import (
+    MARK_NAMES,
     NULL_SPAN,
+    SPAN_NAMES,
     SpanRecord,
     Tracer,
     active,
@@ -31,12 +42,21 @@ from .trace import (
 
 __all__ = [
     "Counter",
+    "ExplainReport",
     "Gauge",
     "Histogram",
     "MetricsRegistry",
+    "explain_function",
+    "explain_graph",
     "flatten",
     "snapshot",
+    "to_prometheus",
+    "MARK_NAMES",
+    "NULL_PROBE",
     "NULL_SPAN",
+    "Profiler",
+    "profiling",
+    "SPAN_NAMES",
     "SpanRecord",
     "Tracer",
     "active",

@@ -37,6 +37,7 @@ __all__ = [
     "MetricsRegistry",
     "flatten",
     "snapshot",
+    "to_prometheus",
 ]
 
 #: default bucket upper bounds for latency histograms, in milliseconds —
@@ -189,6 +190,54 @@ def flatten(value: Any, prefix: str = "") -> dict[str, Any]:
 
 def _scalar(v: Any) -> bool:
     return v is None or isinstance(v, (str, int, float, bool))
+
+
+def _prom_name(name: str) -> str:
+    """A legal Prometheus metric name: dotted keys become underscores,
+    anything outside ``[a-zA-Z0-9_:]`` is replaced, leading digits get a
+    prefix."""
+    out = "".join(c if c.isalnum() or c in "_:" else "_" for c in name)
+    if not out or out[0].isdigit():
+        out = "m_" + out
+    return out
+
+
+def to_prometheus(registry: "MetricsRegistry | None" = None, *, extra: Any = None) -> str:
+    """Prometheus text exposition (format 0.0.4) of ``registry`` plus an
+    optional ``extra`` source of scalars (a dict / anything ``flatten``
+    absorbs, e.g. ``snapshot(serve=engine.stats())``).
+
+    Counters and gauges emit one sample each; histograms emit the full
+    ``_bucket{le="..."}`` cumulative series (including ``+Inf``) plus
+    ``_sum`` and ``_count`` — exactly what ``histogram_quantile`` needs.
+    Non-numeric extra leaves are skipped (exposition is numbers-only)."""
+    lines: list[str] = []
+    if registry is not None:
+        for name, m in sorted(registry._metrics.items()):
+            pname = _prom_name(name)
+            if isinstance(m, Counter):
+                lines.append(f"# TYPE {pname} counter")
+                lines.append(f"{pname} {m.value}")
+            elif isinstance(m, Gauge):
+                lines.append(f"# TYPE {pname} gauge")
+                lines.append(f"{pname} {m.value}")
+            else:
+                lines.append(f"# TYPE {pname} histogram")
+                acc = 0
+                for ub, c in zip(m.buckets, m.counts):
+                    acc += c
+                    lines.append(f'{pname}_bucket{{le="{ub:g}"}} {acc}')
+                lines.append(f'{pname}_bucket{{le="+Inf"}} {m.count}')
+                lines.append(f"{pname}_sum {m.sum}")
+                lines.append(f"{pname}_count {m.count}")
+    if extra is not None:
+        for key, v in sorted(flatten(extra).items()):
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                continue  # exposition carries numbers only
+            pname = _prom_name(key)
+            lines.append(f"# TYPE {pname} gauge")
+            lines.append(f"{pname} {v}")
+    return "\n".join(lines) + ("\n" if lines else "")
 
 
 def snapshot(**sources: Any) -> dict[str, Any]:

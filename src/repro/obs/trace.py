@@ -41,7 +41,9 @@ import time
 from typing import Any
 
 __all__ = [
+    "MARK_NAMES",
     "NULL_SPAN",
+    "SPAN_NAMES",
     "SpanRecord",
     "Tracer",
     "active",
@@ -49,6 +51,54 @@ __all__ = [
     "span",
     "tracing",
 ]
+
+#: The span-name taxonomy: every legal ``span(...)`` name, one place.
+#:
+#: ``check_bench.py`` gates metrics derived from these exact strings
+#: (``pipeline_phase_ms.optimize`` descends by span name), so a renamed
+#: or ad-hoc span silently un-arms a CI gate.  Both the registry test
+#: (``tests/obs/test_trace.py``) and the ``scripts/lint.py`` AST check
+#: fail on a ``span("...")`` literal that is not listed here — add new
+#: names HERE first, then use them.
+SPAN_NAMES = frozenset({
+    # compile pipeline (see docs/observability.md for the stage mapping)
+    "parse",
+    "ad.grad",
+    "specialize",
+    "compile_pipeline",
+    "clone",
+    "infer",
+    "optimize",
+    "opt.rules",
+    "opt.inline_wave",
+    "opt.defunctionalize",
+    "closure.lower_loops",
+    "closure.analyze_blockers",
+    "fuse.partition",
+    "lower",
+    "xla.compile",
+    "xla.tier0_compile",
+    # cache tiers (AOT executables + optimized graphs)
+    "cache.lookup",
+    "cache.write",
+    "cache.graph_lookup",
+    "cache.graph_write",
+    # serving runtime
+    "serve.prefill",
+    "serve.decode_step",
+    # runtime profiler / explain layer
+    "explain.report",
+})
+
+#: Every legal ``mark(...)`` (instant event) name — same contract as
+#: :data:`SPAN_NAMES` (``serve.engine.request_telemetry`` reconstructs
+#: request lifecycles from these exact strings).
+MARK_NAMES = frozenset({
+    "serve.submit",
+    "serve.admitted",
+    "serve.first_token",
+    "serve.terminal",
+})
 
 
 class SpanRecord:
@@ -69,7 +119,7 @@ class SpanRecord:
         self.depth = depth
         self.tid = tid
         self.attrs = attrs
-        self.kind = kind  # "span" (has duration) | "mark" (instant)
+        self.kind = kind  # "span" (duration) | "mark" (instant) | "counter" (sample)
 
     @property
     def dur_s(self) -> float:
@@ -189,6 +239,18 @@ class Tracer:
         rec.t1 = t
         self._append(rec)
 
+    def counter(self, name: str, value: float, ts: float | None = None, **attrs) -> None:
+        """Record one sample of a counter track (a time series, e.g. the
+        profiler's achieved-GB/s per launch).  Exports as a Chrome ``C``
+        (counter) event, which Perfetto renders as a stacked track."""
+        t = time.monotonic() if ts is None else ts
+        rec = SpanRecord(
+            name, t, 0, threading.get_ident(),
+            {"value": float(value), **attrs}, kind="counter",
+        )
+        rec.t1 = t
+        self._append(rec)
+
     def _append(self, rec: SpanRecord) -> None:
         with self._lock:
             if len(self.events) >= self.max_events:
@@ -257,6 +319,9 @@ class Tracer:
             if e.kind == "mark":
                 row["ph"] = "i"
                 row["s"] = "t"  # thread-scoped instant
+            elif e.kind == "counter":
+                row["ph"] = "C"  # Perfetto counter track: args are series
+                row["args"] = {"value": args.get("value", 0.0)}
             else:
                 row["ph"] = "X"
                 row["dur"] = round(e.dur_s * 1e6, 1)

@@ -85,3 +85,75 @@ def test_snapshot_leaves_are_json_scalars_or_scalar_lists():
     assert isinstance(snap["m.obj"], str)  # repr'd, never a raw object
     assert isinstance(snap["m.xs"][0], str)
     assert snap["m.n"] == 1
+
+
+def test_histogram_all_samples_overflow_bucket():
+    """Every observation past the last bound lands in the implicit +Inf
+    bucket; quantiles then report the true max, not a bucket bound."""
+    h = M.Histogram(buckets=(1.0, 10.0))
+    for v in (100.0, 200.0, 300.0):
+        h.observe(v)
+    assert h.counts == [0, 0, 3]
+    assert h.quantile(0.5) == 300.0
+    assert h.quantile(0.99) == 300.0
+    d = h.as_dict()
+    assert d["p50"] == 300.0 and d["max"] == 300.0
+
+
+def test_histogram_p99_single_sample():
+    """One sample: every quantile is that sample's bucket upper bound."""
+    h = M.Histogram(buckets=(1.0, 10.0, 100.0))
+    h.observe(5.0)
+    assert h.quantile(0.5) == 10.0
+    assert h.quantile(0.99) == 10.0
+    assert h.as_dict()["p99"] == 10.0
+
+
+def test_histogram_boundary_value_lands_in_lower_bucket():
+    """bisect_left: an observation exactly on a bound counts toward that
+    bound's bucket (le semantics, matching the Prometheus exposition)."""
+    h = M.Histogram(buckets=(1.0, 10.0))
+    h.observe(1.0)
+    assert h.counts == [1, 0, 0]
+
+
+def test_prom_name_sanitization():
+    assert M._prom_name("serve.statuses.ok") == "serve_statuses_ok"
+    assert M._prom_name("cache.hit-rate") == "cache_hit_rate"
+    assert M._prom_name("9lives") == "m_9lives"
+    assert M._prom_name("") == "m_"
+
+
+def test_to_prometheus_counter_gauge_histogram():
+    r = M.MetricsRegistry()
+    r.counter("reqs.total").inc(7)
+    r.gauge("queue.depth").set(3.0)
+    h = r.histogram("lat.ms", buckets=(1.0, 10.0))
+    for v in (0.5, 5.0, 50.0):
+        h.observe(v)
+    text = M.to_prometheus(r)
+    lines = text.splitlines()
+    assert "# TYPE reqs_total counter" in lines
+    assert "reqs_total 7" in lines
+    assert "queue_depth 3.0" in lines
+    # cumulative buckets + +Inf + _sum + _count
+    assert 'lat_ms_bucket{le="1"} 1' in lines
+    assert 'lat_ms_bucket{le="10"} 2' in lines
+    assert 'lat_ms_bucket{le="+Inf"} 3' in lines
+    assert "lat_ms_sum 55.5" in lines
+    assert "lat_ms_count 3" in lines
+    assert text.endswith("\n")
+
+
+def test_to_prometheus_extra_skips_non_numeric():
+    text = M.to_prometheus(
+        extra={"serve": {"ok": 3, "mode": "degraded", "armed": True, "x": None}}
+    )
+    lines = text.splitlines()
+    assert "serve_ok 3" in lines
+    assert not any("mode" in ln or "armed" in ln or ln.endswith("None") for ln in lines)
+
+
+def test_to_prometheus_empty_is_empty_string():
+    assert M.to_prometheus() == ""
+    assert M.to_prometheus(M.MetricsRegistry()) == ""

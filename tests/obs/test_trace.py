@@ -146,3 +146,93 @@ def test_total_s_and_summary():
     assert tr.total_s("opt.rules") >= 0
     text = tr.phase_summary()
     assert "opt.rules" in text and "count" in text
+
+
+def test_counter_events_export_as_counter_tracks():
+    tr = T.Tracer()
+    with T.tracing(tr):
+        tr.counter("profile.gbps.k0", 12.5, ts=1.0)
+        tr.counter("profile.launch_ms", 0.8, ts=1.0, site="k0")
+    assert all(e.kind == "counter" for e in tr.events)
+    doc = tr.chrome_trace()
+    cs = [e for e in doc["traceEvents"] if e["ph"] == "C"]
+    assert len(cs) == 2
+    # counter args carry exactly the series value (Perfetto stacks args)
+    assert {e["args"]["value"] for e in cs} == {12.5, 0.8}
+    # counters are samples, not phases: excluded from span aggregation
+    assert tr.phase_totals_ms() == {}
+
+
+def test_span_name_registry_covers_instrumented_sources():
+    """Every span()/mark() literal in src/ and benchmarks/ appears in the
+    trace.py registry — same AST check scripts/lint.py enforces, run here
+    through the lint helpers so the contract fails in BOTH gates."""
+    import importlib.util
+    import pathlib
+
+    root = pathlib.Path(__file__).resolve().parents[2]
+    spec = importlib.util.spec_from_file_location(
+        "repro_lint", root / "scripts" / "lint.py"
+    )
+    lint = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(lint)
+    # the AST-parsed registries agree with the imported constants
+    assert lint._registry_names("SPAN_NAMES") == set(T.SPAN_NAMES)
+    assert lint._registry_names("MARK_NAMES") == set(T.MARK_NAMES)
+    assert lint._span_registry_check() == 0
+
+
+def test_registry_contains_pipeline_and_profiler_names():
+    for name in ("compile_pipeline", "optimize", "fuse.partition", "explain.report"):
+        assert name in T.SPAN_NAMES
+    for name in ("serve.submit", "serve.terminal"):
+        assert name in T.MARK_NAMES
+
+
+def test_concurrent_append_exact_drop_accounting():
+    """N threads hammering a bounded buffer: len(events) + dropped must
+    equal the exact number of records offered, and high_water equals the
+    cap — no lost updates under the append lock."""
+    import threading
+
+    cap = 100
+    tr = T.Tracer(max_events=cap)
+    per_thread, n_threads = 200, 8
+    barrier = threading.Barrier(n_threads)
+
+    def worker(tid):
+        barrier.wait()
+        for i in range(per_thread):
+            tr.mark(f"m{tid}.{i}", {"i": i})
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    offered = per_thread * n_threads
+    assert len(tr.events) == cap
+    assert tr.dropped == offered - cap
+    assert tr.high_water == cap
+
+
+def test_concurrent_spans_under_capacity_lose_nothing():
+    import threading
+
+    tr = T.Tracer(max_events=10_000)
+    n_threads, per_thread = 8, 100
+
+    def worker():
+        with T.tracing(tr):
+            for _ in range(per_thread):
+                with T.span("concurrent"):
+                    pass
+
+    threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(tr.find("concurrent")) == n_threads * per_thread
+    assert tr.dropped == 0
+    assert tr.high_water == n_threads * per_thread

@@ -304,3 +304,95 @@ def test_vm_fallbacks_hard_floor_without_baseline(cb, repo):
     _write_compile(repo, [dict(COMPILE_ROWS[1], vm_fallbacks=3)])
     failures = cb.check_file("BENCH_compile.json", tol=0.25)
     assert len(failures) == 1 and "hard floor" in failures[0]
+
+
+# -- fusion runtime-profiler trajectory (BENCH_fusion.json) ------------------
+
+FUSION_ROWS = [
+    {
+        "workload": "mlp_adjoint_256",
+        "launches_after": 11,
+        "fused_over_unfused": 1.02,
+        "achieved_gbps": 2.4,
+        "roofline_fraction": 0.25,
+    }
+]
+
+
+def _write_fusion(repo, rows):
+    (repo / "BENCH_fusion.json").write_text(json.dumps(rows))
+
+
+def _commit_fusion(repo, rows):
+    _write_fusion(repo, rows)
+    _git(repo, "add", "BENCH_fusion.json")
+    _git(repo, "commit", "-q", "-m", "fusion baseline")
+
+
+def test_fusion_unchanged_passes(cb, repo):
+    _commit_fusion(repo, FUSION_ROWS)
+    assert cb.check_file("BENCH_fusion.json", tol=0.25) == []
+
+
+def test_fusion_launch_count_rise_fails_exactly(cb, repo):
+    """launches_after is the deterministic partition gate: 11 -> 12 is
+    within every relative tolerance but must still fail."""
+    _commit_fusion(repo, FUSION_ROWS)
+    _write_fusion(repo, [dict(FUSION_ROWS[0], launches_after=12)])
+    failures = cb.check_file("BENCH_fusion.json", tol=0.25)
+    assert len(failures) == 1
+    assert "launches_after rose" in failures[0]
+
+
+def test_fusion_ratio_regression_fails(cb, repo):
+    """fused_over_unfused beyond tol AND the 0.15 noise floor: the fused
+    lowering getting structurally slower than the unfused one must trip."""
+    _commit_fusion(repo, FUSION_ROWS)
+    _write_fusion(repo, [dict(FUSION_ROWS[0], fused_over_unfused=1.6)])
+    failures = cb.check_file("BENCH_fusion.json", tol=0.25)
+    assert len(failures) == 1
+    assert "fused_over_unfused regressed" in failures[0]
+
+
+def test_fusion_ratio_noise_floor_passes(cb, repo):
+    """Eager-dispatch jitter under the 0.15 absolute floor must pass even
+    when it exceeds the relative tolerance (1.02 -> 1.14 is +12%... keep
+    it beyond tol: 0.1 -> 0.2 would be +100% but under the floor)."""
+    _commit_fusion(repo, [dict(FUSION_ROWS[0], fused_over_unfused=0.10)])
+    _write_fusion(repo, [dict(FUSION_ROWS[0], fused_over_unfused=0.20)])
+    assert cb.check_file("BENCH_fusion.json", tol=0.25) == []
+
+
+def test_roofline_fraction_fall_fails(cb, repo):
+    """roofline_fraction may only rise: a fall beyond tol AND the 0.05
+    floor (fusion stopped saturating bandwidth) trips the gate."""
+    _commit_fusion(repo, FUSION_ROWS)
+    _write_fusion(repo, [dict(FUSION_ROWS[0], roofline_fraction=0.10)])
+    failures = cb.check_file("BENCH_fusion.json", tol=0.25)
+    assert len(failures) == 1
+    assert "roofline_fraction fell" in failures[0]
+    assert "may only rise" in failures[0]
+
+
+def test_roofline_fraction_rise_passes(cb, repo):
+    _commit_fusion(repo, FUSION_ROWS)
+    _write_fusion(repo, [dict(FUSION_ROWS[0], roofline_fraction=0.50)])
+    assert cb.check_file("BENCH_fusion.json", tol=0.25) == []
+
+
+def test_roofline_fraction_noise_floor_passes(cb, repo):
+    """A fall that exceeds the relative tolerance but stays under the
+    0.05 absolute floor is eager-dispatch noise, not a regression (the
+    CPU fractions are tiny, so relative swings are large)."""
+    _commit_fusion(repo, [dict(FUSION_ROWS[0], roofline_fraction=0.04)])
+    _write_fusion(repo, [dict(FUSION_ROWS[0], roofline_fraction=0.01)])
+    assert cb.check_file("BENCH_fusion.json", tol=0.25) == []
+
+
+def test_roofline_fraction_missing_on_old_baseline_skipped(cb, repo):
+    """A baseline committed before the profiler existed has no bandwidth
+    columns — the gate arms on the next commit instead of failing."""
+    old = [{"workload": "mlp_adjoint_256", "launches_after": 11}]
+    _commit_fusion(repo, old)
+    _write_fusion(repo, FUSION_ROWS)
+    assert cb.check_file("BENCH_fusion.json", tol=0.25) == []

@@ -1,0 +1,64 @@
+"""The scripts/lint.py span-registry AST check: unregistered
+``span("...")`` / ``mark("...")`` literals in instrumented sources are a
+lint failure (they silently un-arm the bench gates keyed on span names)."""
+
+import ast
+import importlib.util
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[2]
+
+
+def _lint():
+    spec = importlib.util.spec_from_file_location(
+        "repro_lint", ROOT / "scripts" / "lint.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_span_calls_finds_name_and_attribute_forms():
+    lint = _lint()
+    tree = ast.parse(
+        "span('a.b')\n"
+        "obs_trace.span('c.d', k=1)\n"
+        "mark('e')\n"
+        "span(name)\n"          # non-literal arg0: skipped
+        "other('f')\n"          # not span/mark: skipped
+        "span()\n"              # no args: skipped
+    )
+    calls = lint._span_calls(tree)
+    assert [(f, n) for _, f, n in calls] == [
+        ("span", "a.b"), ("span", "c.d"), ("mark", "e")
+    ]
+
+
+def test_registry_names_parse_without_import():
+    lint = _lint()
+    spans = lint._registry_names("SPAN_NAMES")
+    marks = lint._registry_names("MARK_NAMES")
+    assert "compile_pipeline" in spans and "explain.report" in spans
+    assert "serve.submit" in marks
+    assert "totally-bogus-span" not in spans
+
+
+def test_registry_check_passes_on_current_tree():
+    lint = _lint()
+    assert lint._span_registry_check() == 0
+
+
+def test_unregistered_name_would_be_flagged(tmp_path, capsys, monkeypatch):
+    """Drop a file with an unregistered span literal into a scanned tree:
+    the check must fail with a SPAN001 line naming it."""
+    lint = _lint()
+    src = tmp_path / "src"
+    src.mkdir()
+    (src / "bad.py").write_text(
+        "from repro.obs import span\n\nwith span('not.registered'):\n    pass\n"
+    )
+    (tmp_path / "benchmarks").mkdir()
+    monkeypatch.setattr(lint, "ROOT", tmp_path)
+    assert lint._span_registry_check() == 1
+    out = capsys.readouterr().out
+    assert "SPAN001" in out and "not.registered" in out
